@@ -1,0 +1,140 @@
+"""Paper Fig. 5 reproduction: proxy accuracy (relative error vs cycle-level
+simulation) and speedup, per (topology x traffic x chiplet count).
+
+Latency: proxy average latency vs simulator zero-load latency (single-flit
+packets so serialization does not enter — the proxy does not model packet
+size). Throughput: proxy saturation fraction vs the simulator's saturation
+injection-rate search (paper's 10%/1%/0.1% schedule).
+
+Units note (DESIGN.md §2): the simulator's links carry 1 flit/cycle, so the
+proxy is evaluated with B(e) = 1 flit/cycle and the traffic matrix scaled so
+the heaviest source injects 1 flit/cycle at rate 1.0; the proxy's sustainable
+fraction is then directly comparable to the simulator's saturation injection
+rate. Injection/ejection port capacity (1 flit/cycle/node) is part of the
+structural model on both sides.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import prepare_arrays, average_latency, throughput_proxy
+from repro.core.latency import routed_diameter
+from repro.sim import SimConfig, saturation_throughput, sim_from_design, zero_load_latency
+from repro.topologies import make_design
+from repro.traffic import make_traffic
+
+from .common import emit, full_mode, time_fn, RESULTS_DIR
+
+import os
+
+
+def proxy_latency_and_runtime(arrays, traffic):
+    t32 = traffic.astype(np.float32)
+
+    def run():
+        average_latency(arrays.next_hop, arrays.step_cost, arrays.node_weight,
+                        t32).block_until_ready()
+
+    lat = float(average_latency(arrays.next_hop, arrays.step_cost,
+                                arrays.node_weight, t32))
+    rt = time_fn(run, warmup=1, iters=5)
+    return lat, rt
+
+
+def proxy_throughput_and_runtime(arrays, g, traffic):
+    """Proxy saturation injection rate under unit link capacity."""
+    # scale traffic: heaviest source injects 1 flit/cycle at rate 1.0
+    t = traffic / traffic.sum(axis=1).max()
+    n = g.n
+    bw_unit = np.where(np.isfinite(g.adj_lat), 1.0, 0.0).astype(np.float32)
+    mh = routed_diameter(arrays.next_hop)
+    t32 = t.astype(np.float32)
+
+    def run():
+        throughput_proxy(arrays.next_hop, bw_unit, t32, max_hops=mh,
+                         directed=True).block_until_ready()
+
+    # min over link constraint and injection/ejection port capacity;
+    # directed=True because the simulator's channels are full-duplex.
+    thr_links = float(throughput_proxy(arrays.next_hop, bw_unit, t32,
+                                       max_hops=mh, directed=True)) / float(t.sum())
+    port_cap = 1.0 / max(t.sum(axis=0).max(), t.sum(axis=1).max())
+    thr = min(thr_links, port_cap)
+    rt = time_fn(run, warmup=1, iters=5)
+    return thr, rt
+
+
+def run_cell(topo: str, pattern: str, n: int, seed: int = 0) -> dict:
+    design = make_design(topo, n, seed=seed)
+    traffic = make_traffic(pattern, n, seed=seed)
+    arrays, g = prepare_arrays(design)
+
+    # --- proxies (warm timings: the amortized DSE regime) ---
+    plat, lat_rt = proxy_latency_and_runtime(arrays, traffic)
+    pthr, thr_rt = proxy_throughput_and_runtime(arrays, g, traffic)
+
+    # --- simulator ---
+    cyc = max(600, 40 * n)
+    cfg_lat = SimConfig(packet_size_flits=1, warmup_cycles=cyc // 2,
+                        measure_cycles=2 * cyc, drain_cycles=2 * cyc, seed=seed)
+    sim = sim_from_design(design, traffic, cfg_lat)
+    t0 = time.perf_counter()
+    zl = zero_load_latency(sim, rate=0.01)
+    sim_lat_rt = time.perf_counter() - t0
+
+    cfg_thr = SimConfig(packet_size_flits=2, warmup_cycles=cyc // 2,
+                        measure_cycles=cyc, drain_cycles=cyc, seed=seed)
+    sim_t = sim_from_design(design, traffic, cfg_thr)
+    t0 = time.perf_counter()
+    sat, n_sims = saturation_throughput(sim_t, cfg_thr)
+    sim_thr_rt = time.perf_counter() - t0
+
+    lat_err = abs(plat - zl.avg_packet_latency) / zl.avg_packet_latency
+    thr_err = abs(pthr - sat) / max(sat, 1e-9)
+    return {
+        "topology": topo, "pattern": pattern, "n": n,
+        "proxy_latency": plat, "sim_latency": zl.avg_packet_latency,
+        "latency_err_pct": 100 * lat_err,
+        "latency_speedup": sim_lat_rt / lat_rt,
+        "proxy_throughput": pthr, "sim_saturation": sat,
+        "throughput_err_pct": 100 * thr_err,
+        "throughput_speedup": sim_thr_rt / thr_rt,
+        "n_sat_sims": n_sims,
+        "proxy_lat_us": lat_rt * 1e6, "proxy_thr_us": thr_rt * 1e6,
+        "sim_lat_s": sim_lat_rt, "sim_thr_s": sim_thr_rt,
+    }
+
+
+def main() -> list[dict]:
+    if full_mode():
+        topos = ["mesh", "torus", "folded_torus", "sid_mesh"]
+        patterns = ["random_uniform", "transpose", "permutation", "hotspot"]
+        sizes = [9, 16, 25, 36, 49, 64]
+    else:
+        topos = ["mesh", "torus"]
+        patterns = ["random_uniform", "transpose"]
+        sizes = [9, 16]
+    rows = []
+    for topo in topos:
+        for pattern in patterns:
+            for n in sizes:
+                rows.append(run_cell(topo, pattern, n))
+                r = rows[-1]
+                print(f"[fig5] {topo:14s} {pattern:15s} n={n:3d} "
+                      f"lat_err={r['latency_err_pct']:.2f}% "
+                      f"thr_err={r['throughput_err_pct']:.1f}% "
+                      f"lat_speedup={r['latency_speedup']:.0f}x "
+                      f"thr_speedup={r['throughput_speedup']:.0f}x")
+    emit(rows, path=f"{RESULTS_DIR}/fig5_accuracy_speedup.csv")
+    lat_errs = [r["latency_err_pct"] for r in rows]
+    thr_errs = [r["throughput_err_pct"] for r in rows]
+    print(f"[fig5] mean latency error {np.mean(lat_errs):.2f}% "
+          f"(paper: 2.57%), mean throughput error {np.mean(thr_errs):.1f}% "
+          f"(paper: 25.12%)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

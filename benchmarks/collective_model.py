@@ -1,0 +1,38 @@
+"""Cross-validation of the RapidChiplet-based pod ICI model (DESIGN.md §3):
+the paper's throughput proxy applied to the production mesh's collectives vs
+the analytic bidirectional-ring formulas used in the roofline.
+"""
+from __future__ import annotations
+
+from repro.core.ici_model import estimate_collective
+
+from .common import emit, RESULTS_DIR
+
+
+def main() -> list[dict]:
+    rows = []
+    bytes_per_device = 64 * 1024 * 1024   # a 64 MiB gradient shard
+    for wrap in (True, False):
+        for kind in ("all_gather", "reduce_scatter", "all_reduce",
+                     "all_to_all"):
+            for axis in ("data", "model"):
+                est = estimate_collective(kind, axis, bytes_per_device,
+                                          rows=16, cols=16, wrap=wrap)
+                rows.append({
+                    "topology": "torus" if wrap else "mesh",
+                    "collective": kind, "axis": axis,
+                    "bytes_per_device": bytes_per_device,
+                    "analytic_ms": est.analytic_s * 1e3,
+                    "proxy_ms": est.proxy_s * 1e3,
+                    "ratio": est.proxy_s / max(est.analytic_s, 1e-12),
+                })
+                print(f"[ici] {rows[-1]['topology']:5s} {kind:14s} axis={axis:5s} "
+                      f"analytic={est.analytic_s*1e3:7.3f}ms "
+                      f"proxy={est.proxy_s*1e3:7.3f}ms "
+                      f"ratio={rows[-1]['ratio']:.2f}")
+    emit(rows, path=f"{RESULTS_DIR}/collective_model.csv")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

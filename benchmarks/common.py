@@ -1,0 +1,54 @@
+"""Shared benchmark utilities: timing, CSV emission, output paths."""
+from __future__ import annotations
+
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def ensure_results_dir() -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return RESULTS_DIR
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 5, **kw) -> float:
+    """Median wall time in seconds (fn must block — call .block_until_ready
+    inside for jax)."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(rows: list[dict], path: str | None = None, header: bool = True) -> None:
+    """Print ``name,us_per_call,derived`` style CSV and optionally save."""
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    lines = []
+    if header:
+        lines.append(",".join(keys))
+    for r in rows:
+        lines.append(",".join(_fmt(r[k]) for k in keys))
+    out = "\n".join(lines)
+    print(out)
+    if path:
+        ensure_results_dir()
+        with open(path, "w") as f:
+            f.write(out + "\n")
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def full_mode() -> bool:
+    return os.environ.get("REPRO_BENCH_FULL", "0") == "1"

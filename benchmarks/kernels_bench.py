@@ -1,0 +1,50 @@
+"""Kernel microbenchmarks: Pallas (interpret-mode on CPU) vs pure-jnp oracle.
+
+On CPU the interpreter is expected to LOSE to XLA-compiled jnp — the numbers
+here document interpreter overhead, not TPU performance; the TPU story is
+the VMEM/BlockSpec structure (see kernels/*.py docstrings and EXPERIMENTS.md
+§Perf for the roofline-level analysis).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import minplus_matmul, minplus_ref, flow_accumulate, flow_accumulate_ref
+
+from .common import emit, time_fn, RESULTS_DIR
+
+
+def main() -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in (64, 128, 256):
+        a = jnp.asarray(rng.uniform(0, 10, (n, n)), jnp.float32)
+        b = jnp.asarray(rng.uniform(0, 10, (n, n)), jnp.float32)
+        t_ref = time_fn(lambda: minplus_ref(a, b).block_until_ready(),
+                        warmup=1, iters=3)
+        t_pal = time_fn(lambda: minplus_matmul(a, b).block_until_ready(),
+                        warmup=1, iters=3)
+        rows.append({"kernel": "minplus", "n": n,
+                     "ref_us": t_ref * 1e6, "pallas_interpret_us": t_pal * 1e6})
+        print(f"[kern] minplus n={n}: ref={t_ref*1e6:.0f}us "
+              f"pallas(interp)={t_pal*1e6:.0f}us")
+    for n, p in ((64, 4096), (128, 16384)):
+        flow = jnp.zeros((n, n), jnp.float32)
+        cur = jnp.asarray(rng.integers(0, n, p), jnp.int32)
+        nxt = jnp.asarray(rng.integers(0, n, p), jnp.int32)
+        amt = jnp.asarray(rng.uniform(0, 1, p), jnp.float32)
+        t_ref = time_fn(lambda: flow_accumulate_ref(
+            flow, cur, nxt, amt).block_until_ready(), warmup=1, iters=3)
+        t_pal = time_fn(lambda: flow_accumulate(
+            flow, cur, nxt, amt).block_until_ready(), warmup=1, iters=3)
+        rows.append({"kernel": "flow_accum", "n": n,
+                     "ref_us": t_ref * 1e6, "pallas_interpret_us": t_pal * 1e6})
+        print(f"[kern] flow_accum n={n} P={p}: ref={t_ref*1e6:.0f}us "
+              f"pallas(interp)={t_pal*1e6:.0f}us")
+    emit(rows, path=f"{RESULTS_DIR}/kernels.csv")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

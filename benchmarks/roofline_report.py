@@ -1,0 +1,79 @@
+"""Roofline tables from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+``launch/dryrun.py`` writes one JSON per (arch x shape x mesh) cell under
+benchmarks/results/dryrun/. This module folds them into the three-term
+roofline table: compute / memory / collective seconds per step, dominant
+term, and the MODEL_FLOPS utilization ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit, RESULTS_DIR
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+
+def roofline_terms(rec: dict) -> dict:
+    """rec: one dry-run JSON record (per-device flops/bytes/collective)."""
+    compute_s = rec["flops_per_device"] / PEAK_FLOPS
+    memory_s = rec["bytes_per_device"] / HBM_BW
+    collective_s = rec["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    model_flops = rec.get("model_flops_total", 0.0)
+    hlo_total = rec["flops_per_device"] * rec["n_devices"]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "step": rec.get("step", "train"),
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "bound_s": bound_s,
+        "model_flops_ratio": model_flops / hlo_total if hlo_total else 0.0,
+        "roofline_fraction": compute_s / bound_s if bound_s else 0.0,
+    }
+
+
+def main() -> list[dict]:
+    paths = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not paths:
+        raise FileNotFoundError(
+            f"no dry-run artifacts under {DRYRUN_DIR}; run "
+            f"`PYTHONPATH=src python -m repro.launch.dryrun` first")
+    rows = []
+    skipped = []
+    for p in paths:
+        with open(p) as f:
+            rec = json.load(f)
+        # artifact tag from the filename (variants: __serve_tp, __accum8...)
+        stem = os.path.basename(p)[:-5]
+        parts = stem.split("__")
+        tag = parts[3] if len(parts) > 3 else "default"
+        if rec.get("skipped"):
+            skipped.append(rec)
+            continue
+        row = roofline_terms(rec)
+        row["tag"] = tag
+        rows.append(row)
+        r = rows[-1]
+        print(f"[roofline] {r['arch']:22s} {r['shape']:12s} {r['mesh']:9s} "
+              f"C={r['compute_s']*1e3:9.3f}ms M={r['memory_s']*1e3:9.3f}ms "
+              f"X={r['collective_s']*1e3:9.3f}ms -> {r['dominant']:10s} "
+              f"frac={r['roofline_fraction']:.2f}")
+    for rec in skipped:
+        print(f"[roofline] {rec['arch']:22s} {rec['shape']:12s} "
+              f"{rec['mesh']:9s} SKIP: {rec['reason'][:60]}")
+    emit(rows, path=f"{RESULTS_DIR}/roofline.csv")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark driver — one module per paper table/figure:
+
+  accuracy_speedup  -> paper Fig. 5 (proxy error + speedup vs cycle sim)
+  runtime_scaling   -> paper §3.2 runtime-vs-pairs analysis
+  shg_case_study    -> paper Fig. 6 (SHG DSE + Pareto fronts)
+  collective_model  -> DESIGN.md §3 pod-ICI proxy vs analytic rings
+  kernels_bench     -> Pallas kernel microbenchmarks
+  roofline_report   -> EXPERIMENTS.md §Roofline tables (reads dry-run JSON)
+
+Default is the quick suite (a few minutes on 1 CPU); REPRO_BENCH_FULL=1
+expands to the paper's full grid. Results land in benchmarks/results/*.csv.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    suites = ["collective_model", "kernels_bench", "runtime_scaling",
+              "shg_case_study", "accuracy_speedup", "roofline_report"]
+    if only:
+        suites = [s for s in suites if s == only]
+        if not suites:
+            raise SystemExit(f"unknown suite {only!r}")
+    t0 = time.perf_counter()
+    for name in suites:
+        print(f"\n=== benchmarks.{name} ===")
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        try:
+            mod.main()
+        except FileNotFoundError as e:
+            # roofline_report needs dry-run artifacts; skip gracefully
+            print(f"[skip] {name}: {e}")
+    print(f"\n[benchmarks] total {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

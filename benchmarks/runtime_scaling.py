@@ -1,0 +1,45 @@
+"""Paper §3.2 runtime analysis reproduction: proxy runtime scales with the
+number of communicating pairs (linear for transpose/permutation, quadratic
+for random-uniform/hotspot), while the cycle simulator scales ~quadratically
+in chiplet count regardless of pattern.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import prepare_arrays, average_latency, throughput_proxy
+from repro.core.latency import routed_diameter
+from repro.topologies import make_design
+from repro.traffic import make_traffic
+
+from .common import emit, full_mode, time_fn, RESULTS_DIR
+
+
+def main() -> list[dict]:
+    sizes = [9, 16, 25, 36, 49, 64] + ([81, 100] if full_mode() else [])
+    patterns = ["random_uniform", "transpose", "permutation", "hotspot"]
+    rows = []
+    for n in sizes:
+        design = make_design("mesh", n)
+        arrays, g = prepare_arrays(design)
+        mh = routed_diameter(arrays.next_hop)
+        for pattern in patterns:
+            t = make_traffic(pattern, n).astype(np.float32)
+            lat_rt = time_fn(lambda: average_latency(
+                arrays.next_hop, arrays.step_cost, arrays.node_weight,
+                t).block_until_ready(), warmup=1, iters=5)
+            thr_rt = time_fn(lambda: throughput_proxy(
+                arrays.next_hop, arrays.adj_bw, t,
+                max_hops=mh).block_until_ready(), warmup=1, iters=5)
+            pairs = int((t > 0).sum())
+            rows.append({"n": n, "pattern": pattern, "pairs": pairs,
+                         "latency_us": lat_rt * 1e6,
+                         "throughput_us": thr_rt * 1e6})
+            print(f"[runtime] n={n:3d} {pattern:15s} pairs={pairs:5d} "
+                  f"lat={lat_rt*1e6:8.1f}us thr={thr_rt*1e6:8.1f}us")
+    emit(rows, path=f"{RESULTS_DIR}/runtime_scaling.csv")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""The paper's technique as a production cost function: rank sharding
+layouts for LM training by pricing their collective traffic with the
+RapidChiplet throughput proxy applied to the TPU pod's own ICI
+(DESIGN.md §3).
+
+    PYTHONPATH=src python examples/interconnect_aware_sharding.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.core.ici_model import estimate_collective
+from repro.sharding.autoshard import rank_layouts
+
+
+def main():
+    mesh_shape = {"data": 16, "model": 16}
+    print("=== collective prices on the 16x16 pod (64 MiB payload) ===")
+    for wrap in (True, False):
+        for kind in ("all_gather", "all_reduce", "all_to_all"):
+            est = estimate_collective(kind, "data", 64 * 2**20, wrap=wrap)
+            print(f"  {'torus' if wrap else 'mesh ':5s} {kind:13s} "
+                  f"analytic {est.analytic_s*1e3:7.3f} ms | proxy "
+                  f"{est.proxy_s*1e3:7.3f} ms")
+
+    for arch in ("glm4-9b", "deepseek-v2-lite-16b"):
+        cfg = get_config(arch)
+        print(f"\n=== layout ranking for {arch} (train 4k x 256) ===")
+        ranking = rank_layouts(cfg, global_batch=256, seq_len=4096,
+                               mesh_shape=mesh_shape)
+        for r in ranking:
+            tags = ", ".join(f"{k}={v*1e3:.1f}ms"
+                             for k, v in sorted(r["per_tag"].items()))
+            print(f"  {r['rules']:14s} total {r['total_s']*1e3:8.1f} ms/step "
+                  f"({tags})")
+        best = ranking[0]["rules"]
+        print(f"  -> advisor picks: {best}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Quickstart: evaluate a handful of ICI designs with RapidChiplet's
+latency/throughput proxies and print the full report per design.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import evaluate_design
+from repro.topologies import make_design
+from repro.traffic import make_traffic
+
+
+def main():
+    n = 36   # 6x6 chiplet grid, paper §3.1-style chiplets (74mm^2 + PHYs)
+    print(f"{'topology':20s} {'traffic':15s} {'latency':>9s} {'thrpt':>9s} "
+          f"{'area mm2':>9s} {'power W':>8s} {'cost $':>8s}")
+    for topo in ("mesh", "torus", "folded_torus", "flattened_butterfly",
+                 "hexamesh", "sid_mesh"):
+        for pattern in ("random_uniform", "transpose"):
+            design = make_design(topo, n)
+            traffic = make_traffic(pattern, n)
+            rep = evaluate_design(design, traffic)
+            print(f"{topo:20s} {pattern:15s} {rep.latency:9.1f} "
+                  f"{rep.throughput:9.1f} "
+                  f"{rep.area.total_chiplet_area:9.0f} "
+                  f"{rep.power.total:8.1f} {rep.cost.total:8.0f}")
+    print("\nLatency is in cycles (chiplet internal 3, PHY 12, 0.25/mm);")
+    print("throughput is sustainable load in units of the offered traffic.")
+
+
+if __name__ == "__main__":
+    main()

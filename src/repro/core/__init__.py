@@ -1,0 +1,26 @@
+"""RapidChiplet core: the paper's contribution as a composable JAX module."""
+from .design import (
+    Chiplet, Phy, PlacedChiplet, Placement, Link, Topology, Packaging,
+    Technology, TrafficEntry, Design, DesignValidationError,
+    validate_design, validate_traffic,
+)
+from .graph import DenseGraph, build_graph, step_cost_matrix, traffic_matrix
+from .latency import (
+    path_cost_doubling, path_cost_minplus, latency_proxy, average_latency,
+    num_doubling_steps,
+)
+from .throughput import edge_flows, throughput_proxy, bottleneck_edges
+from .reports import area_report, power_report, cost_report, die_yield, die_cost
+from .proxies import evaluate_design, prepare_arrays, DeviceArrays, EvaluationReport
+
+__all__ = [
+    "Chiplet", "Phy", "PlacedChiplet", "Placement", "Link", "Topology",
+    "Packaging", "Technology", "TrafficEntry", "Design",
+    "DesignValidationError", "validate_design", "validate_traffic",
+    "DenseGraph", "build_graph", "step_cost_matrix", "traffic_matrix",
+    "path_cost_doubling", "path_cost_minplus", "latency_proxy",
+    "average_latency", "num_doubling_steps",
+    "edge_flows", "throughput_proxy", "bottleneck_edges",
+    "area_report", "power_report", "cost_report", "die_yield", "die_cost",
+    "evaluate_design", "prepare_arrays", "DeviceArrays", "EvaluationReport",
+]

@@ -1,0 +1,176 @@
+"""The TPU pod's ICI modeled with RapidChiplet itself (DESIGN.md §3).
+
+A TPU v5e pod is, structurally, exactly the object the paper models: an
+interconnect of dies (chips instead of chiplets) with fixed per-link
+bandwidth and a 2D-torus topology. This module builds that design, generates
+the traffic matrices of the standard collectives (ring all-gather /
+reduce-scatter / all-reduce, all-to-all), and predicts their sustained
+bandwidth with the paper's throughput proxy. The framework's sharding layer
+(repro.sharding.autoshard) ranks collective schedules with these predictions,
+and benchmarks/collective_model.py cross-validates them against the analytic
+ring formulas used in the roofline.
+
+Hardware constants (per the assignment): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import numpy as np
+
+from .design import Packaging, Technology
+from .graph import build_graph
+from .proxies import prepare_arrays
+from .throughput import throughput_proxy
+from .latency import average_latency, routed_diameter
+from ..topologies import make_design
+
+TPU_V5E_PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+TPU_V5E_HBM_BW = 819e9             # bytes/s per chip
+TPU_V5E_ICI_LINK_BW = 50e9         # bytes/s per link per direction
+
+
+def tpu_pod_design(rows: int = 16, cols: int = 16, wrap: bool = True,
+                   link_bw_bytes: float = TPU_V5E_ICI_LINK_BW):
+    """A TPU pod as a RapidChiplet design: chips are 'chiplets' on a 2D
+    torus (wrap=True) or mesh. Link bandwidths are overridden to the ICI
+    budget (bytes/s) instead of bump-derived wire counts."""
+    topo = "torus" if wrap else "mesh"
+    design = make_design(
+        topo, rows * cols,
+        packaging=Packaging(name="tpu_ici", link_latency_per_mm=0.0,
+                            link_latency_const=1.0),
+        technology=Technology(name="tpu_chip"),
+        chiplet_kwargs={"base_area": 300.0, "internal_latency": 1.0,
+                        "phy_latency": 0.0, "technology": "tpu_chip"},
+    )
+    arrays, g = prepare_arrays(design)
+    # Override bandwidth: each ICI link carries link_bw_bytes per second.
+    g.adj_bw = np.where(np.isfinite(g.adj_lat), link_bw_bytes, 0.0)
+    arrays = dataclasses.replace(arrays, adj_bw=g.adj_bw.astype(np.float32))
+    return design, arrays, g
+
+
+# ---------------------------------------------------------------------------
+# Collective traffic patterns over the pod grid
+# ---------------------------------------------------------------------------
+
+def _ring_order(rows: int, cols: int, axis: str) -> list[list[int]]:
+    """Chip-index rings along the chosen mesh axis ('data' = rows of the
+    grid, i.e. ring over columns; 'model' = columns)."""
+    rings = []
+    if axis in ("data", "row"):
+        for r in range(rows):
+            rings.append([r * cols + c for c in range(cols)])
+    elif axis in ("model", "col"):
+        for c in range(cols):
+            rings.append([r * cols + c for r in range(rows)])
+    else:
+        raise ValueError(f"unknown pod axis {axis!r}")
+    return rings
+
+
+def collective_traffic(kind: str, rows: int, cols: int, axis: str,
+                       bytes_per_device: float) -> np.ndarray:
+    """Traffic matrix of one collective over the pod grid.
+
+    Ring collectives (all_gather / reduce_scatter / all_reduce) move
+    (k-1)/k * bytes per device (2x for all_reduce) around the ring; XLA uses
+    *bidirectional* rings, so each device sends half that volume to each ring
+    neighbor. all_to_all sends bytes/k to every ring member.
+    """
+    n = rows * cols
+    t = np.zeros((n, n), np.float64)
+    rings = _ring_order(rows, cols, axis)
+    for ring in rings:
+        k = len(ring)
+        if k < 2:
+            continue
+        if kind in ("all_gather", "reduce_scatter", "all_reduce"):
+            per_neighbor = bytes_per_device * (k - 1) / k / 2.0
+            if kind == "all_reduce":
+                per_neighbor *= 2.0    # reduce-scatter + all-gather phases
+            for i, u in enumerate(ring):
+                t[u, ring[(i + 1) % k]] += per_neighbor
+                t[u, ring[(i - 1) % k]] += per_neighbor
+        elif kind == "all_to_all":
+            per_pair = bytes_per_device / k
+            for u in ring:
+                for v in ring:
+                    if u != v:
+                        t[u, v] += per_pair
+        else:
+            raise ValueError(f"unknown collective {kind!r}")
+    return t
+
+
+@dataclass(frozen=True)
+class CollectiveEstimate:
+    kind: str
+    axis: str
+    bytes_per_device: float
+    analytic_s: float          # ring formula at full per-link bandwidth
+    proxy_sustained_fraction: float   # RapidChiplet throughput proxy
+    proxy_s: float             # analytic_s / sustained fraction
+    proxy_latency_cycles: float
+
+
+def analytic_collective_time(kind: str, bytes_per_device: float, k: int,
+                             link_bw: float = TPU_V5E_ICI_LINK_BW) -> float:
+    """Standard *bidirectional*-ring formulas (the roofline's collective-term
+    model): both link directions carry half the ring volume."""
+    if k <= 1:
+        return 0.0
+    if kind == "all_gather" or kind == "reduce_scatter":
+        return bytes_per_device * (k - 1) / k / (2.0 * link_bw)
+    if kind == "all_reduce":
+        return bytes_per_device * (k - 1) / k / link_bw
+    if kind == "all_to_all":
+        # Bisection bound on a bidirectional ring: (k/2)*(k/2)*(b/k) bytes
+        # cross each way over 2 links x 2 directions -> k*b/8 per channel.
+        return bytes_per_device * k / 8.0 / link_bw
+    raise ValueError(f"unknown collective {kind!r}")
+
+
+def estimate_collective(kind: str, axis: str, bytes_per_device: float,
+                        rows: int = 16, cols: int = 16, wrap: bool = True,
+                        link_bw: float = TPU_V5E_ICI_LINK_BW
+                        ) -> CollectiveEstimate:
+    """Predict a collective's time on the pod ICI using the paper's proxies.
+
+    The throughput proxy's min_e B(e)/F(e) is "collective executions per
+    second" when the traffic matrix is in bytes and B in bytes/s, so the
+    predicted time is its reciprocal: max_e F(e)/B(e). One deviation from the
+    paper's undirected-flow formula: TPU ICI links are full-duplex, so we
+    evaluate *directed* flows against per-direction bandwidth (DESIGN.md §3).
+    """
+    from .throughput import edge_flows
+    import jax.numpy as jnp
+
+    design, arrays, g = tpu_pod_design(rows, cols, wrap, link_bw)
+    t = collective_traffic(kind, rows, cols, axis, bytes_per_device)
+    total = t.sum()
+    k = cols if axis in ("data", "row") else rows
+    analytic = analytic_collective_time(kind, bytes_per_device, k, link_bw)
+    if total <= 0:
+        return CollectiveEstimate(kind, axis, bytes_per_device,
+                                  analytic, 1.0, analytic, 0.0)
+    mh = routed_diameter(arrays.next_hop)
+    flow = np.asarray(edge_flows(arrays.next_hop, t.astype(np.float32),
+                                 max_hops=mh))
+    bw = arrays.adj_bw
+    with np.errstate(divide="ignore", invalid="ignore"):
+        per_edge_s = np.where((flow > 0) & (bw > 0), flow / bw, 0.0)
+    proxy_s = float(per_edge_s.max())
+    tn = (t / total).astype(np.float32)
+    lat = float(average_latency(arrays.next_hop, arrays.step_cost,
+                                arrays.node_weight, tn))
+    frac = analytic / proxy_s if proxy_s > 0 else 1.0
+    return CollectiveEstimate(kind=kind, axis=axis,
+                              bytes_per_device=bytes_per_device,
+                              analytic_s=analytic,
+                              proxy_sustained_fraction=min(frac, 1.0),
+                              proxy_s=proxy_s,
+                              proxy_latency_cycles=lat)

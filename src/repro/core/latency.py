@@ -1,0 +1,155 @@
+"""Latency proxy (paper §2.1.2), TPU-native.
+
+The reference implementation walks the routing table per (source, destination)
+pair — a data-dependent pointer chase. TPUs amortize gathers over [n, n]
+blocks but hate data-dependent trip counts, so we compute *all* per-pair path
+costs simultaneously with **path doubling** over the next-hop matrix:
+
+    pos_1[u, d]  = next_hop[u, d]
+    cost_1[u, d] = step_cost[u, next_hop[u, d]]          (0 if u == d)
+    pos_2k[u, d]  = pos_k[pos_k[u, d], d]
+    cost_2k[u, d] = cost_k[u, d] + cost_k[pos_k[u, d], d]
+
+After ceil(log2(n)) doublings every route of length <= n-1 has converged
+(pos == d), giving path costs for all n^2 pairs in O(log n) batched gathers.
+
+``step_cost[u, v] = node_weight[u] + edge_latency[u, v]`` (PHY latencies are
+already folded into edge latencies at graph construction), and the
+destination's vertex weight is added once at the end, so the per-pair cost is
+the sum of all vertex- and edge-weights on the path, exactly as the paper
+specifies.
+
+For *shortest-path* routing the same quantity is the min-plus matrix power of
+the step-cost matrix; `path_cost_minplus` computes it via repeated min-plus
+squaring — the Pallas kernel in ``repro.kernels.minplus`` accelerates that
+product. The two agree whenever the routing table is shortest-path w.r.t. the
+latency metric (property-tested).
+
+Everything here is jit/vmap-friendly: fixed shapes, no Python branching on
+data.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+BIG = 1e18   # finite stand-in for +inf inside min-plus algebra
+
+
+def num_doubling_steps(n: int) -> int:
+    """Doublings needed so paths of length <= n-1 converge."""
+    return max(1, math.ceil(math.log2(max(n - 1, 2))) + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps",))
+def path_cost_doubling(next_hop: jax.Array, step_cost: jax.Array,
+                       node_weight: jax.Array, n_steps: int | None = None
+                       ) -> jax.Array:
+    """Per-pair path cost [n, n] under a next-hop routing table.
+
+    Args:
+      next_hop:    int32 [n, n]; next_hop[d, d] = d; next_hop[u, d] = u marks
+                   "no route".
+      step_cost:   float [n, n]; cost of leaving u over edge (u, v)
+                   (= node_weight[u] + edge latency). Non-edges may be +inf or
+                   garbage — they are never gathered for valid tables.
+      node_weight: float [n]; destination vertex weight added at the end.
+
+    Returns float32 [n, n]; entry (s, d) is the total path weight from s to d
+    (all vertex + edge weights), +inf where unreachable, and
+    node_weight[d] on the diagonal (the paper's formula applied to s == d).
+    """
+    n = next_hop.shape[0]
+    if n_steps is None:
+        n_steps = num_doubling_steps(n)
+    dest = jnp.arange(n, dtype=next_hop.dtype)[None, :]
+    # Initial one-step tables.
+    pos = next_hop
+    first_cost = jnp.take_along_axis(step_cost, next_hop, axis=1)
+    cost = jnp.where(pos == jnp.arange(n)[:, None], 0.0, first_cost)
+
+    def body(_, carry):
+        pos, cost = carry
+        # pos2[u, d] = pos[pos[u, d], d]; cost2 = cost[u,d] + cost[pos[u,d], d]
+        pos2 = jnp.take_along_axis(pos, pos, axis=0)
+        cost2 = cost + jnp.take_along_axis(cost, pos, axis=0)
+        return pos2, cost2
+
+    pos, cost = jax.lax.fori_loop(0, n_steps, body, (pos, cost))
+    reached = pos == dest
+    total = cost + node_weight[None, :]
+    return jnp.where(reached, total, jnp.inf).astype(jnp.float32)
+
+
+def minplus_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(min, +) matrix product, pure jnp (oracle for the Pallas kernel)."""
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps", "use_kernel"))
+def path_cost_minplus(step_cost: jax.Array, node_weight: jax.Array,
+                      n_steps: int | None = None,
+                      use_kernel: bool = False) -> jax.Array:
+    """All-pairs shortest path cost via min-plus matrix squaring
+    (Floyd–Warshall re-expressed as O(log n) dense (min,+) products — the
+    MXU-friendly formulation; see kernels/minplus.py for the Pallas version).
+
+    Only valid when routing is shortest-path w.r.t. the same metric.
+    """
+    n = step_cost.shape[0]
+    if n_steps is None:
+        n_steps = num_doubling_steps(n)
+    if use_kernel:
+        from ..kernels.ops import minplus_matmul as mm
+    else:
+        mm = minplus_ref
+    eye0 = jnp.where(jnp.eye(n, dtype=bool), 0.0, BIG)
+    d = jnp.minimum(jnp.where(jnp.isfinite(step_cost), step_cost, BIG), eye0)
+    d = jax.lax.fori_loop(0, n_steps, lambda _, m: jnp.minimum(mm(m, m), BIG), d)
+    total = d + node_weight[None, :]
+    return jnp.where(d >= BIG * 0.5, jnp.inf, total).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps",))
+def routed_hops(next_hop: jax.Array, n_steps: int | None = None) -> jax.Array:
+    """Hop count of every routed path [n, n] (+inf where unreachable).
+    ``int(max finite)`` is the exact routed diameter — the tight static hop
+    bound for the flow accumulation in the throughput proxy."""
+    n = next_hop.shape[0]
+    ones = jnp.ones((n, n), dtype=jnp.float32)
+    zeros = jnp.zeros((n,), dtype=jnp.float32)
+    return path_cost_doubling(next_hop, ones, zeros, n_steps)
+
+
+def routed_diameter(next_hop) -> int:
+    hops = routed_hops(jnp.asarray(next_hop))
+    finite = jnp.where(jnp.isfinite(hops), hops, 0.0)
+    return int(jnp.max(finite))
+
+
+@jax.jit
+def latency_proxy(path_cost: jax.Array, traffic: jax.Array) -> jax.Array:
+    """Paper §2.1.2: traffic-weighted average packet latency.
+
+        L = sum_{(s,d,a)} a * path_cost(s,d) / sum a
+
+    ``path_cost`` covers chiplet rows/cols only (the traffic matrix is
+    [n_chiplets, n_chiplets]); pad/crop is the caller's job.
+    """
+    t = traffic
+    num = jnp.sum(jnp.where(t > 0, t * path_cost, 0.0))
+    den = jnp.sum(t)
+    return (num / den).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps",))
+def average_latency(next_hop: jax.Array, step_cost: jax.Array,
+                    node_weight: jax.Array, traffic: jax.Array,
+                    n_steps: int | None = None) -> jax.Array:
+    """Fused latency proxy: path doubling + traffic-weighted mean."""
+    n_c = traffic.shape[0]
+    plat = path_cost_doubling(next_hop, step_cost, node_weight, n_steps)
+    return latency_proxy(plat[:n_c, :n_c], traffic)

@@ -1,0 +1,116 @@
+"""Area, power, and cost reports (paper §2.1.4).
+
+* Area: sum of chiplet areas + interposer area (smallest enclosing rectangle).
+* Power: sum of per-chiplet power + per-router power + (optionally
+  length-dependent) link power.
+* Cost: negative-binomial yield model per chiplet, dies-per-wafer geometry,
+  plus interposer/packaging cost.
+
+These are host-side (numpy) — they are cheap per design and feed the DSE
+filters; the JAX hot loop is the latency/throughput proxies.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .design import Design, Technology
+from .geometry import interposer_area, link_lengths
+
+
+@dataclass(frozen=True)
+class AreaReport:
+    total_chiplet_area: float
+    interposer_area: float
+
+
+@dataclass(frozen=True)
+class PowerReport:
+    chiplet_power: float
+    router_power: float
+    link_power: float
+
+    @property
+    def total(self) -> float:
+        return self.chiplet_power + self.router_power + self.link_power
+
+
+@dataclass(frozen=True)
+class CostReport:
+    chiplet_costs: tuple[float, ...]
+    interposer_cost: float
+    packaging_cost: float
+
+    @property
+    def total(self) -> float:
+        return sum(self.chiplet_costs) + self.interposer_cost + self.packaging_cost
+
+
+def area_report(design: Design) -> AreaReport:
+    lib = design.library()
+    total = sum(lib[pc.chiplet].area for pc in design.placement.chiplets)
+    return AreaReport(total_chiplet_area=total,
+                      interposer_area=interposer_area(design))
+
+
+def power_report(design: Design) -> PowerReport:
+    lib = design.library()
+    pkg = design.packaging
+    chip_p = sum(lib[pc.chiplet].power for pc in design.placement.chiplets)
+    router_p = pkg.router_power * design.n_routers
+    lengths = link_lengths(design)
+    link_p = float(np.sum(pkg.link_power_const + pkg.link_power_per_mm * lengths))
+    return PowerReport(chiplet_power=chip_p, router_power=router_p,
+                       link_power=link_p)
+
+
+def die_yield(area: float, tech: Technology) -> float:
+    """Negative-binomial yield model:
+        Y = (1 + A * D0 * r / alpha)^(-alpha)
+    with D0 the defect density, r the critical-level ratio, alpha the
+    clustering parameter."""
+    d_eff = tech.defect_density * tech.critical_level_ratio
+    return float((1.0 + area * d_eff / tech.clustering_alpha)
+                 ** (-tech.clustering_alpha))
+
+
+def dies_per_wafer(area: float, tech: Technology) -> int:
+    """Standard geometric approximation: pi*R^2/A - pi*2R/sqrt(2A)."""
+    r = tech.wafer_radius
+    n = np.pi * r * r / area - np.pi * 2.0 * r / np.sqrt(2.0 * area)
+    return max(int(np.floor(n)), 1)
+
+
+def die_cost(area: float, tech: Technology) -> float:
+    """Per-good-die cost: wafer cost split over good dies."""
+    return tech.wafer_cost / (dies_per_wafer(area, tech) * die_yield(area, tech))
+
+
+def cost_report(design: Design, interposer_tech: Technology | None = None
+                ) -> CostReport:
+    """Paper §2.1.4: per-chiplet costs (yield model) + packaging cost.
+
+    The interposer (if its area is nonzero) is manufactured in a mature node:
+    by default a relaxed copy of the first technology with 10x lower defect
+    density (interposers use old processes)."""
+    lib = design.library()
+    tech = design.technology_map()
+    chip_costs = tuple(
+        die_cost(lib[pc.chiplet].area, tech[lib[pc.chiplet].technology])
+        for pc in design.placement.chiplets)
+    ia = interposer_area(design)
+    if interposer_tech is None:
+        t0 = design.technologies[0]
+        interposer_tech = Technology(
+            name="interposer", wafer_radius=t0.wafer_radius,
+            wafer_cost=t0.wafer_cost * 0.2,
+            defect_density=t0.defect_density * 0.1,
+            critical_level_ratio=t0.critical_level_ratio,
+            clustering_alpha=t0.clustering_alpha)
+    interposer_cost = die_cost(ia, interposer_tech) if ia > 0 else 0.0
+    packaging_cost = (design.packaging.packaging_cost_base +
+                      design.packaging.packaging_cost_per_mm2 * ia)
+    return CostReport(chiplet_costs=chip_costs,
+                      interposer_cost=interposer_cost,
+                      packaging_cost=packaging_cost)

@@ -1,0 +1,125 @@
+"""Throughput proxy (paper §2.1.3), TPU-native.
+
+Two edge properties are needed: the bandwidth B({u,v}) (computed at graph
+construction from bump geometry) and the flow F({u,v}) — the sum of all
+traffic routed over the edge. The proxy is then
+
+    T = min_{e in E} B(e) / F(e) * total_traffic.
+
+Computing F is the hot loop: the reference walks every route and increments
+per-edge counters. The natural GPU port would use atomic scatter-adds; TPUs
+have no fast scatter atomics, so we step all n^2 routes *simultaneously*,
+hop by hop, and accumulate each hop's contributions with a
+**scatter-as-matmul**: with one-hot row masks M_cur [P, n] and M_nxt [P, n]
+for the current/next vertex of each pair p carrying traffic a_p, the flow
+update is
+
+    F += M_curᵀ @ (a[:, None] * M_nxt)        (an MXU matmul)
+
+The Pallas kernel in ``kernels/flow_accum.py`` builds the masks on the fly
+from iota comparisons inside VMEM (nothing materialized in HBM); the jnp
+fallback here uses segment-sum scatter, which XLA handles fine on CPU.
+
+The number of hop steps is the network diameter — a static bound passed in
+(defaults to n-1, the worst case; topology generators provide tight bounds).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops", "use_kernel"))
+def edge_flows(next_hop: jax.Array, traffic: jax.Array,
+               max_hops: int | None = None,
+               use_kernel: bool = False) -> jax.Array:
+    """Directed edge flows [n, n]: flow[u, v] = total traffic traversing the
+    directed channel u->v under the routing table.
+
+    traffic is [n_chiplets, n_chiplets]; routers never source traffic.
+    """
+    n = next_hop.shape[0]
+    n_c = traffic.shape[0]
+    if max_hops is None:
+        max_hops = n - 1
+    # Pad traffic to [n, n] (router rows/cols zero).
+    t = jnp.zeros((n, n), dtype=jnp.float32).at[:n_c, :n_c].set(
+        traffic.astype(jnp.float32))
+    amount = t.ravel()                                   # [n*n]
+    dest = jnp.tile(jnp.arange(n, dtype=next_hop.dtype), (n,))   # [n*n]
+    cur0 = jnp.repeat(jnp.arange(n, dtype=next_hop.dtype), n)    # [n*n]
+
+    if use_kernel:
+        from ..kernels.ops import flow_accumulate
+
+        def body(carry, _):
+            cur, flow = carry
+            nxt = next_hop[cur, dest]
+            active = (cur != dest) & (amount > 0)
+            contrib = jnp.where(active, amount, 0.0)
+            flow = flow_accumulate(flow, cur, nxt, contrib)
+            return (jnp.where(active, nxt, cur), flow), None
+    else:
+        def body(carry, _):
+            cur, flow = carry
+            nxt = next_hop[cur, dest]
+            active = (cur != dest) & (amount > 0)
+            contrib = jnp.where(active, amount, 0.0)
+            flat = cur.astype(jnp.int32) * n + nxt.astype(jnp.int32)
+            flow = flow.ravel().at[flat].add(contrib).reshape(n, n)
+            return (jnp.where(active, nxt, cur), flow), None
+
+    (final_pos, flow), _ = jax.lax.scan(
+        body, (cur0, jnp.zeros((n, n), dtype=jnp.float32)), None,
+        length=max_hops)
+    return flow
+
+
+@jax.jit
+def undirected_flows(flow: jax.Array) -> jax.Array:
+    """Paper models links as undirected: F({u,v}) sums both directions."""
+    return flow + flow.T
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops", "use_kernel",
+                                              "directed"))
+def throughput_proxy(next_hop: jax.Array, adj_bw: jax.Array,
+                     traffic: jax.Array, max_hops: int | None = None,
+                     use_kernel: bool = False,
+                     directed: bool = False) -> jax.Array:
+    """Paper §2.1.3:
+
+        T = min_{u,v} B({u,v}) / F({u,v}) * sum(traffic)
+
+    Edges with zero flow do not constrain the minimum. Returns a float32
+    scalar in units of total offered traffic (traffic generators normalize to
+    1.0, so T is directly "sustainable fraction of offered load").
+
+    ``directed=False`` is the paper's formula: F sums both directions of the
+    undirected link against its total bandwidth B (wires shared between
+    directions). ``directed=True`` evaluates each direction against B
+    separately — the right structural model when comparing against a
+    simulator (or hardware like TPU ICI) with full-duplex channels.
+    """
+    flow_dir = edge_flows(next_hop, traffic, max_hops, use_kernel)
+    f = flow_dir if directed else undirected_flows(flow_dir)
+    bw = adj_bw.astype(jnp.float32)
+    ratio = jnp.where(f > 0, bw / jnp.maximum(f, 1e-30), jnp.inf)
+    min_ratio = jnp.min(ratio)
+    total = jnp.sum(traffic).astype(jnp.float32)
+    return (min_ratio * total).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops",))
+def bottleneck_edges(next_hop: jax.Array, adj_bw: jax.Array,
+                     traffic: jax.Array, max_hops: int | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Diagnostics for DSE: per-edge saturation ratio F/B (higher = closer to
+    the bottleneck) and the argmin edge index (u*n+v)."""
+    flow_dir = edge_flows(next_hop, traffic, max_hops)
+    f_und = undirected_flows(flow_dir)
+    bw = adj_bw.astype(jnp.float32)
+    ratio = jnp.where(f_und > 0, bw / jnp.maximum(f_und, 1e-30), jnp.inf)
+    return ratio, jnp.argmin(ratio.ravel())

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticTokens, FileTokens, Prefetcher, make_pipeline
+
+__all__ = ["SyntheticTokens", "FileTokens", "Prefetcher", "make_pipeline"]

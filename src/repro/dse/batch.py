@@ -1,0 +1,81 @@
+"""Padded dense batch encoding of design points (DESIGN.md §2).
+
+All designs in one batch are padded to the same node count so the batched
+proxies are one fixed-shape vmapped program: the design axis shards over the
+("pod", "data") mesh axes, the inner [n, n] matrices over "model" when n is
+large.
+
+Padding semantics:
+  next_hop    : padded vertices route to themselves (= unreachable; proxies
+                mask them out because padded traffic is zero)
+  step_cost   : 0 (never gathered for real routes)
+  adj_bw      : 0 on non-edges; bandwidth min() masks zero-flow edges
+  traffic     : 0 rows/cols for padded chiplets
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.proxies import prepare_arrays
+from .sweep import DesignPoint
+
+
+@dataclass
+class DesignBatch:
+    next_hop: np.ndarray     # int32 [B, n, n]
+    step_cost: np.ndarray    # f32  [B, n, n]
+    node_weight: np.ndarray  # f32  [B, n]
+    adj_bw: np.ndarray       # f32  [B, n, n]
+    traffic: np.ndarray      # f32  [B, n, n]  (padded to n, not n_chiplets)
+    max_hops: int            # static routed-diameter bound over the batch
+    points: list             # the DesignPoints, batch order
+
+    @property
+    def size(self) -> int:
+        return self.next_hop.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.next_hop.shape[1]
+
+
+def encode_designs(points: list[DesignPoint], n_pad: int | None = None,
+                   validate: bool = True) -> DesignBatch:
+    """Build + encode every design point into one padded batch."""
+    from ..core.latency import routed_diameter
+
+    prepared = []
+    for pt in points:
+        design = pt.build()
+        arrays, g = prepare_arrays(design, validate=validate)
+        traffic = pt.traffic()
+        prepared.append((arrays, traffic))
+
+    n_max = max(a.next_hop.shape[0] for a, _ in prepared)
+    n = n_pad or n_max
+    if n < n_max:
+        raise ValueError(f"n_pad={n} smaller than largest design ({n_max})")
+    B = len(prepared)
+
+    # nh[b, u, d] = u  (padded vertices route to themselves = unreachable)
+    next_hop = np.tile(np.arange(n, dtype=np.int32)[None, :, None], (B, 1, n))
+    step_cost = np.zeros((B, n, n), np.float32)
+    node_weight = np.zeros((B, n), np.float32)
+    adj_bw = np.zeros((B, n, n), np.float32)
+    traffic = np.zeros((B, n, n), np.float32)
+    max_hops = 1
+    for b, (arrays, tr) in enumerate(prepared):
+        k = arrays.next_hop.shape[0]
+        nc = arrays.n_chiplets
+        next_hop[b, :k, :k] = arrays.next_hop
+        step_cost[b, :k, :k] = arrays.step_cost
+        node_weight[b, :k] = arrays.node_weight
+        adj_bw[b, :k, :k] = arrays.adj_bw
+        traffic[b, :nc, :nc] = tr
+        max_hops = max(max_hops, routed_diameter(arrays.next_hop))
+
+    return DesignBatch(next_hop=next_hop, step_cost=step_cost,
+                       node_weight=node_weight, adj_bw=adj_bw,
+                       traffic=traffic, max_hops=max_hops, points=list(points))

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the proxy hot spots (DESIGN.md §2):
+
+* minplus     — tiled (min,+) matrix product (APSP step of the latency proxy)
+* flow_accum  — scatter-as-matmul edge-flow accumulation (throughput proxy)
+
+Each kernel ships with a pure-jnp oracle in ref.py and a jit'd public wrapper
+in ops.py. Kernels are validated in interpret mode on CPU and target TPU
+VMEM/BlockSpec tiling.
+"""
+from .ops import minplus_matmul, flow_accumulate
+from .ref import minplus_ref, flow_accumulate_ref
+
+__all__ = ["minplus_matmul", "flow_accumulate", "minplus_ref",
+           "flow_accumulate_ref"]

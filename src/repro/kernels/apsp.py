@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused all-pairs-shortest-path (min-plus squaring).
+
+``path_cost_minplus`` performs ceil(log2(n)) (min,+) squarings; done as
+separate kernel launches each squaring round-trips the n x n matrix through
+HBM (2 * n^2 * 4B per iteration). For the DSE regime the matrices are small
+(n <= 256 chiplets => <= 256 KiB), so the entire matrix fits VMEM and the
+whole APSP fuses into ONE pallas_call: the grid's iteration axis revisits
+the same block while a VMEM scratch carries the evolving distance matrix —
+zero intermediate HBM traffic.
+
+The inner product is the same VPU broadcast-add-min loop as minplus.py.
+ops.apsp falls back to iterated minplus_matmul for matrices beyond the VMEM
+budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import BIG
+
+# [n, n] f32 scratch must fit comfortably in ~16 MiB VMEM with headroom.
+MAX_FUSED_N = 1024
+
+
+def _apsp_kernel(d_ref, o_ref, acc_ref):
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _load():
+        acc_ref[...] = d_ref[0]
+
+    d = acc_ref[...]
+    n = d.shape[0]
+
+    def body(k, acc):
+        return jnp.minimum(acc, d[:, k][:, None] + d[k, :][None, :])
+
+    acc_ref[...] = jax.lax.fori_loop(0, n, body, d)
+
+    @pl.when(it == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "interpret"))
+def apsp_pallas(d: jax.Array, n_iters: int, *, interpret: bool = True
+                ) -> jax.Array:
+    """Batched fused APSP. d: [B, n, n] step-cost matrix (BIG = no edge,
+    diagonal 0). Returns the min-plus n-th power (all-pairs path costs)."""
+    B, n, _ = d.shape
+    return pl.pallas_call(
+        _apsp_kernel,
+        grid=(B, n_iters),
+        in_specs=[pl.BlockSpec((1, n, n), lambda b, i: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, n, n), lambda b, i: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, n, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(d)

@@ -1,0 +1,121 @@
+"""Jit'd public wrappers around the Pallas kernels: shape padding, dtype
+handling, 2D/batched dispatch. On this CPU container the kernels execute in
+interpret mode (the kernel body runs in Python via the Pallas interpreter);
+on real TPUs set ``REPRO_PALLAS_INTERPRET=0`` to compile them for hardware.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .minplus import minplus_pallas
+from .flow_accum import flow_accum_pallas
+from .ref import BIG, minplus_ref, flow_accumulate_ref
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_block(dim: int, pref: int, mult: int) -> int:
+    """Largest multiple of ``mult`` <= pref that keeps padding small."""
+    if dim >= pref:
+        return pref
+    return max(_round_up(dim, mult), mult)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def minplus_matmul(a: jax.Array, b: jax.Array, bm: int | None = None,
+                   bn: int | None = None, bk: int | None = None) -> jax.Array:
+    """(min,+) product for 2D [M,K]x[K,N] or batched [B,M,K]x[B,K,N] inputs.
+
+    Pads every dimension to the block grid with +BIG (never wins a min) and
+    crops the result back.
+    """
+    squeeze = a.ndim == 2
+    if squeeze:
+        a, b = a[None], b[None]
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    B, M, K = a.shape
+    _, _, N = b.shape
+    bm = bm or _pick_block(M, 128, 8)
+    bn = bn or _pick_block(N, 128, 128)
+    bk = bk or _pick_block(K, 128, 8)
+    Mp, Kp, Np = _round_up(M, bm), _round_up(K, bk), _round_up(N, bn)
+    ap = jnp.full((B, Mp, Kp), BIG, jnp.float32).at[:, :M, :K].set(a)
+    bp_ = jnp.full((B, Kp, Np), BIG, jnp.float32).at[:, :K, :N].set(b)
+    out = minplus_pallas(ap, bp_, bm=bm, bn=bn, bk=bk, interpret=_interpret())
+    out = out[:, :M, :N]
+    return out[0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("bp",))
+def flow_accumulate(flow: jax.Array, cur: jax.Array, nxt: jax.Array,
+                    amount: jax.Array, bp: int | None = None) -> jax.Array:
+    """Scatter-as-matmul flow accumulation for [n,n] or batched [B,n,n] flow.
+
+    Pads the pair axis with amount == 0 entries (index 0 targets contribute
+    nothing) and the node axis to the lane multiple with zero flow.
+    """
+    squeeze = flow.ndim == 2
+    if squeeze:
+        flow, cur, nxt, amount = flow[None], cur[None], nxt[None], amount[None]
+    B, n, _ = flow.shape
+    P = cur.shape[1]
+    bp = bp or _pick_block(P, 512, 8)
+    Pp = _round_up(P, bp)
+    n_lane = _round_up(n, 128)
+
+    fl = jnp.zeros((B, n_lane, n_lane), jnp.float32).at[:, :n, :n].set(
+        flow.astype(jnp.float32))
+    cu = jnp.zeros((B, Pp), jnp.int32).at[:, :P].set(cur.astype(jnp.int32))
+    nx = jnp.zeros((B, Pp), jnp.int32).at[:, :P].set(nxt.astype(jnp.int32))
+    am = jnp.zeros((B, Pp), jnp.float32).at[:, :P].set(
+        amount.astype(jnp.float32))
+    out = flow_accum_pallas(fl, cu, nx, am, bp=bp, interpret=_interpret())
+    out = out[:, :n, :n].astype(flow.dtype)
+    return out[0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters",))
+def apsp(d: jax.Array, n_iters: int | None = None) -> jax.Array:
+    """All-pairs path costs via fused min-plus squaring. d: [n, n] or
+    [B, n, n] step costs (+inf/BIG = no edge; diagonal forced to 0).
+    Falls back to iterated minplus_matmul beyond the VMEM budget."""
+    import math
+    from .apsp import MAX_FUSED_N, apsp_pallas
+
+    squeeze = d.ndim == 2
+    if squeeze:
+        d = d[None]
+    B, n, _ = d.shape
+    if n_iters is None:
+        n_iters = max(1, math.ceil(math.log2(max(n - 1, 2))) + 1)
+    d = jnp.minimum(jnp.where(jnp.isfinite(d), d, BIG), BIG)
+    eye = jnp.where(jnp.eye(n, dtype=bool), 0.0, BIG).astype(jnp.float32)
+    d = jnp.minimum(d.astype(jnp.float32), eye[None])
+    n_lane = _round_up(n, 128)
+    if n_lane <= MAX_FUSED_N:
+        dp = jnp.full((B, n_lane, n_lane), BIG, jnp.float32)
+        dp = dp.at[:, :n, :n].set(d)
+        eye_p = jnp.where(jnp.eye(n_lane, dtype=bool), 0.0, BIG)
+        dp = jnp.minimum(dp, eye_p[None].astype(jnp.float32))
+        out = apsp_pallas(dp, n_iters, interpret=_interpret())[:, :n, :n]
+    else:
+        def body(_, m):
+            return jnp.minimum(minplus_matmul(m, m), BIG)
+        out = jax.lax.fori_loop(0, n_iters, body, d)
+    out = jnp.where(out >= BIG * 0.5, jnp.inf, out)
+    return out[0] if squeeze else out
+
+
+__all__ = ["minplus_matmul", "flow_accumulate", "apsp", "minplus_ref",
+           "flow_accumulate_ref", "BIG"]

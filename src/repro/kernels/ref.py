@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIG = 1e18
+
+
+def minplus_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(min, +) matrix product: out[i, j] = min_k a[i, k] + b[k, j].
+
+    Supports an optional leading batch dimension on both operands.
+    """
+    if a.ndim == 2:
+        return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+    return jnp.min(a[:, :, :, None] + b[:, None, :, :], axis=2)
+
+
+def flow_accumulate_ref(flow: jax.Array, cur: jax.Array, nxt: jax.Array,
+                        amount: jax.Array) -> jax.Array:
+    """Scatter-add of per-pair traffic onto directed edges:
+
+        out[u, v] = flow[u, v] + sum_p amount[p] * [cur[p]==u] * [nxt[p]==v]
+
+    Supports an optional leading batch dimension on all operands.
+    """
+    if flow.ndim == 2:
+        n = flow.shape[-1]
+        flat = cur.astype(jnp.int32) * n + nxt.astype(jnp.int32)
+        return (flow.ravel().at[flat].add(amount.astype(flow.dtype))
+                .reshape(flow.shape))
+    return jax.vmap(flow_accumulate_ref)(flow, cur, nxt, amount)

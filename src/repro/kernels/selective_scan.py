@@ -1,0 +1,261 @@
+"""Pallas TPU kernel: Mamba-1 selective scan (fwd + bwd), VMEM-resident
+state.
+
+The pure-JAX training path (ssm.py) materializes the chunked associative
+scan's inputs and log-depth combine tree in HBM: a_bar/bx/h are [B, S, Di, N]
+tensors, ~N (=16) times the activation volume — the dominant memory-roofline
+term for the SSM/hybrid archs (hymba train_4k: 14.3 s memory term vs 1.8 s
+compute; EXPERIMENTS.md §Perf cell B). The CUDA reference fuses the scan into
+one kernel; this is the TPU adaptation:
+
+* grid (B, Di/bd, S/chunk) with the sequence axis innermost — the [bd, N]
+  state lives in a VMEM scratch that persists across sequence chunks;
+* a_bar = exp(dt*A) and bx = dt*x*B are built in registers per step and
+  never touch HBM; traffic is only the [B,S,*] inputs/outputs;
+* the backward kernel re-runs the recurrence from per-chunk state
+  checkpoints (saved by the forward at [B, S/chunk, Di, N] — 1/chunk of the
+  full state trajectory), then walks the chunk in reverse accumulating the
+  adjoint state lambda in VMEM. Gradients that reduce over Di (dB, dC) are
+  emitted as per-Di-block partials and summed outside (cross-block output
+  revisits would not be consecutive on the TPU grid).
+
+dtypes: f32 in/out (the surrounding mamba block computes dt/B/C in f32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(xc_ref, dt_ref, bm_ref, cm_ref, a_ref, h0_ref,
+                y_ref, ckpt_ref, ht_ref, h_scr):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        h_scr[...] = h0_ref[0]
+
+    ckpt_ref[0, 0] = h_scr[...]                 # chunk-start checkpoint
+
+    xc = xc_ref[0]                              # [T, bd]
+    dt = dt_ref[0]                              # [T, bd]
+    bm = bm_ref[0]                              # [T, N]
+    cm = cm_ref[0]                              # [T, N]
+    a = a_ref[...]                              # [bd, N]
+    T = xc.shape[0]
+
+    def step(t, carry):
+        h, y = carry
+        dt_t = dt[t][:, None]                   # [bd, 1]
+        a_bar = jnp.exp(dt_t * a)               # [bd, N]
+        bx = dt_t * xc[t][:, None] * bm[t][None, :]
+        h = a_bar * h + bx
+        y = y.at[t].set(jnp.sum(h * cm[t][None, :], axis=1))
+        return h, y
+
+    y0 = jnp.zeros((T, xc.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, T, step, (h_scr[...], y0))
+    h_scr[...] = h
+    y_ref[0] = y
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _flush():
+        ht_ref[0] = h_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bd", "interpret"))
+def selective_scan_fwd(xc, dt, bm, cm, a, h0, *, chunk: int = 256,
+                       bd: int = 128, interpret: bool = True):
+    """xc, dt: [B, S, Di]; bm, cm: [B, S, N]; a: [Di, N]; h0: [B, Di, N].
+    Returns (y [B,S,Di], h_ckpt [B, S/chunk, Di, N], hT [B, Di, N])."""
+    B, S, Di = xc.shape
+    N = a.shape[1]
+    chunk = min(chunk, S)
+    bd = min(bd, Di)
+    assert S % chunk == 0 and Di % bd == 0, (S, chunk, Di, bd)
+    n_s = S // chunk
+    grid = (B, Di // bd, n_s)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((1, chunk, bd), lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, s: (b, s, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, s: (b, s, 0)),
+            pl.BlockSpec((bd, N), lambda b, d, s: (d, 0)),
+            pl.BlockSpec((1, bd, N), lambda b, d, s: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((1, 1, bd, N), lambda b, d, s: (b, s, d, 0)),
+            pl.BlockSpec((1, bd, N), lambda b, d, s: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, Di), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_s, Di, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, Di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(xc, dt, bm, cm, a, h0)
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+def _bwd_kernel(xc_ref, dt_ref, bm_ref, cm_ref, a_ref, ckpt_ref, dy_ref,
+                dxc_ref, ddt_ref, dbm_ref, dcm_ref, da_ref, dh0_ref,
+                lam_scr, hbuf_scr):
+    s = pl.program_id(2)        # reversed chunk order via index maps
+
+    @pl.when(s == 0)
+    def _init():
+        lam_scr[...] = jnp.zeros_like(lam_scr)
+
+    xc = xc_ref[0]
+    dt = dt_ref[0]
+    bm = bm_ref[0]
+    cm = cm_ref[0]
+    a = a_ref[...]
+    dy = dy_ref[0]
+    T, bd = xc.shape
+    N = a.shape[1]
+
+    # recompute pre-step states h_{t-1} for every t in the chunk
+    def fwd_step(t, h):
+        hbuf_scr[t] = h
+        dt_t = dt[t][:, None]
+        a_bar = jnp.exp(dt_t * a)
+        return a_bar * h + dt_t * xc[t][:, None] * bm[t][None, :]
+
+    jax.lax.fori_loop(0, T, fwd_step, ckpt_ref[0, 0])
+
+    @pl.when(s == 0)
+    def _init_da():
+        da_ref[0] = jnp.zeros_like(da_ref[0])
+
+    def bwd_step(i, carry):
+        t = T - 1 - i
+        m, dxc, ddt, dbm, dcm, da = carry
+        h_pre = hbuf_scr[t]                    # h_{t-1}
+        dt_t = dt[t][:, None]
+        a_bar = jnp.exp(dt_t * a)
+        bx = dt_t * xc[t][:, None] * bm[t][None, :]
+        h_post = a_bar * h_pre + bx
+        lam = dy[t][:, None] * cm[t][None, :] + m      # [bd, N]
+        d_a_bar = lam * h_pre
+        ddt_row = (jnp.sum(d_a_bar * a * a_bar, axis=1) +
+                   jnp.sum(lam * bm[t][None, :], axis=1) * xc[t])
+        dxc_row = jnp.sum(lam * bm[t][None, :], axis=1) * dt[t]
+        dbm_row = jnp.sum(lam * dt_t * xc[t][:, None], axis=0)   # [N]
+        dcm_row = jnp.sum(dy[t][:, None] * h_post, axis=0)       # [N]
+        da = da + d_a_bar * dt_t * a_bar
+        m = a_bar * lam
+        return (m,
+                dxc.at[t].set(dxc_row), ddt.at[t].set(ddt_row),
+                dbm.at[t].set(dbm_row), dcm.at[t].set(dcm_row), da)
+
+    z_td = jnp.zeros((T, bd), jnp.float32)
+    z_tn = jnp.zeros((T, N), jnp.float32)
+    m0 = lam_scr[...]
+    m, dxc, ddt, dbm, dcm, da = jax.lax.fori_loop(
+        0, T, bwd_step, (m0, z_td, z_td, z_tn, z_tn,
+                         jnp.zeros((bd, N), jnp.float32)))
+    lam_scr[...] = m
+    dxc_ref[0] = dxc
+    ddt_ref[0] = ddt
+    dbm_ref[0, 0] = dbm
+    dcm_ref[0, 0] = dcm
+    da_ref[0] = da_ref[0] + da
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _flush():
+        dh0_ref[0] = lam_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bd", "interpret"))
+def selective_scan_bwd(xc, dt, bm, cm, a, h_ckpt, dy, *, chunk: int = 256,
+                       bd: int = 128, interpret: bool = True):
+    B, S, Di = xc.shape
+    N = a.shape[1]
+    chunk = min(chunk, S)
+    bd = min(bd, Di)
+    n_s = S // chunk
+    n_d = Di // bd
+    rev = lambda s: n_s - 1 - s
+    outs = pl.pallas_call(
+        _bwd_kernel,
+        grid=(B, n_d, n_s),
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b, d, s: (b, rev(s), d)),
+            pl.BlockSpec((1, chunk, bd), lambda b, d, s: (b, rev(s), d)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, s: (b, rev(s), 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, s: (b, rev(s), 0)),
+            pl.BlockSpec((bd, N), lambda b, d, s: (d, 0)),
+            pl.BlockSpec((1, 1, bd, N), lambda b, d, s: (b, rev(s), d, 0)),
+            pl.BlockSpec((1, chunk, bd), lambda b, d, s: (b, rev(s), d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b, d, s: (b, rev(s), d)),
+            pl.BlockSpec((1, chunk, bd), lambda b, d, s: (b, rev(s), d)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, d, s: (b, d, rev(s), 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, d, s: (b, d, rev(s), 0)),
+            pl.BlockSpec((1, bd, N), lambda b, d, s: (b, d, 0)),
+            pl.BlockSpec((1, bd, N), lambda b, d, s: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, Di), jnp.float32),   # dxc
+            jax.ShapeDtypeStruct((B, S, Di), jnp.float32),   # ddt
+            jax.ShapeDtypeStruct((B, n_d, S, N), jnp.float32),   # dbm parts
+            jax.ShapeDtypeStruct((B, n_d, S, N), jnp.float32),   # dcm parts
+            jax.ShapeDtypeStruct((B, Di, N), jnp.float32),       # da parts
+            jax.ShapeDtypeStruct((B, Di, N), jnp.float32),   # dh0
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32),
+                        pltpu.VMEM((chunk, bd, N), jnp.float32)],
+        interpret=interpret,
+    )(xc, dt, bm, cm, a, h_ckpt, dy)
+    dxc, ddt, dbm_p, dcm_p, da_p, dh0 = outs
+    dbm = dbm_p.sum(axis=1)
+    dcm = dcm_p.sum(axis=1)
+    da = da_p.sum(axis=0)
+    return dxc, ddt, dbm, dcm, da, dh0
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def selective_scan(xc, dt, bm, cm, a, h0, chunk=256, bd=128,
+                   interpret=True):
+    y, _, _ = selective_scan_fwd(xc, dt, bm, cm, a, h0, chunk=chunk, bd=bd,
+                                 interpret=interpret)
+    return y
+
+
+def _ss_fwd(xc, dt, bm, cm, a, h0, chunk, bd, interpret):
+    y, ckpt, _ = selective_scan_fwd(xc, dt, bm, cm, a, h0, chunk=chunk,
+                                    bd=bd, interpret=interpret)
+    return y, (xc, dt, bm, cm, a, ckpt)
+
+
+def _ss_bwd(chunk, bd, interpret, res, dy):
+    xc, dt, bm, cm, a, ckpt = res
+    dxc, ddt, dbm, dcm, da, dh0 = selective_scan_bwd(
+        xc, dt, bm, cm, a, ckpt, dy, chunk=chunk, bd=bd,
+        interpret=interpret)
+    return dxc, ddt, dbm, dcm, da, dh0
+
+
+selective_scan.defvjp(_ss_fwd, _ss_bwd)

@@ -1,0 +1,330 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and record memory/cost/collective analysis.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init); tests and benches never import this module, so they
+keep seeing 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi   # 2x16x16 only
+
+Artifacts: benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json, consumed
+by benchmarks/roofline_report.py (EXPERIMENTS.md §Dry-run / §Roofline).
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import Model, SHAPES_BY_NAME, shape_applicable, token_spec
+from repro.models.inputs import ASSIGNED_SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import (
+    DEFAULT_RULES, LONG_CONTEXT_RULES, SERVING_RULES, logical_axis_rules,
+)
+from repro.sharding.rules import batch_specs, cache_specs, param_specs
+from repro.train import adamw_init, make_train_step
+from repro.train.optimizer import OptConfig
+from repro.train.state import train_state_specs
+from repro.utils.hlo_cost import analyze
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+
+def _rules_for(spec, mesh) -> tuple:
+    # long-context serving with tiny batch: shard the sequence instead
+    data_ways = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            data_ways *= mesh.shape[a]
+    if spec.global_batch < data_ways:
+        return LONG_CONTEXT_RULES
+    return DEFAULT_RULES
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree)
+
+
+def accum_steps_for(cfg, spec, mesh) -> int:
+    """Gradient-accumulation microbatching: bound per-device activation
+    memory (scan-over-layers saves one residual per layer per microbatch).
+    Target <= ~4 sequences per device per microbatch, fewer for wide
+    models."""
+    data_ways = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            data_ways *= mesh.shape[a]
+    per_dev = max(spec.global_batch // data_ways, 1)
+    target = 4
+    if cfg.d_model >= 4096:
+        target = 2
+    if cfg.d_model >= 6144:
+        target = 1
+    accum = max(per_dev // target, 1)
+    while accum > 1 and spec.global_batch % accum != 0:
+        accum -= 1
+    return max(accum, 1)
+
+
+def model_flops(cfg, spec) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE), D = tokens/step."""
+    n = cfg.active_params() if cfg.is_moe else cfg.n_params()
+    if spec.kind == "train":
+        tokens = spec.global_batch * spec.seq_len
+        return 6.0 * n * tokens
+    if spec.kind == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * spec.global_batch       # decode: 1 token per sequence
+
+
+# §Perf variants: named deviations from the paper-faithful baseline.
+#   serve_tp  — decode with pure-TP param layout (no per-token FSDP gathers)
+#   accum_rs  — grad-accumulation buffer sharded like params (per-microbatch
+#               reduce-scatter instead of full-gradient all-reduce)
+#   ssm_fused — Pallas selective-scan kernel for SSM blocks (VMEM state)
+#   bf16_gather — cast the param tree to bf16 at loss entry (FSDP gathers
+#               move half the bytes; masters stay f32 in the optimizer)
+VARIANTS = ("baseline", "serve_tp", "accum_rs", "ssm_fused", "bf16_gather")
+
+
+def ssm_kernel_io_bytes(cfg, spec, mesh, accum: int) -> float:
+    """Analytic HBM I/O of the fused selective-scan kernel per train step
+    per device (fwd + remat fwd + bwd). The interpret-mode lowering's
+    internals are excluded from byte counting (utils/hlo_cost.py); this is
+    the kernel's true TPU traffic added back."""
+    if not cfg.uses_ssm or spec.kind != "train":
+        return 0.0
+    data_ways = model_ways = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            data_ways *= mesh.shape[a]
+    if "model" in mesh.shape:
+        model_ways = mesh.shape["model"]
+    b = max(spec.global_batch // accum // data_ways, 1)
+    s = spec.seq_len
+    di = cfg.d_inner // model_ways if cfg.d_inner % model_ways == 0 \
+        else cfg.d_inner
+    n = cfg.ssm_state
+    chunk = cfg.ssm_chunk
+    bsd = b * s * di * 4.0
+    bsn = b * s * n * 4.0
+    ckpt = b * (s // max(chunk, 1)) * di * n * 4.0
+    fwd = 3 * bsd + 2 * bsn + ckpt            # xc,dt in; y out; bm,cm; ckpt
+    n_d = max(di // 128, 1)
+    bwd = 5 * bsd + 2 * bsn * (1 + n_d) + ckpt + 2 * di * n * 4.0
+    per_layer = 2 * fwd + bwd                 # fwd + remat-recompute + bwd
+    return per_layer * cfg.n_layers * accum
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               extra_tags: dict | None = None,
+               cfg_overrides: dict | None = None,
+               variant: str = "baseline",
+               accum_override: int = 0):
+    cfg = get_config(arch)
+    if variant == "ssm_fused":
+        cfg = cfg.replace(ssm_kernel=True)
+    if variant == "bf16_gather":
+        cfg = cfg.replace(cast_params_bf16=True)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    spec = SHAPES_BY_NAME[shape_name]
+    ok, reason = shape_applicable(cfg, spec)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "skipped": True, "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = _rules_for(spec, mesh)
+    if variant == "serve_tp" and spec.kind == "decode":
+        rules = SERVING_RULES
+    model = Model(cfg)
+    t0 = time.time()
+
+    with mesh, logical_axis_rules(mesh, rules):
+        batch_sds = token_spec(cfg, spec)
+        if spec.kind == "train":
+            state_sds = jax.eval_shape(
+                lambda k: {"params": model.init_params(k),
+                           "opt": adamw_init(
+                               jax.eval_shape(model.init_params, k)),
+                           "step": jnp.zeros((), jnp.int32)},
+                jax.random.PRNGKey(0))
+            state_specs = train_state_specs(state_sds, mesh, rules)
+            in_sh = (_named(mesh, state_specs),
+                     _named(mesh, batch_specs(batch_sds, mesh, rules)))
+            out_sh = (_named(mesh, state_specs), None)
+            accum = accum_override or accum_steps_for(cfg, spec, mesh)
+            step_fn = make_train_step(model, OptConfig(),
+                                      accum_steps=accum,
+                                      constrain_accum=(variant == "accum_rs"))
+            lowered = jax.jit(step_fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(
+                state_sds, batch_sds)
+        elif spec.kind == "prefill":
+            params_sds = jax.eval_shape(model.init_params,
+                                        jax.random.PRNGKey(0))
+            p_specs = param_specs(params_sds, mesh, rules)
+            in_sh = (_named(mesh, p_specs),
+                     _named(mesh, batch_specs(batch_sds, mesh, rules)))
+            lowered = jax.jit(
+                lambda p, b: model.prefill(
+                    p, b["tokens"],
+                    extra={k: v for k, v in b.items() if k != "tokens"}),
+                in_shardings=in_sh).lower(params_sds, batch_sds)
+        else:   # decode / serve_step
+            params_sds = jax.eval_shape(model.init_params,
+                                        jax.random.PRNGKey(0))
+            p_specs = param_specs(params_sds, mesh, rules)
+            cache_sds = jax.eval_shape(
+                functools.partial(model.init_cache, spec.global_batch,
+                                  spec.seq_len))
+            c_specs = cache_specs(cache_sds, mesh, rules)
+            in_sh = (_named(mesh, p_specs), _named(mesh, c_specs),
+                     _named(mesh, batch_specs(
+                         {"tokens": batch_sds["tokens"]}, mesh, rules))["tokens"],
+                     None)
+            out_sh = (None, _named(mesh, c_specs))
+            lowered = jax.jit(
+                lambda p, c, t, pos: model.decode_step(p, c, t, pos),
+                in_shardings=in_sh, out_shardings=out_sh).lower(
+                params_sds, cache_sds, batch_sds["tokens"],
+                batch_sds["pos"])
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    n_dev = mesh.size
+    hlo = compiled.as_text()
+    # While-loop-aware accounting: XLA's cost_analysis counts scan bodies
+    # once (verified; see utils/hlo_cost.py), so we analyze the HLO text
+    # with trip-count multiplication. Raw XLA numbers kept for reference.
+    exclude = "pallas_selective_scan" if variant == "ssm_fused" else None
+    coll = analyze(hlo, exclude_bytes_substring=exclude)
+    kernel_io = 0.0
+    if variant == "ssm_fused":
+        accum_used = (accum_override or accum_steps_for(cfg, spec, mesh)
+                      ) if spec.kind == "train" else 1
+        kernel_io = ssm_kernel_io_bytes(cfg, spec, mesh, accum_used)
+        coll.bytes_accessed += kernel_io
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "step": spec.kind,
+        "n_devices": n_dev,
+        "skipped": False,
+        "flops_per_device": float(coll.flops),
+        "bytes_per_device": float(coll.bytes_accessed),
+        "bytes_per_device_unfused": float(coll.bytes_accessed_unfused),
+        "collective_bytes_per_device": float(coll.collective_bytes),
+        "collective_breakdown": {k: float(v) for k, v in
+                                 coll.collective_breakdown.items()},
+        "collective_op_counts": coll.collective_ops,
+        "xla_raw": {"flops": float(cost.get("flops", 0.0)),
+                    "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
+        "n_while_loops": len(coll.while_loops),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "model_flops_total": model_flops(cfg, spec),
+        "model_params": cfg.n_params(),
+        "active_params": cfg.active_params(),
+        "lower_s": t_lower, "compile_s": t_compile,
+        "variant": variant,
+        "rules": ("serving" if rules is SERVING_RULES else
+                  "long_context" if rules is LONG_CONTEXT_RULES else
+                  "default"),
+    }
+    if extra_tags:
+        rec.update(extra_tags)
+    return rec
+
+
+def artifact_path(arch, shape, mesh_name, tag="") -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(
+        RESULTS_DIR, f"{arch}__{shape}__{mesh_name}{suffix}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in ASSIGNED_SHAPES] + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline", choices=VARIANTS)
+    ap.add_argument("--accum", type=int, default=0,
+                    help="override gradient-accumulation steps (0 = auto)")
+    ap.add_argument("--tag", default=None,
+                    help="artifact tag override (defaults to variant)")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute even if the artifact exists")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else [s.name for s in ASSIGNED_SHAPES]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    tag = args.tag if args.tag is not None else (
+        "" if args.variant == "baseline" else args.variant)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                path = artifact_path(arch, shape, mesh_name, tag)
+                if os.path.exists(path) and not args.force:
+                    print(f"[dryrun] SKIP (exists) {arch} {shape} {mesh_name}")
+                    continue
+                print(f"[dryrun] {arch:22s} {shape:12s} {mesh_name:8s} ...",
+                      flush=True)
+                try:
+                    rec = lower_cell(arch, shape, multi,
+                                     variant=args.variant,
+                                     accum_override=args.accum)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    if rec.get("skipped"):
+                        print(f"[dryrun]   -> skipped: {rec['reason']}")
+                    else:
+                        print(f"[dryrun]   -> ok: compile={rec['compile_s']:.1f}s "
+                              f"flops/dev={rec['flops_per_device']:.3e} "
+                              f"coll/dev={rec['collective_bytes_per_device']:.3e}B "
+                              f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB")
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    failures.append((arch, shape, mesh_name, repr(e)))
+                    print(f"[dryrun]   -> FAIL: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n[dryrun] {len(failures)} failures:")
+        for f in failures:
+            print("   ", *f)
+        raise SystemExit(1)
+    print("\n[dryrun] all requested cells compiled")
+
+
+if __name__ == "__main__":
+    main()

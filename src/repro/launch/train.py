@@ -1,0 +1,159 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [options]``.
+
+Production path: builds the mesh from whatever devices exist (elastic),
+shards state per the sharding rules, restores the latest checkpoint if one
+exists (fault-tolerant resume — data order is a pure function of the step
+counter), prefetches batches on a background thread, and checkpoints
+periodically + on SIGTERM (preemption-safe).
+
+On this CPU container it trains reduced configs end-to-end (see
+examples/train_lm.py for the ~100M-class demo).
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import Model, reduced
+from repro.models.config import ModelConfig
+from repro.data import Prefetcher, make_pipeline
+from repro.ckpt import CheckpointManager
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.sharding import DEFAULT_RULES, logical_axis_rules
+from repro.sharding.rules import batch_specs
+from repro.train import adamw_init, adafactor_init, make_train_step
+from repro.train.optimizer import OptConfig
+from repro.train.state import train_state_specs
+
+
+def build_state(model: Model, optimizer: str, key):
+    params = model.init_params(key)
+    opt = (adamw_init if optimizer == "adamw" else adafactor_init)(params)
+    return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+
+
+def train(cfg: ModelConfig, *, steps: int, batch: int, seq_len: int,
+          lr: float = 3e-4, optimizer: str = "adamw", accum: int = 1,
+          ckpt_dir: str | None = None, ckpt_interval: int = 100,
+          mesh=None, log_every: int = 10, seed: int = 0,
+          data_path: str | None = None, target_loss: float | None = None):
+    mesh = mesh or make_host_mesh()
+    rules = DEFAULT_RULES
+    model = Model(cfg)
+    opt_cfg = OptConfig(learning_rate=lr, warmup_steps=min(100, steps // 10),
+                        decay_steps=steps)
+
+    with mesh, logical_axis_rules(mesh, rules):
+        state = build_state(model, optimizer, jax.random.PRNGKey(seed))
+        state_specs = train_state_specs(state, mesh, rules)
+        shardings = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, s), state_specs)
+        state = jax.tree.map(jax.device_put, state, shardings)
+
+        start_step = 0
+        mgr = None
+        if ckpt_dir:
+            mgr = CheckpointManager(ckpt_dir, interval=ckpt_interval)
+            state, restored = mgr.restore_or_init(state, shardings)
+            if restored >= 0:
+                start_step = restored + 1
+                print(f"[train] resumed from step {restored}")
+
+        step_fn = jax.jit(
+            make_train_step(model, opt_cfg, optimizer, accum_steps=accum),
+            in_shardings=(shardings, None),
+            out_shardings=(shardings, None),
+            donate_argnums=(0,))
+
+        source = make_pipeline(cfg, batch, seq_len, seed=seed,
+                               path=data_path)
+        pf = Prefetcher(source, start_step=start_step)
+
+        stop = {"now": False}
+
+        def on_sigterm(signum, frame):   # preemption: checkpoint + exit
+            stop["now"] = True
+
+        old = signal.signal(signal.SIGTERM, on_sigterm)
+        losses = []
+        t_start = time.time()
+        slow_steps = 0
+        step_times = []
+        try:
+            for i in range(start_step, steps):
+                step_idx, host_batch = pf.get()
+                assert step_idx == i, (step_idx, i)
+                t0 = time.time()
+                state, metrics = step_fn(state, host_batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                step_times.append(dt)
+                # straggler watchdog: flag steps >3x the trailing median
+                med = sorted(step_times[-20:])[len(step_times[-20:]) // 2]
+                if len(step_times) > 5 and dt > 3 * med:
+                    slow_steps += 1
+                    print(f"[train] step {i}: straggler ({dt:.2f}s vs "
+                          f"median {med:.2f}s)")
+                losses.append(loss)
+                if i % log_every == 0:
+                    tput = batch * seq_len / dt
+                    print(f"[train] step {i:5d} loss {loss:.4f} "
+                          f"lr {float(metrics['lr']):.2e} "
+                          f"gnorm {float(metrics['grad_norm']):.2f} "
+                          f"{dt*1e3:.0f}ms ({tput:.0f} tok/s)")
+                if mgr:
+                    mgr.maybe_save(i, state, force=stop["now"])
+                if stop["now"]:
+                    print(f"[train] SIGTERM: checkpointed at step {i}, "
+                          f"exiting")
+                    break
+                if target_loss is not None and loss <= target_loss:
+                    print(f"[train] target loss {target_loss} reached")
+                    break
+        finally:
+            pf.close()
+            signal.signal(signal.SIGTERM, old)
+        wall = time.time() - t_start
+        print(f"[train] done: {len(losses)} steps in {wall:.1f}s, "
+              f"loss {losses[0]:.3f} -> {losses[-1]:.3f}, "
+              f"{slow_steps} straggler steps flagged")
+        return state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adafactor"])
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-interval", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the CPU-scale reduced config")
+    ap.add_argument("--data", default=None, help="binary token file")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 production mesh (needs 256 devices)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    mesh = make_production_mesh() if args.production_mesh else None
+    train(cfg, steps=args.steps, batch=args.batch, seq_len=args.seq_len,
+          lr=args.lr, optimizer=args.optimizer, accum=args.accum,
+          ckpt_dir=args.ckpt_dir, ckpt_interval=args.ckpt_interval,
+          mesh=mesh, data_path=args.data)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from .config import ModelConfig, reduced
+from .model import Model
+from .inputs import (
+    ASSIGNED_SHAPES, SHAPES_BY_NAME, ShapeSpec,
+    make_inputs, shape_applicable, token_spec,
+)
+
+__all__ = [
+    "ModelConfig", "reduced", "Model",
+    "ASSIGNED_SHAPES", "SHAPES_BY_NAME", "ShapeSpec",
+    "make_inputs", "shape_applicable", "token_spec",
+]

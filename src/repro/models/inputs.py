@@ -1,0 +1,81 @@
+"""Input specifications per (architecture x assigned shape).
+
+``input_specs`` returns ShapeDtypeStructs (weak-type-correct, shardable, no
+allocation) for the dry-run; ``make_inputs`` materializes small random
+inputs for smoke tests. Modality frontends are stubs per the assignment:
+the VLM's patch embeddings and Whisper's frame embeddings arrive as inputs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+ASSIGNED_SHAPES = (
+    ShapeSpec("train_4k", 4096, 256, "train"),
+    ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    ShapeSpec("decode_32k", 32768, 128, "decode"),
+    ShapeSpec("long_500k", 524288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in ASSIGNED_SHAPES}
+
+
+def shape_applicable(cfg: ModelConfig, spec: ShapeSpec) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped). long_* needs sub-quadratic attention
+    (SSM state / sliding window); pure full-attention archs skip it."""
+    if spec.name.startswith("long") and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 500k-token quadratic attention "
+                       "excluded per assignment (see DESIGN.md)")
+    return True, ""
+
+
+def token_spec(cfg: ModelConfig, spec: ShapeSpec) -> dict:
+    """ShapeDtypeStructs for every model input of the given step kind."""
+    b, s = spec.global_batch, spec.seq_len
+    f32 = jnp.bfloat16
+    i32 = jnp.int32
+    if spec.kind in ("train", "prefill"):
+        s_text = s - (cfg.n_image_tokens if cfg.family == "vlm" else 0)
+        d = {"tokens": jax.ShapeDtypeStruct((b, s_text), i32)}
+        if spec.kind == "train":
+            d["labels"] = jax.ShapeDtypeStruct((b, s_text), i32)
+        if cfg.family == "vlm":
+            d["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_image_tokens, cfg.d_model), f32)
+        if cfg.family == "encdec":
+            d["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_audio_frames, cfg.d_model), f32)
+        return d
+    # decode: one new token against a cache of seq_len
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def make_inputs(cfg: ModelConfig, spec: ShapeSpec, seed: int = 0) -> dict:
+    """Materialized random inputs (smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, sds in token_spec(cfg, spec).items():
+        if sds.dtype == jnp.int32:
+            if k == "pos":
+                out[k] = jnp.asarray(spec.seq_len - 1, jnp.int32)
+            else:
+                out[k] = jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, sds.shape), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(0, 1, sds.shape), sds.dtype)
+    return out

@@ -1,0 +1,402 @@
+"""Shared neural-net layers: norms, RoPE, embeddings, MLPs, attention
+(plain and flash-chunked), all as pure functions over param pytrees.
+
+Initialization convention: ``init_*`` returns a (possibly nested) dict of
+f32 arrays; ``repro.sharding.rules.param_specs`` maps the same tree paths to
+PartitionSpecs. Forward functions take the param dict + activations and tag
+intermediates with logical axes via ``repro.sharding.shard``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .config import ModelConfig
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, in_axis_size=None, dtype=jnp.float32):
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(dt)
+
+
+def init_layernorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_rot: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rotary_pct: float = 1.0) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] (int). Rotates the leading
+    ``rotary_pct`` fraction of D (GLM/Nemotron-style partial rotary)."""
+    d = x.shape[-1]
+    d_rot = int(d * rotary_pct)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    x_rot, x_pass = x[..., :d_rot], x[..., d_rot:]
+    freqs = rope_frequencies(d_rot, theta)                      # [d_rot/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs   # [B,S,d/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([rot.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(p: Params, tokens: jax.Array, dtype) -> jax.Array:
+    x = jnp.take(p["table"].astype(dtype), tokens, axis=0)
+    return shard(x, "batch", "seq", "embed")
+
+
+def init_unembed(key, d: int, vocab: int) -> Params:
+    return {"w": _dense_init(key, (d, vocab))}
+
+
+def unembed(p: Params, x: jax.Array, softcap: float = 0.0) -> jax.Array:
+    logits = jnp.einsum("bsd,dv->bsv", x, p["w"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {"wi": _dense_init(k1, (d, f)), "wg": _dense_init(k2, (d, f)),
+                "wo": _dense_init(k3, (f, d))}
+    return {"wi": _dense_init(k1, (d, f)), "wo": _dense_init(k3, (f, d))}
+
+
+def mlp(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt))
+    h = shard(h, "batch", "seq", "mlp")
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt))
+        h = jax.nn.silu(g) * h
+    elif cfg.mlp == "relu2":
+        h = jnp.square(jax.nn.relu(h))      # squared-ReLU (Nemotron/Primer)
+    else:
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))
+    return shard(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h, dh), d),
+        "wk": _dense_init(ks[1], (d, hk, dh), d),
+        "wv": _dense_init(ks[2], (d, hk, dh), d),
+        "wo": _dense_init(ks[3], (h, dh, d), h * dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), jnp.float32)
+        p["bk"] = jnp.zeros((hk, dh), jnp.float32)
+        p["bv"] = jnp.zeros((hk, dh), jnp.float32)
+    return p
+
+
+def qkv_project(p: Params, cfg: ModelConfig, x: jax.Array,
+                positions: jax.Array):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rotary_pct)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def attention_scores(q, k, v, q_positions, kv_positions, *, causal: bool,
+                     window: int = 0, kv_mask=None) -> jax.Array:
+    """Plain attention. q: [B,Sq,H,D]; k,v: [B,Skv,Hkv,D].
+
+    GQA is computed with *grouped* einsums — queries reshaped to
+    [B,Sq,Hkv,G,D] against unexpanded K/V. Materializing the KV repeat
+    (broadcast_to) forces GSPMD into involuntary full rematerialization
+    when kv-heads are head_dim-sharded: it all-gathered the entire KV cache
+    in f32 per layer (EXPERIMENTS.md §Perf cells A/C, iteration 2)."""
+    b, sq, h, dh = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    dv = v.shape[-1]
+    qg = q.reshape(b, sq, hk, g, dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(dh)
+    mask = jnp.ones((b, 1, 1, sq, k.shape[1]), bool)
+    rel = q_positions[:, None, None, :, None] - \
+        kv_positions[:, None, None, None, :]
+    if causal:
+        mask = mask & (rel >= 0)
+    if window:
+        mask = mask & (rel < window)
+    if kv_mask is not None:
+        mask = mask & kv_mask[:, None, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, dv)
+
+
+def flash_attention(q, k, v, q_positions, kv_positions, *, causal: bool,
+                    window: int = 0, kv_mask=None,
+                    block_q: int = 1024, block_kv: int = 1024,
+                    q_block_start: int = 0) -> jax.Array:
+    """Pure-JAX flash attention: online softmax over KV blocks inside a scan
+    over Q blocks. Peak memory O(block_q * block_kv) per head instead of
+    O(Sq * Skv) — required for the 32k prefill shapes (DESIGN.md §6).
+    """
+    b, sq, h, dh = q.shape
+    hk = k.shape[2]
+    g = h // hk                    # grouped GQA: no KV repeat materialized
+    dv = v.shape[-1]               # v head dim may differ (MLA)
+    skv = k.shape[1]
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    pad_q = (-sq) % block_q
+    pad_kv = (-skv) % block_kv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad_q)),
+                              constant_values=-(1 << 30))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad_kv)),
+                               constant_values=(1 << 30))
+        if kv_mask is not None:
+            kv_mask = jnp.pad(kv_mask, ((0, 0), (0, pad_kv)))
+    nq = q.shape[1] // block_q
+    nkv = k.shape[1] // block_kv
+    scale = 1.0 / math.sqrt(dh)
+
+    qb = q.reshape(b, nq, block_q, hk, g, dh)
+    qpb = q_positions.reshape(b, nq, block_q)
+    kb = k.reshape(b, nkv, block_kv, hk, dh)
+    vb = v.reshape(b, nkv, block_kv, hk, dv)
+    kpb = kv_positions.reshape(b, nkv, block_kv)
+    kmb = (kv_mask.reshape(b, nkv, block_kv) if kv_mask is not None
+           else jnp.ones((b, nkv, block_kv), bool))
+
+    # Banded iteration for causal sliding-window attention: only the
+    # ~(block_q + window)/block_kv diagonal KV blocks can contribute, so the
+    # scan visits just those (§Perf cell B: 8-10x fewer score blocks at 32k
+    # for hymba's 2k window). Out-of-range offsets are masked, not clamped,
+    # so no block is visited twice.
+    banded = bool(causal and window)
+    if banded:
+        n_band = min((block_q + window - 2) // block_kv + 2, nkv)
+    else:
+        n_band = nkv
+
+    def q_step(_, qi):
+        q_i = qb[:, qi]            # [B, bq, Hk, G, D]
+        qp_i = qpb[:, qi]          # [B, bq]
+
+        def kv_step(carry, off):
+            m, l, acc = carry
+            if banded:
+                # q_block_start: global index of this shard's first q block
+                # (context-parallel attention shards the q sequence)
+                base = ((q_block_start + qi) * block_q - (window - 1)) \
+                    // block_kv
+                kj_raw = base + off
+                kj = jnp.clip(kj_raw, 0, nkv - 1)
+                block_valid = (kj_raw >= 0) & (kj_raw < nkv)
+            else:
+                kj = off
+                block_valid = jnp.asarray(True)
+            k_j, v_j, kp_j, km_j = kb[:, kj], vb[:, kj], kpb[:, kj], kmb[:, kj]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            rel = qp_i[:, None, None, :, None] - kp_j[:, None, None, None, :]
+            msk = km_j[:, None, None, None, :] & block_valid
+            if causal:
+                msk = msk & (rel >= 0)
+            if window:
+                msk = msk & (rel < window)
+            s = jnp.where(msk, s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(q.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hk, g, block_q), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, block_q), jnp.float32)
+        a0 = jnp.zeros((b, hk, g, block_q, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(n_band))
+        out_i = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out_i.astype(q.dtype)    # [B, Hk, G, bq, Dv]
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 3)            # [B, Hk, G, nq, bq, Dv]
+    out = out.reshape(b, hk, g, nq * block_q, dv)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, nq * block_q, h, dv)
+    return out[:, :sq]
+
+
+def _context_parallel_flash(cfg: ModelConfig, q, k, v, q_positions,
+                            kv_positions, *, causal, kv_mask):
+    """Context-parallel flash attention: shard the q-sequence over "model"
+    via shard_map with K/V replicated per shard. Used when the head count
+    does not divide the TP axis (hymba's 25, llava's 56): otherwise every
+    model rank would compute ALL heads over the FULL sequence — the
+    dominant memory term of those cells (§Perf cell B it3)."""
+    from jax import shard_map
+    from ..sharding.annotate import current_mesh, resolve_spec
+
+    mesh = current_mesh()
+    tp = mesh.shape["model"]
+    b, s, h, dh = q.shape
+    s_local = s // tp
+    blocks_per_shard = max(s_local // cfg.attn_chunk_q, 1)
+
+    def local(q_, qp_, k_, v_, kp_, km_):
+        idx = jax.lax.axis_index("model")
+        out = flash_attention(
+            q_, k_, v_, qp_, kp_, causal=causal, window=cfg.window,
+            kv_mask=km_, block_q=min(cfg.attn_chunk_q, s_local),
+            block_kv=cfg.attn_chunk_kv,
+            q_block_start=idx * blocks_per_shard)
+        return out
+
+    spec_q = resolve_spec(("batch", "cp_seq", None, None), mesh,
+                          rules={"batch": ("pod", "data"),
+                                 "cp_seq": "model"}, dims=q.shape)
+    spec_kv = resolve_spec(("batch", None, None, None), mesh,
+                           rules={"batch": ("pod", "data")}, dims=k.shape)
+    spec_pq = resolve_spec(("batch", "cp_seq"), mesh,
+                           rules={"batch": ("pod", "data"),
+                                  "cp_seq": "model"},
+                           dims=q_positions.shape)
+    spec_pk = resolve_spec(("batch", None), mesh,
+                           rules={"batch": ("pod", "data")},
+                           dims=kv_positions.shape)
+    km = kv_mask if kv_mask is not None else \
+        jnp.ones(kv_positions.shape, bool)
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(spec_q, spec_pq, spec_kv, spec_kv, spec_pk,
+                             spec_pk),
+                   out_specs=spec_q, check_vma=False)
+    return fn(q, q_positions, k, v, kv_positions, km)
+
+
+def attention(p: Params, cfg: ModelConfig, x: jax.Array,
+              positions: jax.Array, *, causal: bool = True,
+              kv_override=None, kv_positions=None, kv_mask=None) -> jax.Array:
+    """Full attention sublayer: project, attend (auto flash for long
+    sequences), output-project. ``kv_override=(k, v)`` implements decode
+    against a cache and encoder-decoder cross-attention."""
+    from ..sharding.annotate import current_mesh
+
+    q, k, v = qkv_project(p, cfg, x, positions)
+    if kv_override is not None:
+        k, v = kv_override
+        assert kv_positions is not None
+    else:
+        kv_positions = positions
+    skv = k.shape[1]
+    use_flash = (cfg.attn_chunk_q > 0 and
+                 skv >= cfg.attn_chunk_threshold)
+    mesh = current_mesh()
+    # Context parallelism: only when heads don't divide TP (otherwise the
+    # head sharding already splits the work), the sequence splits evenly,
+    # AND the attention is windowed — for full attention the shard_map
+    # boundary reshard of q/out costs more than the replicated-head waste
+    # it removes (measured on llava-next-34b: X +30 s; §Perf cell B it3).
+    if use_flash and kv_override is None and mesh is not None and \
+            cfg.window > 0 and \
+            "model" in mesh.shape and \
+            cfg.n_heads % mesh.shape["model"] != 0 and \
+            q.shape[1] % mesh.shape["model"] == 0 and \
+            (q.shape[1] // mesh.shape["model"]) >= 128:
+        out = _context_parallel_flash(cfg, q, k, v, positions, kv_positions,
+                                      causal=causal, kv_mask=kv_mask)
+    elif use_flash:
+        out = flash_attention(q, k, v, positions, kv_positions,
+                              causal=causal, window=cfg.window,
+                              kv_mask=kv_mask,
+                              block_q=cfg.attn_chunk_q,
+                              block_kv=cfg.attn_chunk_kv)
+    else:
+        out = attention_scores(q, k, v, positions, kv_positions,
+                               causal=causal, window=cfg.window,
+                               kv_mask=kv_mask)
+    out = shard(out, "batch", "seq", "heads", None)
+    dt = x.dtype
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return shard(y, "batch", "seq", "embed")

@@ -1,0 +1,109 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+K/V are compressed into a low-rank latent c_kv = W_dkv x (kv_lora_rank wide)
+plus a single shared RoPE key head; per-head keys/values are re-expanded with
+W_uk / W_uv. The *cache* stores only (c_kv, k_rope) — (512+64) floats per
+token for V2-Lite instead of 2*H*Dh — which is the technique's point.
+
+Queries split into a NoPE part (matched against the expanded no-rope keys)
+and a RoPE part (matched against the shared rope key). V2-Lite projects q
+directly (q_lora_rank = 0).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .config import ModelConfig
+from .layers import Params, _dense_init, apply_rope, flash_attention, attention_scores
+
+
+def init_mla(key, cfg: ModelConfig) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    dn, dv = cfg.nope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    p = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = _dense_init(ks[0], (d, cfg.q_lora_rank))
+        p["wq_b"] = _dense_init(ks[1], (cfg.q_lora_rank, h, dn + dr),
+                                cfg.q_lora_rank)
+    else:
+        p["wq"] = _dense_init(ks[0], (d, h, dn + dr), d)
+    p["wkv_a"] = _dense_init(ks[2], (d, r + dr))          # -> c_kv | k_rope
+    p["wk_b"] = _dense_init(ks[3], (r, h, dn), r)         # expand nope keys
+    p["wv_b"] = _dense_init(ks[4], (r, h, dv), r)         # expand values
+    p["wo"] = _dense_init(ks[5], (h, dv, d), h * dv)
+    return p
+
+
+def mla_compress(p: Params, cfg: ModelConfig, x: jax.Array,
+                 positions: jax.Array):
+    """x -> (c_kv [B,S,r], k_rope [B,S,1,dr]) — exactly what the cache
+    stores."""
+    dt = x.dtype
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dt))
+    c_kv, k_rope = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    c_kv = shard(c_kv, "batch", "seq", None)
+    return c_kv, k_rope
+
+
+def mla_queries(p: Params, cfg: ModelConfig, x: jax.Array,
+                positions: jax.Array):
+    dt = x.dtype
+    if cfg.q_lora_rank:
+        qa = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(dt))
+        q = jnp.einsum("bsr,rhk->bshk", qa, p["wq_b"].astype(dt))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    q_nope, q_rope = jnp.split(q, [cfg.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    q_nope = shard(q_nope, "batch", "seq", "heads", None)
+    q_rope = shard(q_rope, "batch", "seq", "heads", None)
+    return q_nope, q_rope
+
+
+def mla_attend(p: Params, cfg: ModelConfig, q_nope, q_rope, c_kv, k_rope,
+               q_positions, kv_positions, *, causal: bool = True,
+               kv_mask=None) -> jax.Array:
+    """Attention over the compressed cache. The expanded keys/values are
+    materialized blockwise inside flash attention (never the full
+    [B,S,H,Dh] for long caches when chunking is on)."""
+    dt = q_nope.dtype
+    # Expand keys/values from the latent (per the paper's decompression).
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"].astype(dt))
+    v = jnp.einsum("bsr,rhv->bshv", c_kv, p["wv_b"].astype(dt))
+    k_nope = shard(k_nope, "batch", "seq", "heads", None)
+    v = shard(v, "batch", "seq", "heads", None)
+    h = cfg.n_heads
+    # Assemble full q/k by concatenating nope|rope parts; rope key shared
+    # across heads.
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (cfg.rope_head_dim,))],
+        axis=-1)
+    skv = k.shape[1]
+    # Match softmax scale to the concatenated head dim.
+    if cfg.attn_chunk_q > 0 and skv >= cfg.attn_chunk_threshold:
+        out = flash_attention(q, k, v, q_positions, kv_positions,
+                              causal=causal, kv_mask=kv_mask,
+                              block_q=cfg.attn_chunk_q,
+                              block_kv=cfg.attn_chunk_kv)
+    else:
+        out = attention_scores(q, k, v, q_positions, kv_positions,
+                               causal=causal, kv_mask=kv_mask)
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(dt))
+    return shard(y, "batch", "seq", "embed")
+
+
+def mla_attention(p: Params, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, *, causal: bool = True) -> jax.Array:
+    """Training / prefill path (self-attention, no external cache)."""
+    q_nope, q_rope = mla_queries(p, cfg, x, positions)
+    c_kv, k_rope = mla_compress(p, cfg, x, positions)
+    return mla_attend(p, cfg, q_nope, q_rope, c_kv, k_rope,
+                      positions, positions, causal=causal)

@@ -1,0 +1,476 @@
+"""Model assembly: layer blocks per family, scanned layer stacks, KV/state
+caches, and the Model facade (init / loss / prefill / decode / input_specs).
+
+Layers are stacked along a leading L axis and executed with ``lax.scan``
+(small HLO => fast 512-device compiles) with per-layer remat. Heterogeneous
+prefixes (DeepSeek's leading dense layers) are unrolled separately before
+the homogeneous scanned remainder.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .config import ModelConfig
+from . import layers as L
+from . import mla as MLA
+from . import moe as MOE
+from . import ssm as SSM
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, moe_layer: bool) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": L.init_rmsnorm(cfg.d_model),
+                 "ln2": L.init_rmsnorm(cfg.d_model)}
+    if cfg.family == "encdec":
+        p["ln1"] = L.init_layernorm(cfg.d_model)
+        p["ln2"] = L.init_layernorm(cfg.d_model)
+    if cfg.uses_attention:
+        if cfg.attention == "mla":
+            p["attn"] = MLA.init_mla(ks[0], cfg)
+        else:
+            p["attn"] = L.init_attention(ks[0], cfg)
+    if cfg.uses_ssm:
+        p["ssm"] = SSM.init_mamba(ks[1], cfg)
+        if cfg.family == "ssm":
+            del p["ln2"]     # mamba-only blocks have a single norm
+    if cfg.family != "ssm":
+        if moe_layer:
+            p["mlp"] = MOE.init_moe(ks[2], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[2], cfg)
+    if cfg.family == "encdec":
+        p["ln_cross"] = L.init_layernorm(cfg.d_model)
+        p["cross"] = L.init_attention(ks[3], cfg)
+    return p
+
+
+def _init_encoder_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"ln1": L.init_layernorm(cfg.d_model),
+            "ln2": L.init_layernorm(cfg.d_model),
+            "attn": L.init_attention(ks[0], cfg),
+            "mlp": L.init_mlp(ks[1], cfg)}
+
+
+# ---------------------------------------------------------------------------
+# block forward (training / prefill: full sequences)
+# ---------------------------------------------------------------------------
+
+def _mixer(p: Params, cfg: ModelConfig, x, positions, *, causal=True):
+    """Attention and/or SSM sublayer output at full sequence length."""
+    y = 0.0
+    if cfg.uses_attention:
+        if cfg.attention == "mla":
+            y = y + MLA.mla_attention(p["attn"], cfg, x, positions,
+                                      causal=causal)
+        else:
+            y = y + L.attention(p["attn"], cfg, x, positions, causal=causal)
+    if cfg.uses_ssm:
+        y = y + SSM.mamba_forward(p["ssm"], cfg, x)
+    return y
+
+
+def block_forward(p: Params, cfg: ModelConfig, x, positions, *,
+                  moe_layer: bool, causal: bool = True,
+                  enc_out=None, enc_positions=None):
+    """Pre-norm residual block. Returns (x, aux_loss)."""
+    norm = L.layernorm if cfg.family == "encdec" else L.rmsnorm
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        x = x + _mixer(p, cfg, norm(p["ln1"], x), positions, causal=causal)
+        return x, aux
+    x = x + _mixer(p, cfg, norm(p["ln1"], x), positions, causal=causal)
+    if cfg.family == "encdec" and enc_out is not None:
+        h = norm(p["ln_cross"], x)
+        q, _, _ = L.qkv_project(p["cross"], cfg, h, positions)
+        # cross-attention: k/v from encoder output, no causal mask
+        dt = h.dtype
+        k = jnp.einsum("bsd,dhk->bshk", enc_out,
+                       p["cross"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out,
+                       p["cross"]["wv"].astype(dt))
+        o = L.attention_scores(q, k, v, positions, enc_positions,
+                               causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["cross"]["wo"].astype(dt))
+    h = norm(p["ln2"], x)
+    if moe_layer:
+        y, aux = MOE.moe_ffn(p["mlp"], cfg, h)
+    else:
+        y = L.mlp(p["mlp"], cfg, h)
+    return x + y, aux
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# model facade
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ---------------- init ----------------
+    def init_params(self, key) -> Params:
+        cfg = self.cfg
+        k_embed, k_dense, k_scan, k_head, k_enc, k_pos = jax.random.split(key, 6)
+        params: Params = {"embed": L.init_embedding(
+            k_embed, cfg.vocab_size, cfg.d_model)}
+        n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+        n_scan = cfg.n_layers - n_dense
+        if n_dense:
+            params["dense_blocks"] = [
+                _init_block(k, cfg, moe_layer=False)
+                for k in jax.random.split(k_dense, n_dense)]
+        scan_keys = jax.random.split(k_scan, n_scan)
+        params["blocks"] = jax.vmap(
+            lambda k: _init_block(k, cfg, moe_layer=cfg.is_moe))(scan_keys)
+        params["ln_f"] = (L.init_layernorm(cfg.d_model)
+                          if cfg.family == "encdec"
+                          else L.init_rmsnorm(cfg.d_model))
+        params["unembed"] = L.init_unembed(k_head, cfg.d_model, cfg.vocab_size)
+        if cfg.family == "encdec":
+            enc_keys = jax.random.split(k_enc, cfg.n_encoder_layers)
+            params["enc_blocks"] = jax.vmap(
+                lambda k: _init_encoder_block(k, cfg))(enc_keys)
+            params["enc_ln_f"] = L.init_layernorm(cfg.d_model)
+            # learned positions must cover the longest assigned decode
+            # context (32k) plus the encoder frames
+            params["pos_embed"] = jax.random.normal(
+                k_pos, (32768 + cfg.n_audio_frames, cfg.d_model),
+                jnp.float32) * 0.01
+        return params
+
+    # ---------------- stacks ----------------
+    def _run_blocks(self, params: Params, x, positions, *, causal=True,
+                    enc_out=None, enc_positions=None):
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        for p in params.get("dense_blocks", []):
+            fn = _remat(functools.partial(
+                block_forward, cfg=cfg, moe_layer=False, causal=causal,
+                enc_out=enc_out, enc_positions=enc_positions), cfg)
+            x, aux = fn(p, x=x, positions=positions)
+            aux_total = aux_total + aux
+
+        def body(carry, p):
+            x, aux_acc = carry
+            fn = _remat(functools.partial(
+                block_forward, cfg=cfg, moe_layer=cfg.is_moe, causal=causal,
+                enc_out=enc_out, enc_positions=enc_positions), cfg)
+            x, aux = fn(p, x=x, positions=positions)
+            return (x, aux_acc + aux), None
+
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                         params["blocks"])
+        return x, aux_total
+
+    def _encode(self, params: Params, frames, frame_mask=None):
+        """Whisper encoder over stub frame embeddings [B, T, D]."""
+        cfg = self.cfg
+        b, t, _ = frames.shape
+        pos = jnp.broadcast_to(jnp.arange(t), (b, t))
+        x = frames + params["pos_embed"][None, :t].astype(frames.dtype)
+
+        def body(x, p):
+            fn = _remat(lambda p_, x_: (
+                x_ + L.attention(p_["attn"], cfg,
+                                 L.layernorm(p_["ln1"], x_), pos,
+                                 causal=False)), cfg)
+            x = fn(p, x)
+            x = x + L.mlp(p["mlp"], cfg, L.layernorm(p["ln2"], x))
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return L.layernorm(params["enc_ln_f"], x), pos
+
+    # ---------------- forward (training / prefill) ----------------
+    def forward(self, params: Params, tokens, *, extra=None):
+        """tokens [B, S_text] -> hidden [B, S_total, D], aux loss.
+
+        extra: {"patches": [B, n_img, D]} (vlm) or {"frames": [B,T,D]}
+        (encdec).
+        """
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        x = L.embed(params["embed"], tokens, dt)
+        enc_out = enc_pos = None
+        if cfg.family == "vlm":
+            patches = extra["patches"].astype(dt)
+            x = jnp.concatenate([patches, x], axis=1)
+        if cfg.family == "encdec":
+            enc_out, enc_pos = self._encode(params, extra["frames"].astype(dt))
+            s = x.shape[1]
+            x = x + params["pos_embed"][None, :s].astype(dt)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x = shard(x, "batch", "seq", "embed")
+        x, aux = self._run_blocks(params, x, positions, causal=True,
+                                  enc_out=enc_out, enc_positions=enc_pos)
+        norm = L.layernorm if cfg.family == "encdec" else L.rmsnorm
+        x = norm(params["ln_f"], x)
+        return x, aux
+
+    def loss(self, params: Params, batch: dict,
+             chunk: int = 512) -> tuple[jax.Array, dict]:
+        """Next-token cross-entropy, computed in sequence chunks so the f32
+        logits tensor never exceeds [B, chunk, V/shards] (DESIGN.md §6)."""
+        cfg = self.cfg
+        if cfg.cast_params_bf16:
+            dt = cfg.compute_dtype
+            params = jax.tree.map(
+                lambda x: x.astype(dt) if x.dtype == jnp.float32 else x,
+                params)
+            # pin the bf16 copies to the sharded layout so GSPMD converts
+            # locally and gathers bf16 (otherwise it gathers f32 first)
+            from ..train.step import _constrain_like_params
+            params = _constrain_like_params(params)
+        x, aux = self.forward(params, batch["tokens"],
+                              extra={k: v for k, v in batch.items()
+                                     if k in ("patches", "frames")})
+        labels = batch["labels"]
+        # vlm: image positions carry no labels; x includes patches prefix
+        if cfg.family == "vlm":
+            x = x[:, cfg.n_image_tokens:]
+        b, s, d = x.shape
+        chunk = min(chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                             constant_values=-1)
+        nchunks = x.shape[1] // chunk
+        xc = x.reshape(b, nchunks, chunk, d).swapaxes(0, 1)
+        lc = labels.reshape(b, nchunks, chunk).swapaxes(0, 1)
+        # §Perf A it3: cast the unembedding ONCE outside the chunk scan so
+        # the FSDP gather moves bf16 and is not re-issued per chunk (the f32
+        # per-chunk regather was the largest single collective in training).
+        unembed_c = {"w": params["unembed"]["w"].astype(cfg.compute_dtype)}
+
+        def ce_chunk(carry, xl):
+            xi, li = xl
+            logits = L.unembed(unembed_c, xi, cfg.logit_softcap)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, jnp.maximum(li, 0)[..., None], axis=-1)[..., 0]
+            valid = li >= 0
+            ce = jnp.where(valid, logz - gold, 0.0)
+            return (carry[0] + ce.sum(), carry[1] + valid.sum()), None
+
+        fn = _remat(ce_chunk, cfg) if cfg.remat != "none" else ce_chunk
+        (ce_sum, n_valid), _ = jax.lax.scan(
+            fn, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+            (xc, lc))
+        ce = ce_sum / jnp.maximum(n_valid, 1)
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux, "tokens": n_valid}
+
+    # ---------------- serving ----------------
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        """Stacked per-layer caches sized for the serving context.
+
+        Sliding-window attention uses a ring buffer of ``window`` slots and
+        SSM layers carry O(1) state — the sub-quadratic serving story."""
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+        n_scan = cfg.n_layers - n_dense
+        kv_len = min(cfg.window, max_len) if cfg.window else max_len
+
+        def attn_cache(n):
+            if not cfg.uses_attention:
+                return {}
+            if cfg.attention == "mla":
+                return {
+                    "c_kv": jnp.zeros((n, batch, kv_len, cfg.kv_lora_rank), dt),
+                    "k_rope": jnp.zeros((n, batch, kv_len, 1,
+                                         cfg.rope_head_dim), dt),
+                }
+            return {
+                "k": jnp.zeros((n, batch, kv_len, cfg.n_kv_heads, cfg.d_head), dt),
+                "v": jnp.zeros((n, batch, kv_len, cfg.n_kv_heads, cfg.d_head), dt),
+            }
+
+        def ssm_cache(n):
+            if not cfg.uses_ssm:
+                return {}
+            c = SSM.init_mamba_cache(cfg, batch, dt)
+            return {k: jnp.zeros((n,) + v.shape, v.dtype)
+                    for k, v in c.items()}
+
+        cache: Params = {"scan": {**attn_cache(n_scan), **ssm_cache(n_scan)}}
+        if n_dense:
+            cache["dense"] = [{**attn_cache(1), **ssm_cache(1)}
+                              for _ in range(n_dense)]
+        if cfg.family == "encdec":
+            cache["cross_k"] = jnp.zeros(
+                (n_scan, batch, cfg.n_audio_frames, cfg.n_heads, cfg.d_head), dt)
+            cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+        return cache
+
+    def _decode_mixer(self, p, x, pos_scalar, layer_cache, *, kv_len: int):
+        """One-token mixer step against the cache. x: [B,1,D]."""
+        cfg = self.cfg
+        b = x.shape[0]
+        positions = jnp.full((b, 1), pos_scalar, jnp.int32)
+        new_cache = dict(layer_cache)
+        y = 0.0
+        if cfg.uses_attention:
+            slot = (jnp.mod(pos_scalar, cfg.window) if cfg.window
+                    else pos_scalar)
+            if cfg.attention == "mla":
+                q_nope, q_rope = MLA.mla_queries(p["attn"], cfg, x, positions)
+                c_kv, k_rope = MLA.mla_compress(p["attn"], cfg, x, positions)
+                ck = jax.lax.dynamic_update_slice_in_dim(
+                    layer_cache["c_kv"], c_kv, slot, axis=1)
+                kr = jax.lax.dynamic_update_slice_in_dim(
+                    layer_cache["k_rope"], k_rope, slot, axis=1)
+                kv_pos, kv_mask = self._cache_positions(
+                    b, kv_len, pos_scalar)
+                y = y + MLA.mla_attend(
+                    p["attn"], cfg, q_nope, q_rope, ck, kr, positions,
+                    kv_pos, causal=False, kv_mask=kv_mask)
+                new_cache.update(c_kv=ck, k_rope=kr)
+            else:
+                q, k, v = L.qkv_project(p["attn"], cfg, x, positions)
+                kc = jax.lax.dynamic_update_slice_in_dim(
+                    layer_cache["k"], k, slot, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(
+                    layer_cache["v"], v, slot, axis=1)
+                kv_pos, kv_mask = self._cache_positions(
+                    b, kv_len, pos_scalar)
+                o = L.attention_scores(q, kc, vc, positions, kv_pos,
+                                       causal=False, window=0,
+                                       kv_mask=kv_mask)
+                y = y + jnp.einsum("bshk,hkd->bsd", o,
+                                   p["attn"]["wo"].astype(x.dtype))
+                new_cache.update(k=kc, v=vc)
+        if cfg.uses_ssm:
+            sc = {"conv": layer_cache["conv"], "state": layer_cache["state"]}
+            ys, sc_new = SSM.mamba_decode_step(p["ssm"], cfg, x, sc)
+            y = y + ys
+            new_cache.update(sc_new)
+        return y, new_cache
+
+    def _cache_positions(self, b, kv_len, pos_scalar):
+        """Positions + validity mask of cache slots.
+
+        Ring buffers (sliding window): slot i holds the token whose position
+        is congruent to i mod window and <= current pos."""
+        cfg = self.cfg
+        idx = jnp.arange(kv_len)
+        if cfg.window and kv_len == cfg.window:
+            # reconstruct absolute positions in the ring
+            cur_slot = jnp.mod(pos_scalar, cfg.window)
+            wrap = idx <= cur_slot
+            base = (pos_scalar // cfg.window) * cfg.window
+            abs_pos = jnp.where(wrap, base + idx, base - cfg.window + idx)
+            valid = (abs_pos >= 0) & (abs_pos <= pos_scalar)
+        else:
+            abs_pos = idx
+            valid = idx <= pos_scalar
+        kv_pos = jnp.broadcast_to(abs_pos, (b, kv_len)).astype(jnp.int32)
+        mask = jnp.broadcast_to(valid, (b, kv_len))
+        return kv_pos, mask
+
+    def decode_step(self, params: Params, cache: Params, tokens, pos_scalar,
+                    *, extra=None):
+        """One-token serve step. tokens: [B, 1] -> logits [B, 1, V]."""
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        b = tokens.shape[0]
+        x = L.embed(params["embed"], tokens, dt)
+        if cfg.family == "encdec":
+            x = x + jnp.take(params["pos_embed"], pos_scalar,
+                             axis=0)[None, None].astype(dt)
+        norm = L.layernorm if cfg.family == "encdec" else L.rmsnorm
+
+        def one_layer(p, x, lc, cross_kv=None, moe_layer=cfg.is_moe):
+            h = norm(p["ln1"], x)
+            kv_len = (lc["k"].shape[1] if "k" in lc else
+                      lc["c_kv"].shape[1] if "c_kv" in lc else
+                      0)
+            y, lc_new = self._decode_mixer(p, h, pos_scalar, lc,
+                                           kv_len=kv_len)
+            x = x + y
+            if cfg.family == "encdec" and cross_kv is not None:
+                hc = norm(p["ln_cross"], x)
+                positions = jnp.full((b, 1), pos_scalar, jnp.int32)
+                q, _, _ = L.qkv_project(p["cross"], cfg, hc, positions)
+                ck, cv = cross_kv
+                enc_pos = jnp.broadcast_to(
+                    jnp.arange(ck.shape[1]), (b, ck.shape[1])).astype(jnp.int32)
+                o = L.attention_scores(q, ck, cv, positions, enc_pos,
+                                       causal=False)
+                x = x + jnp.einsum("bshk,hkd->bsd", o,
+                                   p["cross"]["wo"].astype(x.dtype))
+            if cfg.family != "ssm":
+                h2 = norm(p["ln2"], x)
+                if moe_layer:
+                    y2, _ = MOE.moe_ffn(p["mlp"], cfg, h2)
+                else:
+                    y2 = L.mlp(p["mlp"], cfg, h2)
+                x = x + y2
+            return x, lc_new
+
+        # dense prefix (unscanned)
+        dense_caches = []
+        for i, p in enumerate(params.get("dense_blocks", [])):
+            lc = {k: v[0] for k, v in cache["dense"][i].items()}
+            x, lc_new = one_layer(p, x, lc, moe_layer=False)
+            dense_caches.append({k: v[None] for k, v in lc_new.items()})
+
+        # scanned homogeneous layers
+        if cfg.family == "encdec":
+            def body(x, pc):
+                p, lc, cross = pc
+                x, lc_new = one_layer(p, x, lc, (cross["k"], cross["v"]))
+                return x, lc_new
+            cross_xs = {"k": cache["cross_k"], "v": cache["cross_v"]}
+            x, scan_cache = jax.lax.scan(
+                body, x, (params["blocks"], cache["scan"], cross_xs))
+        else:
+            def body(x, pc):
+                p, lc = pc
+                x, lc_new = one_layer(p, x, lc)
+                return x, lc_new
+            x, scan_cache = jax.lax.scan(
+                body, x, (params["blocks"], cache["scan"]))
+
+        x = norm(params["ln_f"], x)
+        logits = L.unembed(params["unembed"], x, cfg.logit_softcap)
+        new_cache = {"scan": scan_cache}
+        if dense_caches:
+            new_cache["dense"] = dense_caches
+        if cfg.family == "encdec":
+            new_cache["cross_k"] = cache["cross_k"]
+            new_cache["cross_v"] = cache["cross_v"]
+        return logits, new_cache
+
+    def prefill(self, params: Params, tokens, *, extra=None):
+        """Full-sequence forward returning logits for the last position and
+        a populated cache is modeled by forward(); for the dry-run shapes we
+        lower forward + final-position logits (cache population is a gather
+        away and adds no interesting cost)."""
+        x, _ = self.forward(params, tokens, extra=extra)
+        last = x[:, -1:]
+        return L.unembed(params["unembed"], last, self.cfg.logit_softcap)

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts FFN with capacity-based one-hot dispatch
+(GShard/Switch-style) — the formulation that partitions cleanly under GSPMD:
+the dispatch/combine einsums shard over the expert axis ("model" mesh axis =
+expert parallelism) and the group axis (data axes), lowering to
+all-to-all/all-gather collectives.
+
+Supports DeepSeek-style shared experts (always-on) + fine-grained routed
+experts with top-k gating, and OLMoE-style plain top-k. Tokens beyond an
+expert's capacity are dropped (their combine weight is zero) — the standard
+capacity-factor trade-off; the aux load-balancing loss keeps drops rare.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .config import ModelConfig
+from .layers import Params, _dense_init, init_mlp, mlp
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {"router": _dense_init(ks[0], (d, e))}
+    if cfg.mlp == "swiglu":
+        p["wi"] = _dense_init(ks[1], (e, d, f), d)
+        p["wg"] = _dense_init(ks[2], (e, d, f), d)
+        p["wo"] = _dense_init(ks[3], (e, f, d), f)
+    else:
+        p["wi"] = _dense_init(ks[1], (e, d, f), d)
+        p["wo"] = _dense_init(ks[3], (e, f, d), f)
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg,
+                               d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+def _capacity(cfg: ModelConfig, group_size: int) -> int:
+    c = int(group_size * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(c, cfg.top_k)
+
+
+def moe_ffn(p: Params, cfg: ModelConfig, x: jax.Array
+            ) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (y, aux_loss).
+
+    Tokens are reshaped into groups of ``moe_group_size``; within each group
+    top-k experts per token are selected and tokens are placed into expert
+    capacity slots via one-hot position einsums.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    dt = x.dtype
+    g_size = min(cfg.moe_group_size, b * s)
+    n_groups = (b * s) // g_size
+    assert n_groups * g_size == b * s, (
+        f"tokens {b*s} not divisible by moe_group_size {g_size}")
+    xt = x.reshape(n_groups, g_size, d)
+    xt = shard(xt, "batch", None, "embed")
+
+    # --- routing ---
+    logits = jnp.einsum("gtd,de->gte", xt, p["router"].astype(dt))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # [G,T,k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)              # renormalize
+
+    # --- aux load-balancing loss (Switch): e * sum(frac_tokens * frac_prob)
+    me = jnp.mean(probs, axis=1)                             # [G,E]
+    one_hot_top1 = jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=1)                      # [G,E]
+    aux = e * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    # --- capacity assignment ---
+    cap = _capacity(cfg, g_size)
+    disp_onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)   # [G,T,k,E]
+    # position of each (token, choice) within its expert's queue
+    pos = jnp.cumsum(disp_onehot.reshape(n_groups, g_size * k, e), axis=1)
+    pos = pos.reshape(n_groups, g_size, k, e) * disp_onehot - 1.0
+    in_cap = (pos >= 0) & (pos < cap)
+    gate_vals = gate_vals * in_cap.max(axis=-1)              # drop overflow
+    pos_onehot = jax.nn.one_hot(pos.astype(jnp.int32), cap,
+                                dtype=jnp.float32)           # [G,T,k,E,C]
+    dispatch = jnp.einsum("gtke,gtkec->gtec", disp_onehot * in_cap,
+                          pos_onehot)                        # [G,T,E,C]
+    combine = jnp.einsum("gtk,gtke,gtkec->gtec",
+                         gate_vals.astype(jnp.float32),
+                         disp_onehot * in_cap, pos_onehot)   # [G,T,E,C]
+    dispatch = shard(dispatch.astype(dt), "batch", None, "experts", None)
+    combine = shard(combine.astype(dt), "batch", None, "experts", None)
+
+    # --- expert computation ---
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xt)          # [G,E,C,D]
+    xe = shard(xe, "batch", "experts", None, "embed")
+    h = jnp.einsum("gecd,edf->gecf", xe, p["wi"].astype(dt))
+    if cfg.mlp == "swiglu":
+        hg = jnp.einsum("gecd,edf->gecf", xe, p["wg"].astype(dt))
+        h = jax.nn.silu(hg) * h
+    elif cfg.mlp == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, "batch", "experts", None, None)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(dt))  # [G,E,C,D]
+    y = jnp.einsum("gtec,gecd->gtd", combine, ye)             # [G,T,D]
+
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], cfg, xt)
+    y = shard(y, "batch", None, "embed")
+    return y.reshape(b, s, d), aux.astype(jnp.float32)

@@ -1,0 +1,197 @@
+"""Mamba-1 selective state-space block (arXiv:2312.00752), TPU-adapted.
+
+The CUDA reference fuses the selective scan into one kernel; in JAX we use a
+**chunked associative scan**: ``lax.scan`` over sequence chunks with a
+first-order linear-recurrence ``associative_scan`` inside each chunk. This
+bounds the materialized state tensor to [B, chunk, D_inner, N] instead of
+[B, S, D_inner, N] (8.6 GB/device at S=4k for falcon-mamba — the reason the
+naive scan cannot train; DESIGN.md §6), while remat recomputes chunk
+interiors in the backward pass. D_inner shards over the "model" axis
+(head-free tensor parallelism).
+
+Decode is the O(1) recurrence step on a carried (conv window, ssm state)
+cache — the property that makes ``long_500k`` runnable for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .config import ModelConfig
+from .layers import Params, _dense_init
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_dt_rank
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di), d),
+        "conv_w": _dense_init(ks[1], (cfg.ssm_conv, di), cfg.ssm_conv),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": _dense_init(ks[2], (di, r + 2 * n), di),
+        "dt_proj": _dense_init(ks[3], (r, di), r),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),   # softplus^-1(0.01)
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[4], (di, d), di),
+    }
+
+
+def _ssm_params_from_x(p: Params, cfg: ModelConfig, xc: jax.Array):
+    """xc: [..., Di] post-conv activations -> (dt, B, C) selective params."""
+    dt_bc = jnp.einsum("...i,ir->...r", xc, p["x_proj"].astype(xc.dtype))
+    r, n = cfg.ssm_dt_rank, cfg.ssm_state
+    dt, b_mat, c_mat = jnp.split(dt_bc, [r, r + n], axis=-1)
+    dt = jnp.einsum("...r,ri->...i", dt, p["dt_proj"].astype(xc.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    return dt, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32)
+
+
+def _scan_chunk(a_bar, bx):
+    """First-order recurrence h_t = a_t * h_{t-1} + bx_t over axis 1 via
+    associative scan. a_bar, bx: [B, T, Di, N]."""
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+    a_out, h = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+    return h
+
+
+def mamba_forward(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Training/prefill path. x: [B, S, D] -> [B, S, D].
+
+    S must be divisible by cfg.ssm_chunk (callers pad)."""
+    b, s, d = x.shape
+    di, n, kc = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    dt_ = x.dtype
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard(xin, "batch", "seq", "ssm_inner")
+
+    # depthwise causal conv over sequence
+    xpad = jnp.pad(xin, ((0, 0), (kc - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i:i + s, :] * p["conv_w"][i].astype(dt_)
+             for i in range(kc))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(dt_))
+
+    dt, b_mat, c_mat = _ssm_params_from_x(p, cfg, xc)
+    a = -jnp.exp(p["a_log"])                                  # [Di, N]
+
+    chunk = min(cfg.ssm_chunk, s)
+    assert s % chunk == 0, f"seq {s} not divisible by ssm_chunk {chunk}"
+    n_chunks = s // chunk
+
+    xc32 = xc.astype(jnp.float32)
+
+    if cfg.ssm_kernel:
+        y = _fused_selective_scan(cfg, xc32, dt, b_mat, c_mat, a)
+        y = y + xc32 * p["d_skip"]
+        y = (y.astype(dt_) * jax.nn.silu(z))
+        y = shard(y, "batch", "seq", "ssm_inner")
+        out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(dt_))
+        return shard(out, "batch", "seq", "embed")
+
+    def chunk_step(h0, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * chunk, chunk, 1)
+        dt_c, b_c, c_c, x_c = sl(dt), sl(b_mat), sl(c_mat), sl(xc32)
+        a_bar = jnp.exp(dt_c[..., None] * a)                  # [B,T,Di,N]
+        bx = dt_c[..., None] * b_c[:, :, None, :] * x_c[..., None]
+        # fold the carried state into the first step
+        bx = bx.at[:, 0].add(a_bar[:, 0] * h0)
+        h = _scan_chunk(a_bar, bx)                            # [B,T,Di,N]
+        y_c = jnp.einsum("btin,btn->bti", h, c_c)
+        return h[:, -1], y_c
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    if cfg.remat != "none":
+        chunk_step = jax.checkpoint(chunk_step)
+    _, ys = jax.lax.scan(chunk_step, h0, jnp.arange(n_chunks))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, di)              # [B,S,Di]
+    y = y + xc32 * p["d_skip"]
+    y = (y.astype(dt_) * jax.nn.silu(z))
+    y = shard(y, "batch", "seq", "ssm_inner")
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(dt_))
+    return shard(out, "batch", "seq", "embed")
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _fused_selective_scan(cfg: ModelConfig, xc32, dt, b_mat, c_mat, a):
+    """Pallas selective-scan path (§Perf cell B): VMEM-resident state, HBM
+    traffic = kernel I/O only. Under a mesh the kernel runs per-shard via
+    shard_map (batch over the data axes, D_inner over "model"; B/C are
+    replicated along "model" — no collectives inside)."""
+    from jax import shard_map
+    from jax.sharding import PartitionSpec
+    from ..kernels.selective_scan import selective_scan
+    from ..sharding.annotate import current_mesh, resolve_spec
+
+    b, s, di = xc32.shape
+    n = cfg.ssm_state
+    mesh = current_mesh()
+
+    def run(xc_, dt_, bm_, cm_, a_):
+        bb, ss, dd = xc_.shape
+        h0 = jnp.zeros((bb, dd, n), jnp.float32)
+        chunk = _largest_divisor(ss, cfg.ssm_chunk)
+        bd = _largest_divisor(dd, 128)
+        with jax.named_scope("pallas_selective_scan"):
+            return selective_scan(xc_, dt_, bm_, cm_, a_, h0,
+                                  chunk, bd, True)
+
+    if mesh is None:
+        return run(xc32, dt, b_mat, c_mat, a)
+
+    spec_bsd = resolve_spec(("batch", None, "ssm_inner"), mesh,
+                            dims=(b, s, di))
+    spec_bsn = resolve_spec(("batch", None, None), mesh, dims=(b, s, n))
+    spec_dn = resolve_spec(("ssm_inner", None), mesh, dims=(di, n))
+    fn = shard_map(run, mesh=mesh,
+                   in_specs=(spec_bsd, spec_bsd, spec_bsn, spec_bsn,
+                             spec_dn),
+                   out_specs=spec_bsd, check_vma=False)
+    return fn(xc32, dt, b_mat, c_mat, a)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    di, n, kc = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((batch, kc - 1, di), dtype),
+        "state": jnp.zeros((batch, di, n), jnp.float32),
+    }
+
+
+def mamba_decode_step(p: Params, cfg: ModelConfig, x: jax.Array,
+                      cache: Params) -> tuple[jax.Array, Params]:
+    """One-token decode. x: [B, 1, D]; cache: conv window + ssm state."""
+    b, _, d = x.shape
+    di, n, kc = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    dt_ = x.dtype
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    xin, z = jnp.split(xz, 2, axis=-1)                        # [B,1,Di]
+
+    conv_win = jnp.concatenate([cache["conv"], xin], axis=1)  # [B,kc,Di]
+    xc = jnp.einsum("bki,ki->bi", conv_win, p["conv_w"].astype(dt_))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(dt_))[:, None, :]  # [B,1,Di]
+
+    dt, b_mat, c_mat = _ssm_params_from_x(p, cfg, xc)
+    a = -jnp.exp(p["a_log"])
+    a_bar = jnp.exp(dt[:, 0, :, None] * a)                    # [B,Di,N]
+    bx = (dt[:, 0, :, None] * b_mat[:, 0, None, :] *
+          xc.astype(jnp.float32)[:, 0, :, None])
+    h = a_bar * cache["state"] + bx                           # [B,Di,N]
+    y = jnp.einsum("bin,bn->bi", h, c_mat[:, 0])
+    y = y + xc.astype(jnp.float32)[:, 0] * p["d_skip"]
+    y = (y[:, None, :].astype(dt_) * jax.nn.silu(z))
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(dt_))
+    new_cache = {"conv": conv_win[:, 1:], "state": h}
+    return out, new_cache

@@ -1,0 +1,17 @@
+from .tables import (
+    build_routing_table,
+    dijkstra_lowest_id_table,
+    updown_random_table,
+    route_walk,
+    channel_dependency_cycle,
+    ROUTING_ALGORITHMS,
+)
+
+__all__ = [
+    "build_routing_table",
+    "dijkstra_lowest_id_table",
+    "updown_random_table",
+    "route_walk",
+    "channel_dependency_cycle",
+    "ROUTING_ALGORITHMS",
+]

@@ -1,0 +1,271 @@
+"""Routing-table generation (paper §2.3.4).
+
+Two deadlock-free routing algorithms for arbitrary topologies, both built on
+Dijkstra's algorithm:
+
+1. ``dijkstra_lowest_id`` — deterministic shortest paths; among multiple
+   shortest paths the next hop with the lowest ID is chosen (the paper notes
+   this matches BookSim2's strategy for arbitrary topologies, at the cost of
+   path diversity).
+
+2. ``updown_random`` — randomized shortest *legal* paths under an up*/down*
+   turn restriction over a BFS spanning tree. This is our stand-in for the
+   paper's turn-model + cycle-breaking + dual-graph construction (see
+   DESIGN.md §2 fidelity notes): same interface, same guarantee class
+   (provably deadlock-free on arbitrary topologies, exploits path diversity
+   via seeded random tie-breaking).
+
+Tables are dense int32 ``next_hop[u, d]`` matrices: the next vertex on the
+route from ``u`` toward destination ``d`` (``next_hop[d, d] = d``; unreachable
+pairs also map to ``u`` itself and are detected by the proxies).
+
+Routing tables are *setup*, not the hot loop, so they are built on the host in
+numpy and shipped to the device as int32 matrices (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+from ..core.graph import DenseGraph, step_cost_matrix
+
+
+def _edge_costs(g: DenseGraph, metric: str) -> np.ndarray:
+    """Directed step costs c[u,v] for the Dijkstra metric."""
+    if metric == "hops":
+        c = np.where(np.isfinite(g.adj_lat), 1.0, np.inf)
+    elif metric == "latency":
+        c = step_cost_matrix(g)
+        c = np.where(np.isfinite(g.adj_lat), c, np.inf)
+    else:
+        raise ValueError(f"unknown routing metric {metric!r}")
+    return c
+
+
+def dijkstra_lowest_id_table(g: DenseGraph, metric: str = "hops") -> np.ndarray:
+    """Deterministic shortest-path next-hop table with lowest-ID tie-break.
+
+    For each destination d we run Dijkstra *from* d (the graph is undirected)
+    to get dist_d[v], then pick
+        next_hop[u, d] = argmin_v (c[u,v] + dist_d[v])
+    over neighbors v, breaking ties toward the lowest vertex ID. Non-relay
+    chiplets are never used as intermediate vertices.
+    """
+    n = g.n
+    cost = _edge_costs(g, metric)
+    neighbors = [np.nonzero(np.isfinite(g.adj_lat[u]))[0] for u in range(n)]
+    next_hop = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, n))
+
+    for d in range(n):
+        dist = np.full(n, np.inf)
+        dist[d] = 0.0
+        heap = [(0.0, d)]
+        done = np.zeros(n, dtype=bool)
+        while heap:
+            du, u = heapq.heappop(heap)
+            if done[u]:
+                continue
+            done[u] = True
+            # A packet hopping u -> ... -> d transits u, so u must relay
+            # (unless u == d, the endpoint).
+            if u != d and not g.relay[u]:
+                continue
+            for v in neighbors[u]:
+                nd = du + cost[v, u]
+                if nd < dist[v] - 1e-12:
+                    dist[v] = nd
+                    heapq.heappush(heap, (nd, int(v)))
+        # Select lowest-ID next hops. Neighbor IDs are ascending, so the
+        # first strict improvement wins. A neighbor is only a legal next hop
+        # if it is the destination or a relay vertex.
+        for u in range(n):
+            if u == d or not np.isfinite(dist[u]):
+                continue
+            best_v, best_c = u, np.inf
+            for v in neighbors[u]:
+                if v != d and not g.relay[v]:
+                    continue
+                c = cost[u, v] + dist[v]
+                if c < best_c - 1e-12:
+                    best_c, best_v = c, int(v)
+            next_hop[u, d] = best_v
+    return next_hop
+
+
+def _bfs_levels(g: DenseGraph, root: int) -> np.ndarray:
+    n = g.n
+    lvl = np.full(n, -1, dtype=np.int64)
+    lvl[root] = 0
+    frontier = [root]
+    while frontier:
+        nxt = []
+        for u in frontier:
+            for v in np.nonzero(np.isfinite(g.adj_lat[u]))[0]:
+                if lvl[v] < 0:
+                    lvl[v] = lvl[u] + 1
+                    nxt.append(int(v))
+        frontier = nxt
+    return lvl
+
+
+def _is_up_edge(u: int, v: int, lvl: np.ndarray) -> bool:
+    """True if traversing u->v moves 'up' (toward the root): strictly lower
+    BFS level, or equal level and lower ID (the standard total order that
+    makes up*/down* deadlock-free)."""
+    return (lvl[v], v) < (lvl[u], u)
+
+
+def updown_random_table(g: DenseGraph, metric: str = "hops", seed: int = 0,
+                        root: int | None = None) -> np.ndarray:
+    """Randomized up*/down* shortest-legal-path next-hop table.
+
+    Legal routes traverse zero or more 'up' edges followed by zero or more
+    'down' edges (no down->up turn), which provably breaks all channel-
+    dependency cycles. Among equal-cost legal next hops we sample uniformly
+    (seeded), restoring the path diversity that lowest-ID tie-breaking loses.
+    """
+    n = g.n
+    rng = np.random.default_rng(seed)
+    cost = _edge_costs(g, metric)
+    if root is None:
+        root = int(np.argmax(g.degree()))   # well-connected root shortens paths
+    lvl = _bfs_levels(g, root)
+    neighbors = [np.nonzero(np.isfinite(g.adj_lat[u]))[0] for u in range(n)]
+    next_hop = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, n))
+
+    # Backward Dijkstra from each destination d over the phase automaton.
+    # State (v, p): p=0 -> the forward-path suffix walked so far is all 'down'
+    # edges; p=1 -> we are in the 'up' prefix (every earlier forward edge must
+    # also be 'up'). Reversing a forward 'down' edge keeps p=0; reversing a
+    # forward 'up' edge forces p=1 forever after (in backward order).
+    for d in range(n):
+        dist = np.full((n, 2), np.inf)
+        dist[d, 0] = 0.0
+        heap = [(0.0, d, 0)]
+        done = np.zeros((n, 2), dtype=bool)
+        while heap:
+            du, u, p = heapq.heappop(heap)
+            if done[u, p]:
+                continue
+            done[u, p] = True
+            if u != d and not g.relay[u]:
+                continue
+            for v in neighbors[u]:
+                # Forward edge v -> u.
+                up = _is_up_edge(v, u, lvl)
+                if p == 0:
+                    np_ = 1 if up else 0
+                elif up:
+                    np_ = 1
+                else:
+                    continue   # down edge before an up edge: illegal forward path
+                nd = du + cost[v, u]
+                if nd < dist[v, np_] - 1e-12:
+                    dist[v, np_] = nd
+                    heapq.heappush(heap, (nd, int(v), np_))
+        dmin = dist.min(axis=1)
+        for u in range(n):
+            if u == d or not np.isfinite(dmin[u]):
+                continue
+            # Candidate next hops v: moving u->v must keep the remaining path
+            # legal. If u->v is 'up' the rest may be anything legal from
+            # (v, any phase); if 'down', the rest must be all-down (phase 0).
+            cands, best_c = [], np.inf
+            for v in neighbors[u]:
+                if v != d and not g.relay[v]:
+                    continue
+                up = _is_up_edge(u, v, lvl)
+                rest = min(dist[v, 0], dist[v, 1]) if up else dist[v, 0]
+                c = cost[u, v] + rest
+                if c < best_c - 1e-12:
+                    best_c, cands = c, [int(v)]
+                elif c < best_c + 1e-12:
+                    cands.append(int(v))
+            next_hop[u, d] = int(rng.choice(cands))
+    return next_hop
+
+
+ROUTING_ALGORITHMS = {
+    "dijkstra_lowest_id": dijkstra_lowest_id_table,
+    "updown_random": updown_random_table,
+}
+
+
+def build_routing_table(g: DenseGraph, algorithm: str = "dijkstra_lowest_id",
+                        metric: str = "hops", seed: int = 0) -> np.ndarray:
+    if algorithm == "dijkstra_lowest_id":
+        return dijkstra_lowest_id_table(g, metric)
+    if algorithm == "updown_random":
+        return updown_random_table(g, metric, seed)
+    raise ValueError(f"unknown routing algorithm {algorithm!r}; "
+                     f"options: {sorted(ROUTING_ALGORITHMS)}")
+
+
+def route_walk(next_hop: np.ndarray, s: int, d: int,
+               max_hops: int | None = None) -> list[int]:
+    """Walk the routing table from s to d; returns the vertex sequence
+    [s, ..., d]. Raises if the route does not reach d (unreachable or loop)."""
+    n = next_hop.shape[0]
+    if max_hops is None:
+        max_hops = n + 1
+    path = [s]
+    cur = s
+    for _ in range(max_hops):
+        if cur == d:
+            return path
+        nxt = int(next_hop[cur, d])
+        if nxt == cur:
+            raise ValueError(f"no route from {s} to {d} (stuck at {cur})")
+        path.append(nxt)
+        cur = nxt
+    raise ValueError(f"route from {s} to {d} exceeded {max_hops} hops (loop?)")
+
+
+def channel_dependency_cycle(next_hop: np.ndarray) -> bool:
+    """True if the channel-dependency graph induced by the routing function
+    contains a cycle (i.e. the table is NOT provably deadlock-free without
+    extra virtual channels). Used by property tests on updown_random tables.
+    """
+    n = next_hop.shape[0]
+    # Channels that can be immediately followed by one another: c1=(a,b) ->
+    # c2=(b,c) if for some destination d: next_hop[a,d]==b and next_hop[b,d]==c.
+    deps: dict[tuple[int, int], set[tuple[int, int]]] = {}
+    for d in range(n):
+        for a in range(n):
+            b = int(next_hop[a, d])
+            if b == a:
+                continue
+            c = int(next_hop[b, d])
+            if c == b:
+                continue
+            deps.setdefault((a, b), set()).add((b, c))
+    # DFS cycle detection.
+    WHITE, GRAY, BLACK = 0, 1, 2
+    color: dict[tuple[int, int], int] = {}
+
+    def dfs(c0) -> bool:
+        stack = [(c0, iter(sorted(deps.get(c0, ()))))]
+        color[c0] = GRAY
+        while stack:
+            node, it = stack[-1]
+            found = False
+            for nxt in it:
+                st = color.get(nxt, WHITE)
+                if st == GRAY:
+                    return True
+                if st == WHITE:
+                    color[nxt] = GRAY
+                    stack.append((nxt, iter(sorted(deps.get(nxt, ())))))
+                    found = True
+                    break
+            if not found:
+                color[node] = BLACK
+                stack.pop()
+        return False
+
+    for c0 in sorted(deps):
+        if color.get(c0, WHITE) == WHITE:
+            if dfs(c0):
+                return True
+    return False

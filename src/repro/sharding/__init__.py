@@ -1,0 +1,11 @@
+from .annotate import (
+    logical_axis_rules, shard, resolve_spec, current_mesh, current_rules,
+    DEFAULT_RULES, LONG_CONTEXT_RULES, SERVING_RULES,
+)
+from .rules import param_specs, param_shardings, batch_specs, cache_specs
+
+__all__ = [
+    "logical_axis_rules", "shard", "resolve_spec", "current_mesh",
+    "current_rules", "DEFAULT_RULES", "LONG_CONTEXT_RULES",
+    "param_specs", "param_shardings", "batch_specs", "cache_specs",
+]

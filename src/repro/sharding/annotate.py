@@ -1,0 +1,163 @@
+"""Logical-axis sharding annotations (MaxText-style).
+
+Model code tags intermediates with *logical* axis names
+(``shard(x, "batch", "seq", "embed")``); the launcher binds logical names to
+physical mesh axes with ``logical_axis_rules``. Outside a binding the tags
+are no-ops, so the same model code runs on 1 CPU (tests) and on the
+512-device production mesh (dry-run) unchanged.
+
+Rules are (logical_name -> mesh axis | tuple | None). The resolver skips a
+physical axis if it is absent from the active mesh, so one rule set serves
+single-pod ("data","model") and multi-pod ("pod","data","model") meshes.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# Logical axis vocabulary:
+#   batch       activation batch
+#   seq         sequence (sequence parallelism for very long contexts)
+#   embed       d_model / residual stream
+#   heads       attention heads
+#   kv_heads    kv heads
+#   mlp         feed-forward hidden
+#   vocab       vocabulary
+#   experts     MoE expert axis
+#   ssm_inner   mamba expanded channels
+#   fsdp        parameter/optimizer shard axis (maps to data(+pod))
+#   stage       pipeline stage (optional pipeline executor)
+DEFAULT_RULES: tuple[tuple[str, object], ...] = (
+    ("batch", ("pod", "data")),
+    ("fsdp", ("pod", "data")),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("head_dim", "model"),   # fallback when head counts don't divide TP
+    ("mlp", "model"),
+    ("vocab", "model"),
+    ("experts", "model"),
+    ("ssm_inner", "model"),
+    ("embed", None),
+    ("seq", None),
+)
+
+# Long-context serving: batch may be tiny (long_500k has global batch 1), so
+# activations shard the sequence instead and the KV/state cache shards heads.
+# Serving: params live in pure-TP layout (replicated across the data axes)
+# so decode steps never all-gather weights — the FSDP layout would move the
+# whole model over ICI for every generated token (§Perf 'serve_tp').
+# The KV cache is batch-sharded but model-REPLICATED (kv_heads/head_dim ->
+# None): sharding the cache's contracting head_dim made GSPMD all-gather
+# the whole cache inside attention every layer (§Perf C it3); replication
+# costs HBM (cache/device x 1, not /16) but zero attention collectives.
+SERVING_RULES: tuple[tuple[str, object], ...] = (
+    ("batch", ("pod", "data")),
+    ("fsdp", None),
+    ("heads", "model"),
+    ("kv_heads", None),
+    ("head_dim", None),
+    ("mlp", "model"),
+    ("vocab", "model"),
+    ("experts", "model"),
+    ("ssm_inner", "model"),
+    ("embed", None),
+    ("seq", None),
+    # decode KV caches shard their *sequence* dim over the model axis:
+    # attention reduces over the sharded kv-seq (GSPMD inserts the cheap
+    # [B,1,H]-sized softmax-stat psums instead of gathering the cache).
+    ("seq_kv", "model"),
+)
+
+LONG_CONTEXT_RULES: tuple[tuple[str, object], ...] = (
+    ("batch", None),
+    ("fsdp", ("pod", "data")),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("head_dim", "model"),
+    ("mlp", "model"),
+    ("vocab", "model"),
+    ("experts", "model"),
+    ("ssm_inner", "model"),
+    ("embed", None),
+    ("seq", ("pod", "data")),
+)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(mesh: Mesh, rules=DEFAULT_RULES):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_mesh() -> Mesh | None:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def current_rules() -> dict | None:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[1] if ctx else None
+
+
+def resolve_spec(logical: tuple, mesh: Mesh | None = None,
+                 rules: dict | None = None,
+                 dims: tuple | None = None) -> P:
+    """Map logical axis names to a PartitionSpec against the active mesh.
+
+    ``dims`` (the array shape) enables divisibility pruning: a physical mesh
+    axis is only used if it evenly divides the remaining dimension size —
+    explicit jit shardings reject uneven splits, so e.g. 2 kv-heads on a
+    16-way "model" axis degrade gracefully to replicated (the padding waste
+    / replication cost is then visible in the roofline, EXPERIMENTS.md).
+    """
+    mesh = mesh or current_mesh()
+    rules = rules or current_rules() or dict(DEFAULT_RULES)
+    axes = set(mesh.axis_names) if mesh is not None else set()
+    out = []
+    used: set[str] = set()
+    for i, name in enumerate(logical):
+        phys = rules.get(name) if name is not None else None
+        if phys is None:
+            out.append(None)
+            continue
+        if isinstance(phys, str):
+            phys = (phys,)
+        dim = dims[i] if dims is not None and i < len(dims) else None
+        keep = []
+        remaining = dim
+        for a in phys:
+            if a not in axes or a in used:
+                continue
+            size = mesh.shape[a]
+            if remaining is not None:
+                if remaining % size != 0:
+                    continue
+                remaining //= size
+            keep.append(a)
+        used.update(keep)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(tuple(keep))
+    return P(*out)
+
+
+def shard(x, *logical):
+    """Tag an intermediate with logical axis names (no-op without a mesh
+    binding). ``None`` entries mean 'replicated along this dim'."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = resolve_spec(tuple(logical), mesh, dims=tuple(x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

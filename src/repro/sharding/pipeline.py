@@ -1,0 +1,92 @@
+"""Optional GPipe-style pipeline parallelism over a "stage" mesh axis.
+
+The default production layout uses FSDP over the pod axis (DESIGN.md §6 —
+at 2 pods the pipeline bubble costs more than FSDP's gather traffic), but
+the framework ships a working stage executor for deployments where PP wins
+(longer pods, scarce cross-pod bandwidth):
+
+* layers are split into S contiguous stages; stage s's parameters live on
+  mesh slice ``stage=s`` (shard_map isolates them);
+* microbatches stream through the classic GPipe schedule: at tick t, stage
+  s processes microbatch t-s (if 0 <= t-s < M) and ppermutes its activation
+  to stage s+1;
+* bubble fraction = (S-1)/(M+S-1), amortized by more microbatches.
+
+Implemented with jax.shard_map + lax.ppermute — the communication pattern
+the paper's proxy prices as a neighbor ring (see autoshard).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(stage_fn, mesh: Mesh, axis: str = "stage"):
+    """Build a pipelined apply: (stage_params, microbatches) -> outputs.
+
+    stage_params: pytree whose leaves have a leading ``S`` axis (one slice
+                  per stage — sharded over ``axis``).
+    microbatches: [M, mb, ...] array; every stage receives the full stream
+                  but only stage 0 injects it.
+    Returns [M, mb, ...] outputs (valid on the last stage; broadcast back).
+    """
+    n_stages = mesh.shape[axis]
+
+    def per_stage(params, xs):
+        # shard_map gives each stage its params slice with leading dim 1
+        params = jax.tree.map(lambda p: p[0], params)
+        stage = jax.lax.axis_index(axis)
+        m = xs.shape[0]
+        ticks = m + n_stages - 1
+        mb_shape = xs.shape[1:]
+
+        def tick(t, carry):
+            inflight, outputs = carry
+            mb_idx = jnp.clip(t - stage, 0, m - 1)
+            active = (t >= stage) & (t - stage < m)
+            x_in = jnp.where(stage == 0,
+                             jax.lax.dynamic_index_in_dim(
+                                 xs, jnp.clip(t, 0, m - 1), keepdims=False),
+                             inflight)
+            y = stage_fn(params, x_in)
+            y = jnp.where(active, y, jnp.zeros_like(y))
+            # last stage writes its finished microbatch
+            outputs = jax.lax.cond(
+                active & (stage == n_stages - 1),
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, mb_idx, 0),
+                lambda o: o, outputs)
+            # hand activations downstream (ring permute; last->first unused)
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            inflight = jax.lax.ppermute(y, axis, perm)
+            return inflight, outputs
+
+        inflight0 = jnp.zeros(mb_shape, xs.dtype)
+        outputs0 = jnp.zeros((m,) + mb_shape, xs.dtype)
+        _, outputs = jax.lax.fori_loop(0, ticks, tick,
+                                       (inflight0, outputs0))
+        # broadcast final outputs from the last stage to all stages so the
+        # caller sees replicated results (outputs are zero elsewhere, so a
+        # psum over the stage axis is a broadcast)
+        if n_stages > 1:
+            outputs = jax.lax.psum(outputs, axis)
+        return outputs
+
+    return shard_map(
+        per_stage, mesh=mesh,
+        in_specs=(P(axis), P()), out_specs=P(),
+        check_vma=False)
+
+
+def split_stages(stacked_params, n_stages: int):
+    """Reshape scanned-layer params [L, ...] into [S, L/S, ...] stage
+    slices."""
+    def one(p):
+        l = p.shape[0]
+        assert l % n_stages == 0, (l, n_stages)
+        return p.reshape(n_stages, l // n_stages, *p.shape[1:])
+    return jax.tree.map(one, stacked_params)

@@ -1,0 +1,175 @@
+"""Path-based parameter & batch sharding rules (FSDP + TP + EP).
+
+``param_specs`` walks a parameter pytree and assigns each leaf a
+PartitionSpec from its tree path (module/leaf names), implementing the
+production layout of DESIGN.md §6:
+
+* FSDP: the d_model/contraction axis of every large matrix shards over
+  ("pod", "data") — parameters and optimizer states are fully sharded,
+  gathered per-layer by GSPMD inside the scanned block (compute/comm
+  overlap via the latency-hiding scheduler).
+* TP: heads / mlp hidden / vocab / experts / ssm channels shard over
+  "model".
+* Scanned layer stacks have a leading L axis (never sharded).
+
+Uneven divisions (56 heads / 16-way model axis, 51865-token vocabs) are
+allowed — GSPMD pads; the padding waste is visible in the roofline tables
+and called out in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .annotate import DEFAULT_RULES, resolve_spec
+
+# (path regex, logical axes per dim — WITHOUT the scan-stack L axis)
+_PARAM_RULES: tuple[tuple[str, tuple], ...] = (
+    (r"embed/table$",        ("vocab", "fsdp")),
+    (r"unembed/w$",          ("fsdp", "vocab")),
+    (r"pos_embed$",          (None, "fsdp")),
+    # attention
+    (r"attn/wq$",            ("fsdp", "heads", None)),
+    (r"attn/wk$",            ("fsdp", "kv_heads", None)),
+    (r"attn/wv$",            ("fsdp", "kv_heads", None)),
+    (r"attn/wo$",            ("heads", None, "fsdp")),
+    (r"attn/b[qkv]$",        ("kv_heads", None)),
+    (r"cross/wq$",           ("fsdp", "heads", None)),
+    (r"cross/w[kv]$",        ("fsdp", "kv_heads", None)),
+    (r"cross/wo$",           ("heads", None, "fsdp")),
+    (r"cross/b[qkv]$",       ("kv_heads", None)),
+    # MLA
+    (r"attn/wq_a$",          ("fsdp", None)),
+    (r"attn/wq_b$",          (None, "heads", None)),
+    (r"attn/wkv_a$",         ("fsdp", None)),
+    (r"attn/wk_b$",          (None, "heads", None)),
+    (r"attn/wv_b$",          (None, "heads", None)),
+    # dense MLP (incl. MoE shared expert)
+    (r"mlp/(shared/)?wi$",   ("fsdp", "mlp")),
+    (r"mlp/(shared/)?wg$",   ("fsdp", "mlp")),
+    (r"mlp/(shared/)?wo$",   ("mlp", "fsdp")),
+    # MoE experts
+    (r"mlp/router$",         ("fsdp", None)),
+    # mamba
+    (r"ssm/in_proj$",        ("fsdp", "ssm_inner")),
+    (r"ssm/conv_w$",         (None, "ssm_inner")),
+    (r"ssm/conv_b$",         ("ssm_inner",)),
+    (r"ssm/x_proj$",         ("ssm_inner", None)),
+    (r"ssm/dt_proj$",        (None, "ssm_inner")),
+    (r"ssm/dt_bias$",        ("ssm_inner",)),
+    (r"ssm/a_log$",          ("ssm_inner", None)),
+    (r"ssm/d_skip$",         ("ssm_inner",)),
+    (r"ssm/out_proj$",       ("ssm_inner", "fsdp")),
+    # norms: replicated
+    (r"ln[^/]*/(scale|bias)$", ()),
+)
+
+# Expert tensors carry a leading E axis before the dense-MLP layout.
+_MOE_EXPERT_RULES: tuple[tuple[str, tuple], ...] = (
+    (r"mlp/wi$", ("experts", "fsdp", None)),
+    (r"mlp/wg$", ("experts", "fsdp", None)),
+    (r"mlp/wo$", ("experts", None, "fsdp")),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def logical_axes_for(path_str: str, ndim: int, is_moe_leaf: bool) -> tuple:
+    rules = (_MOE_EXPERT_RULES + _PARAM_RULES) if is_moe_leaf else _PARAM_RULES
+    for pat, axes in rules:
+        if re.search(pat, path_str):
+            if len(axes) == ndim:
+                return axes
+            if len(axes) == ndim - 1:
+                return (None,) + axes          # scanned stack: leading L
+            continue
+    return (None,) * ndim                      # default: replicated
+
+
+def param_specs(params, mesh: Mesh, rules=DEFAULT_RULES, cfg=None):
+    """PartitionSpec pytree matching ``params``."""
+    rules_d = dict(rules)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        # expert tensors: "blocks/mlp/wi" with ndim 3(+1 scan) AND a config
+        # that is MoE — distinguished from dense wi [D, F] by ndim.
+        is_moe = (re.search(r"mlp/w[igo]$", ps) is not None and
+                  "shared" not in ps and leaf.ndim >= 3)
+        axes = logical_axes_for(ps, leaf.ndim, is_moe)
+        return resolve_spec(axes, mesh, rules_d, dims=tuple(leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params, mesh: Mesh, rules=DEFAULT_RULES):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh, rules))
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch_tree, mesh: Mesh, rules=DEFAULT_RULES):
+    """Input batch: shard the leading batch dim over the data axes (and the
+    sequence dim when the rules enable sequence parallelism)."""
+    rules_d = dict(rules)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        nd = getattr(leaf, "ndim", 0)
+        if ps.endswith("pos") or nd == 0:
+            return resolve_spec((), mesh, rules_d)
+        if ps.endswith(("tokens", "labels")):
+            axes = ("batch", "seq")[:nd]
+        elif ps.endswith(("patches", "frames")):
+            axes = ("batch", "seq", "embed")[:nd]
+        else:
+            axes = ("batch",) + (None,) * (nd - 1)
+        return resolve_spec(axes, mesh, rules_d, dims=tuple(leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_specs(cache_tree, mesh: Mesh, rules=DEFAULT_RULES):
+    """Serving caches: stacked [L, B, S, ...]; batch shards over data axes,
+    heads/channels over model. For batch-1 long-context serving the rules
+    map "seq" onto the data axes instead (LONG_CONTEXT_RULES)."""
+    rules_d = dict(rules)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        nd = leaf.ndim
+        if ps.endswith(("/k", "/v", "cross_k", "cross_v")):
+            # head_dim is the fallback TP axis when kv_heads doesn't divide
+            # the model axis (e.g. nemotron's 8 kv heads on 16-way TP);
+            # "seq_kv" maps to "model" only under SERVING_RULES (decode
+            # shards the cache's sequence dim instead — §Perf C it4).
+            axes = (None, "batch", "seq_kv", "kv_heads", "head_dim")
+        elif ps.endswith("c_kv"):
+            axes = (None, "batch", "seq_kv", None)
+        elif ps.endswith("k_rope"):
+            axes = (None, "batch", "seq_kv", None, None)
+        elif ps.endswith("state"):
+            axes = (None, "batch", "ssm_inner", None)
+        elif ps.endswith("conv"):
+            axes = (None, "batch", None, "ssm_inner")
+        else:
+            axes = (None,) * nd
+        axes = axes[:nd] if len(axes) >= nd else axes + (None,) * (nd - len(axes))
+        return resolve_spec(axes, mesh, rules_d, dims=tuple(leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

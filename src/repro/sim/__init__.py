@@ -1,0 +1,5 @@
+from .cyclesim import CycleSim, SimConfig, SimStats, sim_from_design
+from .saturation import saturation_throughput, zero_load_latency
+
+__all__ = ["CycleSim", "SimConfig", "SimStats", "sim_from_design",
+           "saturation_throughput", "zero_load_latency"]

@@ -1,0 +1,7 @@
+from .registry import TOPOLOGIES, topology_edges, diameter_bound
+from .factory import make_design, make_chiplet, grid_placement, hex_placement
+
+__all__ = [
+    "TOPOLOGIES", "topology_edges", "diameter_bound",
+    "make_design", "make_chiplet", "grid_placement", "hex_placement",
+]

@@ -1,0 +1,15 @@
+from .patterns import (
+    random_uniform,
+    transpose,
+    permutation,
+    hotspot,
+    TRAFFIC_PATTERNS,
+    make_traffic,
+)
+from .trace import parse_trace_file, write_trace_file, aggregate_trace
+
+__all__ = [
+    "random_uniform", "transpose", "permutation", "hotspot",
+    "TRAFFIC_PATTERNS", "make_traffic",
+    "parse_trace_file", "write_trace_file", "aggregate_trace",
+]

@@ -1,0 +1,8 @@
+from .optimizer import adamw_init, adamw_update, adafactor_init, adafactor_update
+from .state import TrainState, train_state_specs
+from .step import make_train_step
+
+__all__ = [
+    "adamw_init", "adamw_update", "adafactor_init", "adafactor_update",
+    "TrainState", "train_state_specs", "make_train_step",
+]

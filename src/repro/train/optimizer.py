@@ -1,0 +1,134 @@
+"""Optimizers as pure pytree functions (no external deps).
+
+AdamW is the default; Adafactor (factored second moments) is provided for
+memory-constrained configs — its state for a [m, n] matrix is m+n instead of
+2*m*n, which matters when optimizer states dominate HBM at scale.
+
+Optimizer states inherit the parameter sharding (FSDP): the update is fully
+elementwise, so GSPMD keeps everything local.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: OptConfig, step):
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.learning_rate * jnp.minimum(warm, decay)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(cfg: OptConfig, params, grads, opt_state, step):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.beta1 ** t
+    bc2 = 1.0 - cfg.beta2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m2 = cfg.beta1 * m + (1 - cfg.beta1) * g32
+        v2 = cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(g32)
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p
+        return (p - lr * delta).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v}, {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no first moment)
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params):
+    def one(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+    return {"f": jax.tree.map(one, params)}
+
+
+def adafactor_update(cfg: OptConfig, params, grads, opt_state, step,
+                     decay: float = 0.8):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    beta2 = 1.0 - t ** (-decay)
+
+    def upd(p, g, s):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + 1e-30
+        if p.ndim >= 2:
+            vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            v = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * s["v"] + (1 - beta2) * g2
+            new_s = {"v": v}
+        update = g32 * jax.lax.rsqrt(v + 1e-30)
+        # update clipping (Adafactor's RMS trick)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        p2 = (p - lr * (update + cfg.weight_decay * p)).astype(p.dtype)
+        return p2, new_s
+
+    leaves_p, treedef = jax.tree_util.tree_flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_s = treedef.flatten_up_to(opt_state["f"])
+    out = [upd(p, g, s) for p, g, s in zip(leaves_p, leaves_g, leaves_s)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_f = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return new_params, {"f": new_f}, {"lr": lr, "grad_norm": gnorm}

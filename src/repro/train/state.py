@@ -1,0 +1,52 @@
+"""Train state pytree + sharding specs."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..sharding import DEFAULT_RULES
+from ..sharding.rules import param_specs
+
+TrainState = dict[str, Any]   # {"params", "opt", "step"}
+
+
+def init_train_state(model, optimizer_init, key) -> TrainState:
+    params = model.init_params(key)
+    return {"params": params, "opt": optimizer_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_specs(state: TrainState, mesh: Mesh,
+                      rules=DEFAULT_RULES) -> TrainState:
+    """Optimizer states inherit the parameter specs leaf-by-leaf (they have
+    the same tree paths under opt/m, opt/v or factored shapes)."""
+    p_specs = param_specs(state["params"], mesh, rules)
+
+    def opt_spec(path_spec, leaf_spec_tree, opt_subtree):
+        # factored adafactor states have different ranks: replicate those
+        return jax.tree.map(
+            lambda sp, leaf: sp, leaf_spec_tree, opt_subtree)
+
+    specs: TrainState = {"params": p_specs, "step": P()}
+    opt = state["opt"]
+    opt_specs = {}
+    for k, sub in opt.items():
+        if k in ("m", "v"):
+            opt_specs[k] = p_specs
+        else:
+            # factored states: shard the row/col factors like the leading
+            # parameter dims where shapes line up; replicate otherwise.
+            def fac(path, leaf):
+                return P()
+            opt_specs[k] = jax.tree_util.tree_map_with_path(fac, sub)
+    specs["opt"] = opt_specs
+    return specs
+
+
+def train_state_shardings(state: TrainState, mesh: Mesh,
+                          rules=DEFAULT_RULES):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        train_state_specs(state, mesh, rules))

@@ -1,0 +1,3 @@
+from .hlo import collective_bytes, parse_shape_bytes
+
+__all__ = ["collective_bytes", "parse_shape_bytes"]

@@ -1,0 +1,66 @@
+"""HLO text analysis: collective-traffic accounting for the roofline.
+
+``cost_analysis()`` does not report collective bytes, so we parse the
+compiled HLO module text and sum the *result* shapes of every collective op
+(per-device bytes, since the SPMD module is per-partition):
+
+    %all-reduce.5 = bf16[8,1024]{1,0} all-reduce(...)
+    %ag = (f32[4,128]{1,0}, f32[4,128]{1,0}) all-gather(...)
+
+For all-reduce the result equals the payload; for all-gather the result is
+the post-gather shape (an upper bound on received bytes, (k-1)/k of which
+crosses links); reduce-scatter's result is the post-scatter shard (we count
+the operand instead, matching what the links carry). The roofline divides by
+per-link bandwidth, consistent with the assignment's formula.
+"""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# instruction line: %name = <shape-or-tuple> <op>(...)
+_INSTR_RE = re.compile(
+    r"=\s*(\(.*?\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def parse_shape_bytes(text: str) -> int:
+    """Total bytes of every dtype[dims] shape literal in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind result bytes (per device). '-start' ops are
+    counted; their '-done' halves are skipped (async pairs)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_txt, kind = m.group(1), m.group(2)
+        # avoid double counting async -done ops: the regex matches both
+        # "-start(" and "-done(" suffixes; detect "-done" by look-back.
+        tail = hlo_text[m.end(2):m.end(2) + 6]
+        if tail.startswith("-done"):
+            continue
+        out[kind] += parse_shape_bytes(shape_txt)
+        counts[kind] += 1
+    out["ops"] = counts
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out

@@ -1,0 +1,339 @@
+"""While-loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each computation ONCE — a
+``lax.scan`` over 36 layers contributes a single layer's FLOPs (verified
+experimentally; see EXPERIMENTS.md §Dry-run methodology). Since the whole
+framework leans on scan-over-layers for fast 512-device compiles, we parse
+the compiled HLO text, build the computation call graph, extract while-loop
+trip counts, and multiply:
+
+    total = sum_over_computations( executions(comp) * cost(comp) )
+
+Cost model per computation:
+  flops   — 2 * prod(result_dims) * prod(contracting_dims) per dot op
+            (cheap elementwise flops are ignored: dots dominate by >100x)
+  bytes   — for every materializing instruction in non-fused computations:
+            result bytes + operand bytes (fusion instructions count once;
+            their internals are register-level)
+  collective bytes — result-shape bytes of all-reduce / all-gather /
+            reduce-scatter / all-to-all / collective-permute ops
+
+Execution counts:
+  ENTRY x1; fusion/call/to_apply propagate the caller's count; while bodies
+  multiply by the trip count (the s32 constant compared against in the
+  condition computation — exact for lax.scan/fori_loop lowerings).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# Byte-traffic models for the roofline memory term (the truth on a real TPU
+# lies between; both are reported — see EXPERIMENTS.md §Dry-run methodology):
+#
+# * optimistic ("fused"): only genuine materialization points count — dot /
+#   conv operands+results, copies, cache updates, data movement, and
+#   collectives. Assumes elementwise chains (masks, softmax pieces, norms)
+#   fuse into their producers/consumers, as aggressive TPU fusion or a
+#   Pallas kernel would.
+# * pessimistic ("unfused"): additionally counts every fusion instruction's
+#   operands+results. XLA:CPU wraps single elementwise ops into kLoop
+#   fusions, so this approaches "every op touches HBM".
+_COUNT_BYTES_OPS = {
+    "dot", "convolution", "copy", "transpose", "reshape",
+    "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+    "reduce", "reduce-window", "select-and-scatter", "concatenate",
+    "slice", "pad", "sort", "rng", "rng-bit-generator", "custom-call",
+    "cholesky", "triangular-solve", "fft",
+} | set(_COLLECTIVES)
+_PESSIMISTIC_EXTRA = {"fusion"}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->", re.M)
+# Shape group is permissive: large tuple shapes embed /*index=N*/ comments.
+# The op is the first lowercase word followed by '(' after the '='.
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s*([a-z][a-z0-9\-]*)\(", re.M)
+
+
+@dataclass
+class Instruction:
+    name: str
+    shape: str          # raw shape text (maybe tuple)
+    op: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    by_name: dict = field(default_factory=dict)
+    fused: bool = False       # referenced via calls=/to_apply=
+
+
+def _shape_bytes(shape_txt: str) -> int:
+    total = 0
+    for dtype, dims in re.findall(r"\b([a-z0-9]+)\[([\d,]*)\]", shape_txt):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(shape_txt: str) -> list[int]:
+    m = re.search(r"\[([\d,]*)\]", shape_txt)
+    if not m or not m.group(1):
+        return []
+    return [int(d) for d in m.group(1).split(",")]
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR.match(line.strip()) if ("->" in line and "{" in line
+                                                ) else None
+        if hdr and not line.lstrip().startswith("%param"):
+            cur = Computation(name=hdr.group(2))
+            comps[cur.name] = cur
+            # parameters carry shapes in the header signature
+            for pname, pshape in re.findall(
+                    r"([\w\.\-]+):\s*((?:\([^()]*\))|[a-z0-9]+\[[\d,]*\])",
+                    hdr.group(3)):
+                inst = Instruction(pname, pshape, "parameter", line)
+                cur.instrs.append(inst)
+                cur.by_name[pname] = inst
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if m:
+            inst = Instruction(m.group(1), m.group(2), m.group(3), line)
+            cur.instrs.append(inst)
+            cur.by_name[inst.name] = inst
+        elif line.strip() == "}":
+            cur = None
+    return comps
+
+
+def _call_edges(comp: Computation):
+    """Yield (callee_name, multiplier_kind) for calls from this comp."""
+    for inst in comp.instrs:
+        for kind, pat in (("calls", r"calls=%?([\w\.\-]+)"),
+                          ("to_apply", r"to_apply=%?([\w\.\-]+)")):
+            for callee in re.findall(pat, inst.line):
+                yield callee, "fused", inst
+        m = re.search(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)",
+                      inst.line)
+        if m:
+            yield m.group(1), "while_cond", inst
+            yield m.group(2), "while_body", inst
+        for callee in re.findall(r"(?:true_computation|false_computation|"
+                                 r"branch_computations)=\{?%?([\w\.\-]+)",
+                                 inst.line):
+            yield callee, "fused", inst
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the while condition (= the scan bound)."""
+    best = 1
+    for inst in cond.instrs:
+        if inst.op == "constant":
+            m = re.search(r"constant\((\d+)\)", inst.line)
+            if m:
+                best = max(best, int(m.group(1)))
+        # fusion-wrapped compares keep the constant in the operand list
+        for v in re.findall(r"constant\((\d+)\)", inst.line):
+            best = max(best, int(v))
+    return best
+
+
+def _dot_flops(comp: Computation, inst: Instruction) -> float:
+    result_elems = 1
+    for d in _shape_dims(inst.shape):
+        result_elems *= d
+    # contracting dims come from the lhs operand's shape
+    m = re.search(r"dot\(%?([\w\.\-]+),", inst.line)
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.line)
+    contract = 1
+    if m and cdims and m.group(1) in comp.by_name:
+        lhs_dims = _shape_dims(comp.by_name[m.group(1)].shape)
+        for ci in cdims.group(1).split(","):
+            if ci and int(ci) < len(lhs_dims):
+                contract *= lhs_dims[int(ci)]
+    return 2.0 * result_elems * contract
+
+
+def _conv_flops(comp: Computation, inst: Instruction) -> float:
+    """convolution flops ~= 2 * result_elems * (kernel spatial * in_ch)."""
+    result_elems = 1
+    for d in _shape_dims(inst.shape):
+        result_elems *= d
+    m = re.findall(r"%?([\w\.\-]+)", inst.line.split("convolution(")[-1])
+    kernel = 1
+    if len(m) >= 2 and m[1] in comp.by_name:
+        kd = _shape_dims(comp.by_name[m[1]].shape)
+        for d in kd[:-1]:       # all but output-feature dim (approximation)
+            kernel *= d
+    return 2.0 * result_elems * kernel
+
+
+def _operand_bytes(comp: Computation, inst: Instruction) -> int:
+    ops = re.findall(r"%([\w\.\-]+)", inst.line.split("(", 1)[-1])
+    total = 0
+    for o in ops:
+        if o in comp.by_name:
+            total += _shape_bytes(comp.by_name[o].shape)
+    return total
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0          # optimistic / fused model
+    bytes_accessed_unfused: float = 0.0  # pessimistic model
+    collective_bytes: float = 0.0
+    collective_breakdown: dict = field(default_factory=dict)
+    collective_ops: dict = field(default_factory=dict)
+    while_loops: list = field(default_factory=list)
+
+
+def analyze(hlo: str, exclude_bytes_substring: str | None = None) -> HloCost:
+    """``exclude_bytes_substring``: skip byte accounting for instructions
+    whose metadata op_name contains the substring. Used for interpret-mode
+    Pallas kernels: their emulated internals lower to ordinary HLO that
+    would read as HBM traffic, but on TPU they are VMEM-resident — the
+    caller adds the kernel's true I/O analytically (launch/dryrun.py,
+    variant ssm_fused)."""
+    comps = parse_computations(hlo)
+
+    # mark fused computations (register-level: no byte accounting)
+    fused_names = set()
+    for comp in comps.values():
+        for callee, kind, _ in _call_edges(comp):
+            if kind == "fused" and callee in comps:
+                fused_names.add(callee)
+    for name in fused_names:
+        comps[name].fused = True
+
+    # execution counts: propagate from ENTRY (the last computation in the
+    # module text is ENTRY for scheduled modules; find via "ENTRY" keyword)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry is None or entry not in comps:
+        # fall back: computation that nobody calls
+        called = {c for comp in comps.values()
+                  for c, _, _ in _call_edges(comp)}
+        roots = [c for c in comps if c not in called]
+        entry = roots[-1] if roots else next(iter(comps))
+
+    exec_count: dict[str, float] = {name: 0.0 for name in comps}
+    exec_count[entry] = 1.0
+    # topological-ish propagation: iterate until fixpoint (call graph is a
+    # DAG; bounded passes)
+    for _ in range(len(comps)):
+        changed = False
+        new = {name: 0.0 for name in comps}
+        new[entry] = 1.0
+        for name, comp in comps.items():
+            cnt = exec_count[name]
+            if cnt <= 0:
+                continue
+            for callee, kind, inst in _call_edges(comp):
+                if callee not in comps:
+                    continue
+                if kind == "while_body":
+                    m = re.search(r"condition=%?([\w\.\-]+)", inst.line)
+                    trips = _trip_count(comps[m.group(1)]) if m and \
+                        m.group(1) in comps else 1
+                    new[callee] += cnt * trips
+                elif kind == "while_cond":
+                    m2 = re.search(r"body=%?([\w\.\-]+)", inst.line)
+                    trips = 1
+                    if m2:
+                        mcond = re.search(r"condition=%?([\w\.\-]+)",
+                                          inst.line)
+                        if mcond and mcond.group(1) in comps:
+                            trips = _trip_count(comps[mcond.group(1)])
+                    new[callee] += cnt * (trips + 1)
+                else:
+                    new[callee] += cnt
+        new[entry] = 1.0
+        if any(abs(new[k] - exec_count[k]) > 1e-9 for k in comps):
+            changed = True
+        exec_count = new
+        if not changed:
+            break
+
+    out = HloCost(collective_breakdown={k: 0.0 for k in _COLLECTIVES},
+                  collective_ops={k: 0 for k in _COLLECTIVES})
+    for name, comp in comps.items():
+        cnt = exec_count.get(name, 0.0)
+        if cnt <= 0:
+            continue
+        for inst in comp.instrs:
+            base_op = inst.op
+            if base_op.endswith("-start"):
+                base_op = base_op[:-6]
+            if base_op == "dot":
+                out.flops += cnt * _dot_flops(comp, inst)
+            elif base_op == "convolution":
+                out.flops += cnt * _conv_flops(comp, inst)
+            if base_op in _COLLECTIVES and not inst.op.endswith("-done"):
+                b = _shape_bytes(inst.shape)
+                out.collective_bytes += cnt * b
+                out.collective_breakdown[base_op] += cnt * b
+                out.collective_ops[base_op] += int(cnt)
+            if not comp.fused and not inst.op.endswith("-done"):
+                counted = base_op in _COUNT_BYTES_OPS
+                if (exclude_bytes_substring is not None
+                        and exclude_bytes_substring in inst.line):
+                    counted = False
+                pess = counted or base_op in _PESSIMISTIC_EXTRA
+                if counted or pess:
+                    res_b = _shape_bytes(inst.shape)
+                    if base_op in ("dynamic-slice", "slice", "gather"):
+                        # reads only the slice, not the whole operand
+                        b = cnt * 2 * res_b
+                    elif base_op == "dynamic-update-slice":
+                        # writes (and reads) only the update window
+                        ops_b = [_shape_bytes(comp.by_name[o].shape)
+                                 for o in re.findall(
+                                     r"%([\w\.\-]+)",
+                                     inst.line.split("(", 1)[-1])
+                                 if o in comp.by_name]
+                        b = cnt * 2 * (min(ops_b) if ops_b else res_b)
+                    else:
+                        b = cnt * (res_b + _operand_bytes(comp, inst))
+                    if counted:
+                        out.bytes_accessed += b
+                    if pess:
+                        out.bytes_accessed_unfused += b
+        # record loop info for diagnostics
+        for callee, kind, inst in _call_edges(comp):
+            if kind == "while_body" and callee in comps:
+                m = re.search(r"condition=%?([\w\.\-]+)", inst.line)
+                if m and m.group(1) in comps:
+                    out.while_loops.append(
+                        {"body": callee,
+                         "trips": _trip_count(comps[m.group(1)]),
+                         "caller_count": cnt})
+    return out

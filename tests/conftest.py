@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests and benches must see ONE device (the dry-run sets 512 itself in
+# launch/dryrun.py before any jax import — never globally).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

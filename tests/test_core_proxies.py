@@ -1,0 +1,130 @@
+"""Oracle tests: the JAX proxies must match the scalar paper-literal
+reference implementation on every topology / traffic / routing combination."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    build_graph, step_cost_matrix, evaluate_design, prepare_arrays,
+    average_latency, throughput_proxy, path_cost_doubling, path_cost_minplus,
+)
+from repro.core.latency import routed_diameter
+from repro.core.reference import (
+    latency_reference, throughput_reference, edge_flows_reference,
+)
+from repro.core.throughput import edge_flows, undirected_flows
+from repro.routing import build_routing_table
+from repro.topologies import make_design
+from repro.traffic import make_traffic
+
+TOPOS = ["mesh", "torus", "folded_torus", "flattened_butterfly", "sid_mesh",
+         "hexamesh", "hypercube", "double_butterfly", "kite"]
+PATTERNS = ["random_uniform", "transpose", "permutation", "hotspot"]
+
+
+def _setup(topo, n, pattern, routing="dijkstra_lowest_id", seed=0):
+    design = make_design(topo, n, routing=routing, seed=seed)
+    arrays, g = prepare_arrays(design)
+    traffic = make_traffic(pattern, n, seed=seed)
+    return design, arrays, g, traffic
+
+
+@pytest.mark.parametrize("topo", TOPOS)
+def test_latency_matches_reference(topo):
+    n = 16
+    design, arrays, g, traffic = _setup(topo, n, "random_uniform")
+    ref = latency_reference(g, arrays.next_hop, traffic)
+    got = float(average_latency(arrays.next_hop, arrays.step_cost,
+                                arrays.node_weight, traffic.astype(np.float32)))
+    assert got == pytest.approx(ref, rel=1e-5)
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_latency_matches_reference_patterns(pattern):
+    n = 36
+    design, arrays, g, traffic = _setup("mesh", n, pattern)
+    ref = latency_reference(g, arrays.next_hop, traffic)
+    got = float(average_latency(arrays.next_hop, arrays.step_cost,
+                                arrays.node_weight, traffic.astype(np.float32)))
+    assert got == pytest.approx(ref, rel=1e-5)
+
+
+@pytest.mark.parametrize("topo", TOPOS)
+def test_throughput_matches_reference(topo):
+    n = 16
+    design, arrays, g, traffic = _setup(topo, n, "random_uniform")
+    mh = routed_diameter(arrays.next_hop)
+    ref = throughput_reference(g, arrays.next_hop, traffic)
+    got = float(throughput_proxy(arrays.next_hop, arrays.adj_bw,
+                                 traffic.astype(np.float32), max_hops=mh))
+    assert got == pytest.approx(ref, rel=1e-4)
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+@pytest.mark.parametrize("routing", ["dijkstra_lowest_id", "updown_random"])
+def test_edge_flows_match_reference(pattern, routing):
+    n = 16
+    design, arrays, g, traffic = _setup("torus", n, pattern, routing=routing)
+    mh = routed_diameter(arrays.next_hop)
+    flows = np.asarray(undirected_flows(
+        edge_flows(arrays.next_hop, traffic.astype(np.float32), max_hops=mh)))
+    ref = edge_flows_reference(g, arrays.next_hop, traffic)
+    for (u, v), f in ref.items():
+        assert flows[u, v] == pytest.approx(f, rel=1e-5), (u, v)
+    # No flow on non-edges / unused edges.
+    mask = np.zeros_like(flows, dtype=bool)
+    for (u, v) in ref:
+        mask[u, v] = mask[v, u] = True
+    assert np.allclose(flows[~mask], 0.0, atol=1e-6)
+
+
+def test_minplus_equals_doubling_on_shortest_path_metric():
+    # When routing IS shortest-path w.r.t. the latency metric, path doubling
+    # over the table equals the min-plus APSP cost.
+    n = 25
+    design = make_design("mesh", n, routing="dijkstra_lowest_id",
+                         routing_metric="latency")
+    arrays, g = prepare_arrays(design)
+    sc = np.where(np.isfinite(step_cost_matrix(g)), step_cost_matrix(g), np.inf)
+    import jax.numpy as jnp
+    plat_d = path_cost_doubling(arrays.next_hop, arrays.step_cost,
+                                arrays.node_weight)
+    plat_m = path_cost_minplus(jnp.asarray(sc, jnp.float32),
+                               arrays.node_weight.astype(np.float32))
+    np.testing.assert_allclose(np.asarray(plat_d), np.asarray(plat_m),
+                               rtol=1e-5)
+
+
+def test_evaluate_design_end_to_end():
+    n = 16
+    design = make_design("mesh", n)
+    traffic = make_traffic("random_uniform", n)
+    rep = evaluate_design(design, traffic)
+    assert rep.latency > 0 and np.isfinite(rep.latency)
+    assert rep.throughput > 0 and np.isfinite(rep.throughput)
+    assert rep.area.total_chiplet_area > 74.0 * n
+    assert rep.area.interposer_area >= rep.area.total_chiplet_area
+    assert rep.power.total > 0
+    assert rep.cost.total > 0
+
+
+def test_latency_ordering_mesh_vs_flattened_butterfly():
+    # FB has diameter 2 -> strictly lower average latency than mesh.
+    n = 16
+    traffic = make_traffic("random_uniform", n)
+    lat = {}
+    for topo in ("mesh", "flattened_butterfly"):
+        rep = evaluate_design(make_design(topo, n), traffic)
+        lat[topo] = rep.latency
+    assert lat["flattened_butterfly"] < lat["mesh"]
+
+
+def test_unreachable_pairs_are_inf():
+    import jax.numpy as jnp
+    # 2-node graph with no edges: next_hop = identity-ish.
+    nh = jnp.asarray([[0, 0], [1, 1]], jnp.int32)
+    sc = jnp.zeros((2, 2), jnp.float32)
+    nw = jnp.asarray([3.0, 3.0], jnp.float32)
+    plat = path_cost_doubling(nh, sc, nw)
+    assert np.isinf(np.asarray(plat)[0, 1])
+    assert np.isinf(np.asarray(plat)[1, 0])
+    assert np.asarray(plat)[0, 0] == pytest.approx(3.0)

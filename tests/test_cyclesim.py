@@ -1,0 +1,111 @@
+"""Cycle-simulator tests: zero-load latency == latency proxy (by
+construction on uncontended paths), conservation, saturation ordering."""
+import numpy as np
+import pytest
+
+from repro.core import evaluate_design, prepare_arrays, average_latency
+from repro.sim import SimConfig, saturation_throughput, sim_from_design, zero_load_latency
+from repro.topologies import make_design
+from repro.traffic import make_traffic
+
+
+def _fast_cfg(seed=0, psize=1):
+    return SimConfig(packet_size_flits=psize, warmup_cycles=300,
+                     measure_cycles=1200, drain_cycles=2000, seed=seed)
+
+
+def test_zero_load_latency_matches_proxy_single_flit():
+    """With 1-flit packets and no contention the simulator must agree with
+    the latency proxy to sub-cycle accuracy (rounding of link delays)."""
+    n = 16
+    design = make_design("mesh", n)
+    traffic = make_traffic("random_uniform", n)
+    sim = sim_from_design(design, traffic, _fast_cfg())
+    st = zero_load_latency(sim, rate=0.004)
+    assert st.packets_measured > 30
+    rep = evaluate_design(design, traffic)
+    # rounding: every link latency is rinted to int cycles; tolerance 1 cycle
+    # per hop (~4 hops avg) plus sampling noise.
+    assert st.avg_packet_latency == pytest.approx(rep.latency, rel=0.08)
+
+
+def test_zero_load_latency_transpose_tight():
+    n = 16
+    design = make_design("torus", n)
+    traffic = make_traffic("transpose", n)
+    sim = sim_from_design(design, traffic, _fast_cfg(seed=3))
+    st = zero_load_latency(sim, rate=0.004)
+    rep = evaluate_design(design, traffic)
+    assert st.avg_packet_latency == pytest.approx(rep.latency, rel=0.08)
+
+
+def test_multiflit_serialization_adds_latency():
+    n = 9
+    design = make_design("mesh", n)
+    traffic = make_traffic("random_uniform", n)
+    s1 = zero_load_latency(sim_from_design(design, traffic, _fast_cfg(psize=1)),
+                           rate=0.004)
+    s4 = zero_load_latency(sim_from_design(design, traffic, _fast_cfg(psize=4)),
+                           rate=0.004)
+    # tail flit trails the head by (psize-1) cycles at zero load
+    assert s4.avg_packet_latency > s1.avg_packet_latency + 2.0
+
+
+def test_accepted_tracks_offered_below_saturation():
+    n = 16
+    design = make_design("torus", n)
+    traffic = make_traffic("random_uniform", n)
+    sim = sim_from_design(design, traffic, _fast_cfg(seed=1))
+    st = sim.run(0.05)
+    assert st.stable
+    assert st.accepted_flits_per_node == pytest.approx(
+        st.offered_flits_per_node, rel=0.1)
+
+
+def test_overload_is_unstable():
+    n = 16
+    design = make_design("mesh", n)
+    traffic = make_traffic("hotspot", n, seed=0)
+    sim = sim_from_design(design, traffic, _fast_cfg(seed=1, psize=4))
+    st = sim.run(0.9)
+    # hotspot ejection port limits throughput far below 0.9 flits/node/cycle
+    assert (not st.stable) or st.avg_packet_latency > 200
+
+
+def test_saturation_ordering_mesh_torus_fb():
+    """More bisection bandwidth -> higher saturation point."""
+    n = 16
+    traffic = make_traffic("random_uniform", n)
+    sat = {}
+    for topo in ("mesh", "flattened_butterfly"):
+        design = make_design(topo, n)
+        cfg = SimConfig(packet_size_flits=2, warmup_cycles=200,
+                        measure_cycles=800, drain_cycles=1500, seed=0)
+        sim = sim_from_design(design, traffic, cfg)
+        sat[topo], _ = saturation_throughput(sim, cfg)
+    assert sat["flattened_butterfly"] > sat["mesh"]
+
+
+def test_saturation_search_schedule_counts():
+    """The search must follow the 10% -> 1% -> 0.1% refinement schedule."""
+    calls = []
+
+    class FakeSim:
+        cfg = SimConfig()
+
+        def run(self, rate, cfg=None):
+            calls.append(round(rate, 4))
+            from repro.sim.cyclesim import SimStats
+            stable = rate <= 0.123
+            return SimStats(avg_packet_latency=10.0 if stable else 1e9,
+                            avg_head_latency=10.0,
+                            offered_flits_per_node=rate,
+                            accepted_flits_per_node=rate if stable else 0.0,
+                            packets_measured=100, stable=stable)
+
+    sat, sims = saturation_throughput(FakeSim())
+    assert sat == pytest.approx(0.123)
+    # paper example: 0.005 (zero load) + 10,20 + 11,12,13 + 12.1..12.4
+    assert calls == [0.005, 0.1, 0.2, 0.11, 0.12, 0.13,
+                     pytest.approx(0.121), pytest.approx(0.122),
+                     pytest.approx(0.123), pytest.approx(0.124)]

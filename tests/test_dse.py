@@ -1,0 +1,79 @@
+"""DSE engine tests: batched evaluation == per-design evaluation, sweep
+expansion, checkpoint/resume, pareto fronts."""
+import numpy as np
+import pytest
+
+from repro.core import evaluate_design
+from repro.dse import (
+    DseEngine, ExperimentSpec, expand_experiments, encode_designs, pareto_front,
+)
+
+
+def test_expand_cartesian():
+    spec = ExperimentSpec(topologies=("mesh", "torus"), chiplet_counts=(9, 16),
+                          traffic_patterns=("random_uniform", "transpose"))
+    pts = expand_experiments(spec)
+    assert len(pts) == 8
+    assert len({p.index for p in pts}) == 8
+
+
+def test_expand_shg_bits():
+    spec = ExperimentSpec(topologies=("shg",), chiplet_counts=(16,),
+                          shg_bits=tuple(range(16)))
+    pts = expand_experiments(spec)
+    assert len(pts) == 16
+
+
+def test_batched_matches_single():
+    spec = ExperimentSpec(topologies=("mesh", "torus", "flattened_butterfly"),
+                          chiplet_counts=(9, 16),
+                          traffic_patterns=("random_uniform", "hotspot"))
+    pts = expand_experiments(spec)
+    engine = DseEngine(chunk_size=64)
+    res = engine.run(pts)
+    for i, pt in enumerate(pts):
+        rep = evaluate_design(pt.build(), pt.traffic())
+        assert res.latency[i] == pytest.approx(rep.latency, rel=1e-4), pt
+        assert res.throughput[i] == pytest.approx(rep.throughput, rel=1e-3), pt
+
+
+def test_mixed_size_padding():
+    # designs of different node counts in one batch must still be exact
+    spec = ExperimentSpec(topologies=("mesh",), chiplet_counts=(9, 25, 36))
+    pts = expand_experiments(spec)
+    batch = encode_designs(pts)
+    assert batch.n == 36
+    engine = DseEngine()
+    res = engine.evaluate_batch(batch)
+    for i, pt in enumerate(pts):
+        rep = evaluate_design(pt.build(), pt.traffic())
+        assert res.latency[i] == pytest.approx(rep.latency, rel=1e-4)
+        assert res.throughput[i] == pytest.approx(rep.throughput, rel=1e-3)
+
+
+def test_checkpoint_resume(tmp_path):
+    ckpt = str(tmp_path / "sweep.jsonl")
+    spec = ExperimentSpec(topologies=("mesh",), chiplet_counts=(9, 16, 25))
+    pts = expand_experiments(spec)
+    e1 = DseEngine(chunk_size=2, checkpoint_path=ckpt)
+    r1 = e1.run(pts[:2])
+    # new engine resumes: already-done points must not be recomputed
+    e2 = DseEngine(chunk_size=2, checkpoint_path=ckpt)
+    assert set(e2._done) == {0, 1}
+    r2 = e2.run(pts)
+    np.testing.assert_allclose(r2.latency[:2], r1.latency, rtol=1e-6)
+    assert np.isfinite(r2.latency).all()
+
+
+def test_pareto_front_simple():
+    lat = np.asarray([1.0, 2.0, 3.0, 1.5])
+    thr = np.asarray([0.1, 0.5, 0.4, 0.1])
+    front = pareto_front(lat, thr)
+    assert list(front) == [0, 1]
+
+
+def test_pareto_front_with_mask():
+    lat = np.asarray([1.0, 2.0])
+    thr = np.asarray([0.1, 0.9])
+    front = pareto_front(lat, thr, mask=np.asarray([True, False]))
+    assert list(front) == [0]

@@ -1,0 +1,147 @@
+"""Geometry + topology generator tests."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import build_graph, validate_design
+from repro.core.geometry import (
+    check_overlaps, interposer_area, link_lengths, phy_positions, rotate_phy,
+)
+from repro.topologies import make_design, topology_edges, TOPOLOGIES
+from repro.topologies.grid import fold_order, grid_dims, shg_from_bits
+
+
+def test_rotate_phy_cycles():
+    w, h = 4.0, 2.0
+    p = (1.0, 0.5)
+    # 4x90 degrees = identity
+    x, y = p
+    cw, ch = w, h
+    for _ in range(4):
+        x, y = rotate_phy(x, y, cw, ch, 90)
+        cw, ch = ch, cw
+    assert (x, y) == pytest.approx(p)
+
+
+def test_rotation_preserves_footprint_containment():
+    for rot in (0, 90, 180, 270):
+        x, y = rotate_phy(3.0, 1.0, 4.0, 2.0, rot)
+        fw, fh = (2.0, 4.0) if rot % 180 == 90 else (4.0, 2.0)
+        assert 0 <= x <= fw and 0 <= y <= fh
+
+
+@pytest.mark.parametrize("topo", sorted(TOPOLOGIES))
+def test_generated_designs_validate(topo):
+    n = 16
+    design = make_design(topo, n)
+    validate_design(design)                      # no exception
+    assert not check_overlaps(design)            # no overlapping chiplets
+    g = build_graph(design)
+    deg = g.degree()
+    assert (deg[:n] >= 1).all()                  # no isolated chiplets
+    # connectivity: BFS reaches everything
+    adj = np.isfinite(g.adj_lat)
+    seen = {0}
+    frontier = [0]
+    while frontier:
+        nxt = []
+        for u in frontier:
+            for v in np.nonzero(adj[u])[0]:
+                if int(v) not in seen:
+                    seen.add(int(v))
+                    nxt.append(int(v))
+        frontier = nxt
+    assert len(seen) == g.n, f"{topo}: disconnected"
+
+
+def test_mesh_edge_count():
+    r, c = 4, 4
+    edges = topology_edges("mesh", 16)
+    assert len(edges) == r * (c - 1) + c * (r - 1)
+
+
+def test_torus_edge_count():
+    edges = topology_edges("torus", 16)
+    assert len(edges) == 2 * 16
+
+
+def test_flattened_butterfly_edge_count():
+    r, c = grid_dims(16)
+    edges = topology_edges("flattened_butterfly", 16)
+    assert len(edges) == r * (c * (c - 1) // 2) + c * (r * (r - 1) // 2)
+
+
+def test_hypercube_requires_power_of_two():
+    with pytest.raises(ValueError):
+        topology_edges("hypercube", 12)
+    edges = topology_edges("hypercube", 16)
+    assert len(edges) == 16 * 4 // 2
+
+
+def test_fold_order_adjacent_slots_close():
+    for k in (4, 5, 8, 9):
+        slots = fold_order(k)
+        assert sorted(slots) == list(range(k))
+        for l in range(k):
+            a, b = slots[l], slots[(l + 1) % k]
+            assert abs(a - b) <= 2, (k, l)
+
+
+def test_folded_torus_links_short():
+    n = 36
+    design = make_design("folded_torus", n)
+    lengths = link_lengths(design)
+    pitch = design.chiplet_library[0].width + 1.0
+    # every link spans at most 2 grid pitches (plus PHY offsets)
+    assert lengths.max() <= 2 * pitch + 2 * design.chiplet_library[0].width
+    # plain torus has strictly longer max links (the wraparound)
+    d2 = make_design("torus", n)
+    assert link_lengths(d2).max() > lengths.max()
+
+
+def test_shg_family_endpoints():
+    # bits=0 -> mesh; all-ones -> flattened butterfly
+    r, c = 5, 5
+    n = 25
+    mesh_edges = set(map(tuple, topology_edges("mesh", n)))
+    fb_edges = set(map(tuple, topology_edges("flattened_butterfly", n)))
+    assert set(map(tuple, shg_from_bits(r, c, 0))) == mesh_edges
+    all_bits = (1 << (r + c - 4)) - 1
+    assert set(map(tuple, shg_from_bits(r, c, all_bits))) == fb_edges
+
+
+def test_shg_parametrization_count():
+    # 10x10 grid -> 2^16 parametrizations (paper §4)
+    r, c = 10, 10
+    assert 2 ** (r + c - 4) == 65536
+
+
+def test_interposer_area_is_bounding_box():
+    design = make_design("mesh", 16)
+    a = interposer_area(design)
+    ch = design.chiplet_library[0]
+    pitch = ch.width + 1.0
+    expect = (3 * pitch + ch.width) ** 2
+    assert a == pytest.approx(expect)
+
+
+def test_phy_positions_on_perimeter():
+    design = make_design("flattened_butterfly", 16)   # radix 6 -> perimeter
+    ch = design.chiplet_library[0]
+    for phy in ch.phys:
+        on_edge = (phy.x in (0.0, ch.width) or phy.y in (0.0, ch.height)
+                   or math.isclose(phy.x, ch.width) or math.isclose(phy.y, ch.height)
+                   or phy.x == 0 or phy.y == 0)
+        assert on_edge
+
+
+def test_router_topologies_have_routers():
+    design = make_design("kite", 16)
+    assert design.n_routers == 16
+    g = build_graph(design)
+    assert g.n == 32
+    # chiplet i attaches only to router i
+    for i in range(16):
+        nbrs = np.nonzero(np.isfinite(g.adj_lat[i]))[0]
+        assert list(nbrs) == [16 + i]

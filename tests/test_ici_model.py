@@ -1,0 +1,63 @@
+"""TPU-pod ICI model tests: the paper's proxies applied to the pod itself."""
+import numpy as np
+import pytest
+
+from repro.core.ici_model import (
+    analytic_collective_time, collective_traffic, estimate_collective,
+    tpu_pod_design, TPU_V5E_ICI_LINK_BW,
+)
+
+
+def test_pod_design_is_torus():
+    design, arrays, g = tpu_pod_design(4, 4)
+    assert g.n == 16
+    deg = g.degree()
+    assert (deg == 4).all()            # torus: every chip has 4 links
+    assert (g.adj_bw[np.isfinite(g.adj_lat)] == TPU_V5E_ICI_LINK_BW).all()
+
+
+def test_collective_traffic_ring_volume():
+    rows = cols = 4
+    b = 1e9
+    t = collective_traffic("all_gather", rows, cols, "data", b)
+    # each of the 4 rings sends (k-1)/k*b per neighbor hop, k hops
+    k = cols
+    expect = rows * k * b * (k - 1) / k
+    assert t.sum() == pytest.approx(expect)
+
+
+def test_ring_allgather_proxy_matches_analytic_on_torus():
+    # On a torus, the ring all-gather's neighbor traffic maps perfectly onto
+    # physical links: the proxy must reproduce the analytic ring time.
+    b = 4e9
+    est = estimate_collective("all_gather", "data", b, rows=4, cols=4)
+    assert est.proxy_s == pytest.approx(est.analytic_s, rel=1e-6)
+    assert est.proxy_sustained_fraction == pytest.approx(1.0)
+
+
+def test_allreduce_twice_allgather():
+    b = 1e9
+    ag = analytic_collective_time("all_gather", b, 16)
+    ar = analytic_collective_time("all_reduce", b, 16)
+    assert ar == pytest.approx(2 * ag)
+
+
+def test_mesh_worse_than_torus_for_rings():
+    # Without wraparound the ring's closing hop must be relayed across the
+    # whole row: the proxy should predict a slower collective on a mesh.
+    b = 4e9
+    est_torus = estimate_collective("all_gather", "data", b, rows=4, cols=4,
+                                    wrap=True)
+    est_mesh = estimate_collective("all_gather", "data", b, rows=4, cols=4,
+                                   wrap=False)
+    # the closing hops of both half-rings relay across the row: 2x slower
+    assert est_mesh.proxy_s == pytest.approx(2 * est_torus.proxy_s, rel=0.2)
+
+
+def test_all_to_all_congestion_detected():
+    # all-to-all within rings congests middle links; proxy time must be
+    # >= the per-link lower bound.
+    b = 8e9
+    est = estimate_collective("all_to_all", "data", b, rows=4, cols=4)
+    assert est.proxy_s > 0
+    assert np.isfinite(est.proxy_s)

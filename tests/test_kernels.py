@@ -1,0 +1,198 @@
+"""Per-kernel tests: sweep shapes/dtypes and assert_allclose against the
+pure-jnp oracles (interpret mode executes the Pallas kernel body on CPU)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (
+    flow_accumulate, flow_accumulate_ref, minplus_matmul, minplus_ref,
+)
+from repro.kernels.ref import BIG
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.uniform(0.0, 50.0, shape), dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 8, 128), (16, 32, 128), (100, 100, 100), (128, 128, 128),
+    (130, 70, 200), (1, 1, 1), (256, 256, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_minplus_shapes(m, k, n, dtype):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    a = _rand(rng, (m, k), dtype)
+    b = _rand(rng, (k, n), dtype)
+    got = minplus_matmul(a, b)
+    want = minplus_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("batch", [1, 3])
+def test_minplus_batched(batch):
+    rng = np.random.default_rng(0)
+    a = _rand(rng, (batch, 60, 60), jnp.float32)
+    b = _rand(rng, (batch, 60, 60), jnp.float32)
+    got = minplus_matmul(a, b)
+    want = minplus_ref(a, b)
+    assert got.shape == (batch, 60, 60)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_minplus_with_inf_padding_semantics():
+    # BIG entries (disconnected) must never produce spurious short paths.
+    a = jnp.asarray([[0.0, BIG], [BIG, 0.0]], jnp.float32)
+    b = jnp.asarray([[1.0, BIG], [BIG, 5.0]], jnp.float32)
+    got = np.asarray(minplus_matmul(a, b))
+    want = np.asarray(minplus_ref(a, b))
+    np.testing.assert_allclose(got, want)
+
+
+def test_minplus_block_sweep():
+    rng = np.random.default_rng(7)
+    a = _rand(rng, (64, 64), jnp.float32)
+    b = _rand(rng, (64, 64), jnp.float32)
+    want = np.asarray(minplus_ref(a, b))
+    for bm, bn, bk in [(8, 128, 8), (16, 128, 16), (32, 128, 32), (64, 128, 64)]:
+        got = np.asarray(minplus_matmul(a, b, bm=bm, bn=bn, bk=bk))
+        np.testing.assert_allclose(got, want, rtol=1e-6, err_msg=f"{bm},{bn},{bk}")
+
+
+def test_minplus_identity():
+    # min-plus identity: diagonal 0, off-diagonal +inf
+    rng = np.random.default_rng(1)
+    a = _rand(rng, (40, 40), jnp.float32)
+    eye = jnp.where(jnp.eye(40, dtype=bool), 0.0, BIG).astype(jnp.float32)
+    got = np.asarray(minplus_matmul(a, eye))
+    np.testing.assert_allclose(got, np.asarray(a), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,p", [(8, 64), (16, 100), (100, 10000), (128, 512),
+                                 (9, 81), (2, 4)])
+def test_flow_accum_shapes(n, p):
+    rng = np.random.default_rng(n * 17 + p)
+    flow = jnp.asarray(rng.uniform(0, 5, (n, n)), jnp.float32)
+    cur = jnp.asarray(rng.integers(0, n, p), jnp.int32)
+    nxt = jnp.asarray(rng.integers(0, n, p), jnp.int32)
+    amt = jnp.asarray(rng.uniform(0, 2, p), jnp.float32)
+    got = flow_accumulate(flow, cur, nxt, amt)
+    want = flow_accumulate_ref(flow, cur, nxt, amt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_flow_accum_batched():
+    rng = np.random.default_rng(3)
+    B, n, p = 4, 20, 400
+    flow = jnp.asarray(rng.uniform(0, 5, (B, n, n)), jnp.float32)
+    cur = jnp.asarray(rng.integers(0, n, (B, p)), jnp.int32)
+    nxt = jnp.asarray(rng.integers(0, n, (B, p)), jnp.int32)
+    amt = jnp.asarray(rng.uniform(0, 2, (B, p)), jnp.float32)
+    got = flow_accumulate(flow, cur, nxt, amt)
+    want = flow_accumulate_ref(flow, cur, nxt, amt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_flow_accum_zero_amount_is_noop():
+    rng = np.random.default_rng(5)
+    n, p = 16, 200
+    flow = jnp.asarray(rng.uniform(0, 5, (n, n)), jnp.float32)
+    cur = jnp.asarray(rng.integers(0, n, p), jnp.int32)
+    nxt = jnp.asarray(rng.integers(0, n, p), jnp.int32)
+    amt = jnp.zeros((p,), jnp.float32)
+    got = flow_accumulate(flow, cur, nxt, amt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(flow), rtol=1e-6)
+
+
+def test_flow_accum_duplicate_pairs_sum():
+    # multiple pairs hitting the same edge must sum (the atomic-add semantics)
+    n = 4
+    flow = jnp.zeros((n, n), jnp.float32)
+    cur = jnp.asarray([1, 1, 1, 2], jnp.int32)
+    nxt = jnp.asarray([2, 2, 2, 3], jnp.int32)
+    amt = jnp.asarray([1.0, 2.0, 3.0, 4.0], jnp.float32)
+    got = np.asarray(flow_accumulate(flow, cur, nxt, amt))
+    assert got[1, 2] == pytest.approx(6.0)
+    assert got[2, 3] == pytest.approx(4.0)
+    assert got.sum() == pytest.approx(10.0)
+
+
+def test_kernel_backed_throughput_matches_reference():
+    """End-to-end: throughput proxy with use_kernel=True == scalar reference."""
+    from repro.core import prepare_arrays, throughput_proxy
+    from repro.core.latency import routed_diameter
+    from repro.core.reference import throughput_reference
+    from repro.topologies import make_design
+    from repro.traffic import make_traffic
+
+    n = 16
+    design = make_design("torus", n)
+    arrays, g = prepare_arrays(design)
+    traffic = make_traffic("hotspot", n, seed=2)
+    mh = routed_diameter(arrays.next_hop)
+    ref = throughput_reference(g, arrays.next_hop, traffic)
+    got = float(throughput_proxy(arrays.next_hop, arrays.adj_bw,
+                                 traffic.astype(np.float32), max_hops=mh,
+                                 use_kernel=True))
+    assert got == pytest.approx(ref, rel=1e-4)
+
+
+def test_kernel_backed_minplus_latency_matches():
+    """path_cost_minplus(use_kernel=True) == pure-jnp variant."""
+    from repro.core import path_cost_minplus, prepare_arrays, step_cost_matrix
+    from repro.core.graph import build_graph
+    from repro.topologies import make_design
+
+    design = make_design("mesh", 16, routing_metric="latency")
+    g = build_graph(design)
+    sc = step_cost_matrix(g)
+    sc = jnp.asarray(np.where(np.isfinite(sc), sc, np.inf), jnp.float32)
+    nw = jnp.asarray(g.node_weight, jnp.float32)
+    a = np.asarray(path_cost_minplus(sc, nw, use_kernel=False))
+    b = np.asarray(path_cost_minplus(sc, nw, use_kernel=True))
+    np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+@pytest.mark.parametrize("n,batch", [(16, 1), (40, 3), (100, 2), (128, 1)])
+def test_apsp_fused_matches_floyd_warshall(n, batch):
+    from repro.kernels.ops import apsp
+
+    rng = np.random.default_rng(n + batch)
+    outs, wants = [], []
+    ds = []
+    for b in range(batch):
+        adj = np.full((n, n), np.inf)
+        perm = rng.permutation(n)
+        for i in range(1, n):                      # random connected graph
+            j = perm[rng.integers(0, i)]
+            w = rng.uniform(0.5, 5.0)
+            adj[perm[i], j] = adj[j, perm[i]] = w
+        for _ in range(n):
+            u, v = rng.integers(0, n, 2)
+            if u != v:
+                w = rng.uniform(0.5, 5.0)
+                adj[u, v] = adj[v, u] = min(adj[u, v], w)
+        ds.append(adj)
+        fw = np.where(np.isfinite(adj), adj, np.inf)
+        np.fill_diagonal(fw, 0.0)
+        for k in range(n):
+            fw = np.minimum(fw, fw[:, k:k + 1] + fw[k:k + 1, :])
+        wants.append(fw)
+    got = np.asarray(apsp(jnp.asarray(np.stack(ds), jnp.float32)))
+    np.testing.assert_allclose(got, np.stack(wants).astype(np.float32),
+                               rtol=1e-4)
+
+
+def test_apsp_disconnected_stays_inf():
+    from repro.kernels.ops import apsp
+
+    d = np.full((4, 4), np.inf)
+    d[0, 1] = d[1, 0] = 1.0
+    d[2, 3] = d[3, 2] = 2.0
+    out = np.asarray(apsp(jnp.asarray(d, jnp.float32)))
+    assert np.isinf(out[0, 2]) and np.isinf(out[1, 3])
+    assert out[0, 1] == pytest.approx(1.0)
+    assert out[2, 3] == pytest.approx(2.0)

@@ -1,0 +1,188 @@
+"""Per-architecture smoke tests: a REDUCED config of the same family runs a
+forward pass + one train step + one decode step on CPU, asserting output
+shapes and the absence of NaNs."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import Model, ShapeSpec, make_inputs, reduced, shape_applicable
+
+
+def _smoke_shape(cfg, kind):
+    s = 64 + (cfg.n_image_tokens if cfg.family == "vlm" else 0)
+    if kind == "train":
+        return ShapeSpec("smoke_train", s, 2, "train")
+    if kind == "decode":
+        return ShapeSpec("smoke_decode", 96, 2, "decode")
+    return ShapeSpec("smoke_prefill", s, 2, "prefill")
+
+
+@pytest.fixture(scope="module")
+def models():
+    return {}
+
+
+def _build(models, arch):
+    if arch not in models:
+        cfg = reduced(get_config(arch))
+        model = Model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        models[arch] = (cfg, model, params)
+    return models[arch]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(models, arch):
+    cfg, model, params = _build(models, arch)
+    spec = _smoke_shape(cfg, "train")
+    batch = make_inputs(cfg, spec, seed=1)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss)), arch
+    assert float(loss) > 0
+    # CE of a random init should be near log(vocab)
+    assert float(metrics["ce"]) < np.log(cfg.vocab_size) * 2
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_no_nans(models, arch):
+    cfg, model, params = _build(models, arch)
+    spec = _smoke_shape(cfg, "train")
+    batch = make_inputs(cfg, spec, seed=2)
+
+    @jax.jit
+    def step(p, b):
+        (l, m), g = jax.value_and_grad(model.loss, has_aux=True)(p, b)
+        p2 = jax.tree.map(lambda w, gw: w - 1e-3 * gw, p, g)
+        return l, p2, g
+
+    loss, p2, grads = step(params, batch)
+    assert np.isfinite(float(loss)), arch
+    flat, _ = jax.tree_util.tree_flatten(grads)
+    for gv in flat:
+        assert np.all(np.isfinite(np.asarray(gv))), arch
+    # at least one gradient must be nonzero
+    assert any(float(jnp.abs(gv).max()) > 0 for gv in flat), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(models, arch):
+    cfg, model, params = _build(models, arch)
+    spec = _smoke_shape(cfg, "decode")
+    b, s = spec.global_batch, spec.seq_len
+    cache = model.init_cache(b, s)
+    tokens = jnp.asarray(np.full((b, 1), 3), jnp.int32)
+    extra = {}
+    if cfg.family == "encdec":
+        # populate cross KV from a stub encoder pass
+        frames = jnp.zeros((b, cfg.n_audio_frames, cfg.d_model),
+                           cfg.compute_dtype)
+        enc_out, _ = model._encode(params, frames)
+        import jax.numpy as _j
+        dt = cfg.compute_dtype
+
+        def cross_kv(p):
+            k = _j.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"].astype(dt))
+            v = _j.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"].astype(dt))
+            return k, v
+        ks, vs = jax.vmap(cross_kv, in_axes=0)(params["blocks"]) \
+            if False else (None, None)
+        # vmap over stacked layer params: use tree slicing instead
+        ks = _j.stack([
+            _j.einsum("bsd,dhk->bshk", enc_out,
+                      jax.tree.map(lambda x: x[i], params["blocks"])["cross"]["wk"].astype(dt))
+            for i in range(cfg.n_layers)])
+        vs = _j.stack([
+            _j.einsum("bsd,dhk->bshk", enc_out,
+                      jax.tree.map(lambda x: x[i], params["blocks"])["cross"]["wv"].astype(dt))
+            for i in range(cfg.n_layers)])
+        cache["cross_k"] = ks
+        cache["cross_v"] = vs
+
+    @jax.jit
+    def step(p, c, t, pos):
+        return model.decode_step(p, c, t, pos)
+
+    logits, cache2 = step(params, cache, tokens, jnp.asarray(5, jnp.int32))
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    # a second step at the next position must also work
+    logits2, _ = step(params, cache2, tokens, jnp.asarray(6, jnp.int32))
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+
+
+def test_decode_matches_forward_gqa():
+    """Token-by-token decode must reproduce the full forward logits."""
+    cfg = reduced(get_config("qwen2.5-3b"), attn_chunk_q=0)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    b, s = 2, 12
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+
+    x, _ = model.forward(params, tokens)
+    from repro.models import layers as L
+    full_logits = np.asarray(
+        L.unembed(params["unembed"], x, 0.0), np.float32)
+
+    cache = model.init_cache(b, s)
+    dec_logits = []
+    for t in range(s):
+        lg, cache = model.decode_step(params, cache, tokens[:, t:t + 1],
+                                      jnp.asarray(t, jnp.int32))
+        dec_logits.append(np.asarray(lg[:, 0], np.float32))
+    dec_logits = np.stack(dec_logits, axis=1)
+    np.testing.assert_allclose(dec_logits, full_logits, rtol=0.05, atol=0.05)
+
+
+def test_decode_matches_forward_ssm():
+    cfg = reduced(get_config("falcon-mamba-7b"), ssm_chunk=4)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(1)
+    b, s = 2, 8
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    x, _ = model.forward(params, tokens)
+    from repro.models import layers as L
+    full_logits = np.asarray(L.unembed(params["unembed"], x, 0.0), np.float32)
+    cache = model.init_cache(b, s)
+    dec = []
+    for t in range(s):
+        lg, cache = model.decode_step(params, cache, tokens[:, t:t + 1],
+                                      jnp.asarray(t, jnp.int32))
+        dec.append(np.asarray(lg[:, 0], np.float32))
+    dec = np.stack(dec, axis=1)
+    np.testing.assert_allclose(dec, full_logits, rtol=0.05, atol=0.05)
+
+
+def test_flash_attention_matches_plain():
+    from repro.models.layers import attention_scores, flash_attention
+    rng = np.random.default_rng(3)
+    b, s, h, dh = 2, 96, 4, 16
+    q = jnp.asarray(rng.normal(0, 1, (b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, h, dh)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    for causal in (True, False):
+        for window in (0, 24):
+            a = attention_scores(q, k, v, pos, pos, causal=causal,
+                                 window=window)
+            f = flash_attention(q, k, v, pos, pos, causal=causal,
+                                window=window, block_q=32, block_kv=32)
+            np.testing.assert_allclose(np.asarray(a), np.asarray(f),
+                                       rtol=2e-3, atol=2e-3,
+                                       err_msg=f"causal={causal} win={window}")
+
+
+def test_param_counts_match_config_estimate():
+    for arch in ("qwen2.5-3b", "olmoe-1b-7b", "falcon-mamba-7b"):
+        cfg = reduced(get_config(arch))
+        model = Model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(x.shape))
+                     for x in jax.tree_util.tree_leaves(params))
+        est = cfg.n_params()
+        # estimate ignores norms/biases/pos-embeds: within 20%
+        assert abs(actual - est) / actual < 0.2, (arch, actual, est)

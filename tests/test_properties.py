@@ -1,0 +1,137 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    path_cost_doubling, path_cost_minplus, prepare_arrays, throughput_proxy,
+)
+from repro.core.latency import minplus_ref, routed_diameter
+from repro.core.reference import latency_reference
+from repro.core import average_latency
+from repro.routing import channel_dependency_cycle, updown_random_table
+from repro.topologies import make_design
+from repro.traffic import make_traffic
+
+
+@st.composite
+def random_connected_graph(draw, max_n=12):
+    n = draw(st.integers(min_value=3, max_value=max_n))
+    seed = draw(st.integers(min_value=0, max_value=2 ** 31 - 1))
+    rng = np.random.default_rng(seed)
+    # random spanning tree + extra edges
+    adj = np.zeros((n, n), dtype=bool)
+    perm = rng.permutation(n)
+    for i in range(1, n):
+        j = perm[rng.integers(0, i)]
+        adj[perm[i], j] = adj[j, perm[i]] = True
+    extra = draw(st.integers(min_value=0, max_value=n))
+    for _ in range(extra):
+        u, v = rng.integers(0, n, 2)
+        if u != v:
+            adj[u, v] = adj[v, u] = True
+    w = rng.uniform(0.5, 5.0, (n, n))
+    w = (w + w.T) / 2
+    lat = np.where(adj, w, np.inf)
+    nw = rng.uniform(1.0, 4.0, n)
+    return n, lat, nw, seed
+
+
+@given(random_connected_graph())
+@settings(max_examples=25, deadline=None)
+def test_minplus_matches_floyd_warshall(data):
+    n, lat, nw, _ = data
+    step = nw[:, None] + lat
+    got = np.asarray(path_cost_minplus(
+        jnp.asarray(np.where(np.isfinite(step), step, np.inf), jnp.float32),
+        jnp.asarray(nw, jnp.float32)))
+    # Floyd-Warshall oracle on the same step-cost semiring
+    d = np.where(np.isfinite(step), step, np.inf)
+    np.fill_diagonal(d, 0.0)
+    for k in range(n):
+        d = np.minimum(d, d[:, k:k + 1] + d[k:k + 1, :])
+    want = d + nw[None, :]
+    np.testing.assert_allclose(got, want.astype(np.float32), rtol=1e-4)
+
+
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=2, max_value=5))
+@settings(max_examples=20, deadline=None)
+def test_minplus_associative(seed, n):
+    rng = np.random.default_rng(seed)
+    a, b, c = (jnp.asarray(rng.uniform(0, 9, (n, n)), jnp.float32)
+               for _ in range(3))
+    left = minplus_ref(minplus_ref(a, b), c)
+    right = minplus_ref(a, minplus_ref(b, c))
+    np.testing.assert_allclose(np.asarray(left), np.asarray(right), rtol=1e-5)
+
+
+@given(random_connected_graph(max_n=10))
+@settings(max_examples=15, deadline=None)
+def test_updown_always_deadlock_free(data):
+    from repro.core.graph import DenseGraph
+    n, lat, nw, seed = data
+    g = DenseGraph(n=n, n_chiplets=n, node_weight=nw, adj_lat=lat,
+                   adj_bw=np.where(np.isfinite(lat), 100.0, 0.0),
+                   lengths=np.zeros((n, n)), relay=np.ones(n, dtype=bool))
+    table = updown_random_table(g, seed=seed)
+    assert not channel_dependency_cycle(table)
+    # all pairs route
+    hops = path_cost_doubling(jnp.asarray(table),
+                              jnp.ones((n, n), jnp.float32),
+                              jnp.zeros((n,), jnp.float32))
+    assert np.isfinite(np.asarray(hops)).all()
+
+
+@given(st.sampled_from(["mesh", "torus", "hexamesh"]),
+       st.integers(min_value=0, max_value=100))
+@settings(max_examples=10, deadline=None)
+def test_more_traffic_lower_throughput(topo, seed):
+    """Adding traffic (scaling a pattern up) cannot raise the sustainable
+    *fraction*; and throughput scales linearly with total offered load."""
+    n = 16
+    design = make_design(topo, n)
+    arrays, g = prepare_arrays(design)
+    t = make_traffic("random_uniform", n, seed=seed).astype(np.float32)
+    mh = routed_diameter(arrays.next_hop)
+    t1 = float(throughput_proxy(arrays.next_hop, arrays.adj_bw, t, max_hops=mh))
+    t2 = float(throughput_proxy(arrays.next_hop, arrays.adj_bw, 2 * t, max_hops=mh))
+    assert t2 == pytest.approx(t1, rel=1e-4)   # fraction-invariant under scaling
+
+
+@given(st.integers(min_value=0, max_value=50))
+@settings(max_examples=10, deadline=None)
+def test_latency_permutation_equivariance(seed):
+    """Relabeling chiplets (consistent permutation of all inputs) must not
+    change the average latency."""
+    n = 9
+    design = make_design("mesh", n)
+    arrays, g = prepare_arrays(design)
+    t = make_traffic("permutation", n, seed=seed).astype(np.float32)
+    base = float(average_latency(arrays.next_hop, arrays.step_cost,
+                                 arrays.node_weight, t))
+    rng = np.random.default_rng(seed)
+    p = rng.permutation(n)
+    inv = np.argsort(p)
+    nh = p[arrays.next_hop[np.ix_(inv, inv)]].astype(np.int32)
+    sc = arrays.step_cost[np.ix_(inv, inv)]
+    nw = arrays.node_weight[inv]
+    tp = t[np.ix_(inv, inv)]
+    perm = float(average_latency(jnp.asarray(nh), jnp.asarray(sc),
+                                 jnp.asarray(nw), jnp.asarray(tp)))
+    assert perm == pytest.approx(base, rel=1e-5)
+
+
+@given(st.sampled_from(["mesh", "torus"]), st.integers(0, 30))
+@settings(max_examples=8, deadline=None)
+def test_proxy_latency_vs_reference_property(topo, seed):
+    n = 9
+    design = make_design(topo, n, routing="updown_random", seed=seed)
+    arrays, g = prepare_arrays(design)
+    t = make_traffic("hotspot", n, seed=seed)
+    ref = latency_reference(g, arrays.next_hop, t)
+    got = float(average_latency(arrays.next_hop, arrays.step_cost,
+                                arrays.node_weight, t.astype(np.float32)))
+    assert got == pytest.approx(ref, rel=1e-5)

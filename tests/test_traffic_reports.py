@@ -1,0 +1,89 @@
+"""Traffic generator + report tests."""
+import numpy as np
+import pytest
+
+from repro.core import Technology, area_report, cost_report, die_yield, power_report
+from repro.core.reports import die_cost, dies_per_wafer
+from repro.topologies import make_design
+from repro.traffic import make_traffic, TRAFFIC_PATTERNS
+from repro.traffic.trace import (
+    aggregate_trace, parse_trace_file, synthetic_trace, write_trace_file,
+)
+
+
+@pytest.mark.parametrize("pattern", sorted(TRAFFIC_PATTERNS))
+@pytest.mark.parametrize("n", [9, 16, 30, 64])
+def test_traffic_normalized_no_self(pattern, n):
+    t = make_traffic(pattern, n, seed=3)
+    assert t.shape == (n, n)
+    assert t.sum() == pytest.approx(1.0)
+    assert np.all(np.diag(t) == 0)
+    assert np.all(t >= 0)
+
+
+def test_transpose_linear_pairs():
+    t = make_traffic("transpose", 64)
+    assert (t > 0).sum() <= 64     # one destination per source
+
+
+def test_permutation_is_permutation():
+    t = make_traffic("permutation", 32, seed=7)
+    assert ((t > 0).sum(axis=1) == 1).all()
+    assert ((t > 0).sum(axis=0) == 1).all()
+    assert np.all(np.diag(t) == 0)   # fixed-point free
+
+
+def test_hotspot_concentration():
+    n = 64
+    t = make_traffic("hotspot", n, seed=0)
+    col_sums = t.sum(axis=0)
+    hot = np.sort(col_sums)[-4:]
+    # 4 hotspots get 50% + their uniform share
+    assert hot.sum() > 0.5
+
+
+def test_trace_roundtrip(tmp_path):
+    events = synthetic_trace(16, 500, seed=1, pattern="hotspot")
+    p = str(tmp_path / "trace.txt")
+    write_trace_file(p, events)
+    back = parse_trace_file(p)
+    assert back == sorted(events, key=lambda e: e[0])
+    t = aggregate_trace(back, 16)
+    assert t.sum() == pytest.approx(1.0)
+
+
+def test_area_scales_with_radix():
+    a_mesh = area_report(make_design("mesh", 16)).total_chiplet_area
+    a_fb = area_report(make_design("flattened_butterfly", 16)).total_chiplet_area
+    assert a_fb > a_mesh   # higher radix -> more PHYs -> more area (paper §1)
+
+
+def test_yield_model_monotone():
+    t = Technology()
+    y_small, y_big = die_yield(10.0, t), die_yield(800.0, t)
+    assert 0 < y_big < y_small <= 1.0
+    assert die_cost(800.0, t) > die_cost(10.0, t) * 8  # superlinear in area
+
+
+def test_dies_per_wafer_sane():
+    t = Technology(wafer_radius=150.0)
+    n = dies_per_wafer(74.0, t)
+    usable = np.pi * 150 ** 2
+    assert 0.5 * usable / 74 < n < usable / 74
+
+
+def test_power_report_counts_links():
+    import dataclasses
+    d = make_design("mesh", 16)
+    pkg = dataclasses.replace(d.packaging, link_power_per_mm=0.01)
+    d2 = d.replace(packaging=pkg)
+    p1, p2 = power_report(d), power_report(d2)
+    assert p2.link_power > p1.link_power == 0.0
+    assert p2.chiplet_power == p1.chiplet_power
+
+
+def test_cost_report_totals():
+    d = make_design("mesh", 9)
+    rep = cost_report(d)
+    assert len(rep.chiplet_costs) == 9
+    assert rep.total > sum(rep.chiplet_costs)

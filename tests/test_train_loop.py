@@ -1,0 +1,52 @@
+"""Fault-tolerant training-loop tests: run, checkpoint, resume, continue."""
+import numpy as np
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.train import train
+from repro.models import reduced
+
+
+def _tiny_cfg():
+    return reduced(get_config("qwen2.5-3b"), n_layers=1, d_model=32,
+                   n_heads=2, n_kv_heads=2, d_head=16, d_ff=64,
+                   vocab_size=128)
+
+
+def test_train_descends_and_checkpoints(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    cfg = _tiny_cfg()
+    state, losses = train(cfg, steps=8, batch=2, seq_len=32, lr=5e-3,
+                          ckpt_dir=ckpt, ckpt_interval=4, log_every=100)
+    assert len(losses) == 8
+    assert np.isfinite(losses).all()
+    assert int(state["step"]) == 8
+    from repro.ckpt import latest_step
+    assert latest_step(ckpt) == 4   # periodic checkpoint fired
+
+
+def test_train_resume_continues_from_checkpoint(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    cfg = _tiny_cfg()
+    # phase 1: 6 steps, checkpoint at 3 and 6
+    _, l1 = train(cfg, steps=6, batch=2, seq_len=32, lr=5e-3,
+                  ckpt_dir=ckpt, ckpt_interval=3, log_every=100)
+    # phase 1 ran steps 0..5 and checkpointed at step 3 (the interval);
+    # phase 2 must resume at step 4 and run only the remaining 6 steps
+    state2, l2 = train(cfg, steps=10, batch=2, seq_len=32, lr=5e-3,
+                       ckpt_dir=ckpt, ckpt_interval=3, log_every=100)
+    assert len(l2) == 6, len(l2)       # resumed at 4, not redone from 0
+    assert int(state2["step"]) == 10
+    # the resumed run continues the schedule: its first loss should be near
+    # the pre-restart tail, far below a cold start (~log V = 4.85)
+    assert l2[0] < l1[0]
+
+
+def test_train_deterministic_data_resume(tmp_path):
+    """Data order is a pure function of the step index: two fresh runs of
+    the same length produce identical loss curves."""
+    cfg = _tiny_cfg()
+    _, a = train(cfg, steps=4, batch=2, seq_len=32, lr=5e-3, log_every=100)
+    _, b = train(cfg, steps=4, batch=2, seq_len=32, lr=5e-3, log_every=100)
+    np.testing.assert_allclose(a, b, rtol=1e-5)
