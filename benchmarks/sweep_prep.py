@@ -1,0 +1,125 @@
+"""Sweep-preparation throughput benchmark (designs prepared per second).
+
+Measures the host-side cost of preparing a 1000-point sweep — graph
+construction + routing-table build + batch encoding + routed-diameter bound —
+on two paths:
+
+* **before**: the pre-refactor serial path — per-destination Python Dijkstra
+  (reference oracle), one design at a time, a separate jitted
+  ``routed_diameter`` call (device round-trip) per design, no structure
+  reuse;
+* **after**: the batched pipeline — vectorized min-plus table construction,
+  structure caching keyed by ``DesignPoint.structure_key()``, one batched
+  ``routed_diameter_batch`` call per chunk.
+
+Emits BENCH_sweep_prep.json at the repo root (the perf-trajectory record).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro.core.graph import build_graph, step_cost_matrix          # noqa: E402
+from repro.core.latency import routed_diameter                      # noqa: E402
+from repro.core.structure_cache import StructureCache               # noqa: E402
+from repro.dse import ExperimentSpec, encode_designs, expand_experiments  # noqa: E402
+from repro.routing.tables import dijkstra_lowest_id_table_reference  # noqa: E402
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_sweep_prep.json")
+CHUNK = 256
+
+
+def sweep_points(target: int = 1000):
+    """A realistic DSE sweep of ~1000 points: few structures, many traffic
+    patterns/seeds — the shape optimizer inner loops actually produce."""
+    spec = ExperimentSpec(
+        topologies=("mesh", "torus"),
+        chiplet_counts=(16, 36, 64),
+        traffic_patterns=("random_uniform", "transpose", "hotspot",
+                          "permutation"),
+        seeds=tuple(range(42)),
+    )
+    return expand_experiments(spec)[:target]
+
+
+def prepare_before(points) -> None:
+    """The pre-refactor serial path (old encode_designs body): reference
+    Dijkstra per design, per-design diameter round-trip, no caching."""
+    prepared = []
+    for pt in points:
+        design = pt.build()
+        g = build_graph(design)
+        next_hop = dijkstra_lowest_id_table_reference(
+            g, design.routing_metric).astype(np.int32)
+        sc = step_cost_matrix(g)
+        sc = np.where(np.isfinite(sc), sc, 0.0).astype(np.float32)
+        prepared.append((next_hop, sc, pt.traffic()))
+    n = max(nh.shape[0] for nh, _, _ in prepared)
+    B = len(prepared)
+    next_hop = np.tile(np.arange(n, dtype=np.int32)[None, :, None], (B, 1, n))
+    step_cost = np.zeros((B, n, n), np.float32)
+    max_hops = 1
+    for b, (nh, sc, _) in enumerate(prepared):
+        k = nh.shape[0]
+        next_hop[b, :k, :k] = nh
+        step_cost[b, :k, :k] = sc
+        max_hops = max(max_hops, routed_diameter(nh))   # one jit call each
+
+
+def prepare_after(points) -> None:
+    """The batched pipeline, chunked like DseEngine.run."""
+    cache = StructureCache()
+    for i in range(0, len(points), CHUNK):
+        encode_designs(points[i:i + CHUNK], validate=False, cache=cache)
+
+
+def main():
+    n_points = int(os.environ.get("REPRO_SWEEP_PREP_POINTS", "1000"))
+    points = sweep_points(n_points)
+    print(f"sweep_prep: {len(points)} design points "
+          f"({len({p.structure_key() for p in points})} unique structures)")
+
+    # Warm the jit caches so both paths pay compilation outside the clock
+    # (the 'before' path's per-design diameter dispatches are still counted —
+    # that per-call overhead is part of what the refactor removes).
+    prepare_after(points[:CHUNK])
+    routed_diameter(np.tile(np.arange(64, dtype=np.int32)[:, None], (1, 64)))
+
+    t0 = time.perf_counter()
+    prepare_before(points)
+    before_s = time.perf_counter() - t0
+    print(f"before: {before_s:.2f}s  ({len(points) / before_s:.1f} designs/s)")
+
+    t0 = time.perf_counter()
+    prepare_after(points)
+    after_s = time.perf_counter() - t0
+    print(f"after:  {after_s:.2f}s  ({len(points) / after_s:.1f} designs/s)")
+
+    result = {
+        "benchmark": "sweep_prep",
+        "designs": len(points),
+        "unique_structures": len({p.structure_key() for p in points}),
+        "chunk_size": CHUNK,
+        "before_s": round(before_s, 4),
+        "after_s": round(after_s, 4),
+        "before_designs_per_s": round(len(points) / before_s, 2),
+        "after_designs_per_s": round(len(points) / after_s, 2),
+        "speedup": round(before_s / after_s, 2),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(f"speedup: {result['speedup']}x  -> {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main()

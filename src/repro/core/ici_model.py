@@ -53,6 +53,28 @@ def tpu_pod_design(rows: int = 16, cols: int = 16, wrap: bool = True,
     return design, arrays, g
 
 
+def _pod_structure(rows: int, cols: int, wrap: bool, link_bw: float):
+    """Cached (arrays, routed diameter) for the pod design.
+
+    estimate_collective is the autoshard inner loop — it must not rebuild the
+    256-chip pod graph + routing table per call, so the built structure lives
+    in the shared sweep-preparation cache (core.structure_cache). The cached
+    arrays are shared and read-only.
+    """
+    from .structure_cache import GLOBAL_STRUCTURE_CACHE, StructureEntry
+
+    key = ("tpu_pod", rows, cols, wrap, float(link_bw))
+
+    def build():
+        _, arrays, _ = tpu_pod_design(rows, cols, wrap, link_bw)
+        return StructureEntry(arrays=arrays)
+
+    entry = GLOBAL_STRUCTURE_CACHE.get_or_build(key, build)
+    if entry.diameter is None:
+        entry.diameter = max(routed_diameter(entry.arrays.next_hop), 1)
+    return entry.arrays, entry.diameter
+
+
 # ---------------------------------------------------------------------------
 # Collective traffic patterns over the pod grid
 # ---------------------------------------------------------------------------
@@ -147,9 +169,8 @@ def estimate_collective(kind: str, axis: str, bytes_per_device: float,
     evaluate *directed* flows against per-direction bandwidth (DESIGN.md §3).
     """
     from .throughput import edge_flows
-    import jax.numpy as jnp
 
-    design, arrays, g = tpu_pod_design(rows, cols, wrap, link_bw)
+    arrays, mh = _pod_structure(rows, cols, wrap, link_bw)
     t = collective_traffic(kind, rows, cols, axis, bytes_per_device)
     total = t.sum()
     k = cols if axis in ("data", "row") else rows
@@ -157,7 +178,6 @@ def estimate_collective(kind: str, axis: str, bytes_per_device: float,
     if total <= 0:
         return CollectiveEstimate(kind, axis, bytes_per_device,
                                   analytic, 1.0, analytic, 0.0)
-    mh = routed_diameter(arrays.next_hop)
     flow = np.asarray(edge_flows(arrays.next_hop, t.astype(np.float32),
                                  max_hops=mh))
     bw = arrays.adj_bw

@@ -71,7 +71,7 @@ def edge_flows(next_hop: jax.Array, traffic: jax.Array,
             flow = flow.ravel().at[flat].add(contrib).reshape(n, n)
             return (jnp.where(active, nxt, cur), flow), None
 
-    (final_pos, flow), _ = jax.lax.scan(
+    (_, flow), _ = jax.lax.scan(
         body, (cur0, jnp.zeros((n, n), dtype=jnp.float32)), None,
         length=max_hops)
     return flow

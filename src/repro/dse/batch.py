@@ -5,6 +5,15 @@ proxies are one fixed-shape vmapped program: the design axis shards over the
 ("pod", "data") mesh axes, the inner [n, n] matrices over "model" when n is
 large.
 
+Sweep preparation is cache-aware and batched:
+
+* points are grouped by ``DesignPoint.structure_key()`` — the many sweep
+  points that differ only in traffic pattern build their graph + routing
+  table + step costs **once** (core.structure_cache);
+* the routed diameter of every newly-built structure is computed in **one**
+  jitted call on the stacked next-hop tensor (``routed_diameter_batch``)
+  instead of a jit dispatch + device round-trip per design.
+
 Padding semantics:
   next_hop    : padded vertices route to themselves (= unreachable; proxies
                 mask them out because padded traffic is zero)
@@ -19,6 +28,9 @@ from dataclasses import dataclass
 import numpy as np
 
 from ..core.proxies import prepare_arrays
+from ..core.structure_cache import (
+    GLOBAL_STRUCTURE_CACHE, StructureCache, StructureEntry,
+)
 from .sweep import DesignPoint
 
 
@@ -41,23 +53,69 @@ class DesignBatch:
         return self.next_hop.shape[1]
 
 
-def encode_designs(points: list[DesignPoint], n_pad: int | None = None,
-                   validate: bool = True) -> DesignBatch:
-    """Build + encode every design point into one padded batch."""
-    from ..core.latency import routed_diameter
+def _structures_for(points: list[DesignPoint], validate: bool,
+                    cache: StructureCache | None) -> dict:
+    """Map structure_key -> StructureEntry, building each unique structure
+    once (through the cache when one is given)."""
+    from ..core.design import validate_design
 
-    prepared = []
+    entries: dict = {}
     for pt in points:
-        design = pt.build()
-        arrays, g = prepare_arrays(design, validate=validate)
-        traffic = pt.traffic()
-        prepared.append((arrays, traffic))
+        key = pt.structure_key()
+        if key in entries:
+            continue
+        entry = cache.get(key) if cache is not None else None
+        if entry is None:
+            # The graph is not retained: cached entries keep only the dense
+            # device arrays (+ diameter) so the cache stays small.
+            arrays, _ = prepare_arrays(pt.build(), validate=validate)
+            entry = StructureEntry(arrays=arrays,
+                                   extra={"validated": validate})
+            if cache is not None:
+                cache.put(key, entry)
+        elif validate and not entry.extra.get("validated"):
+            # Entry was cached by a validate=False caller; a validate=True
+            # request must still see validation errors.
+            validate_design(pt.build())
+            entry.extra["validated"] = True
+        entries[key] = entry
+    return entries
 
-    n_max = max(a.next_hop.shape[0] for a, _ in prepared)
+
+def _fill_diameters(entries: dict, n: int) -> None:
+    """Batched routed diameter for every entry that does not have one yet:
+    stack the (padded) next-hop tables and run one jitted call."""
+    from ..core.latency import routed_diameter_batch
+
+    missing = [e for e in entries.values() if e.diameter is None]
+    if not missing:
+        return
+    stacked = np.tile(np.arange(n, dtype=np.int32)[None, :, None],
+                      (len(missing), 1, n))
+    for i, e in enumerate(missing):
+        k = e.arrays.next_hop.shape[0]
+        stacked[i, :k, :k] = e.arrays.next_hop
+    for e, dia in zip(missing, routed_diameter_batch(stacked)):
+        e.diameter = int(dia)
+
+
+def encode_designs(points: list[DesignPoint], n_pad: int | None = None,
+                   validate: bool = True,
+                   cache: StructureCache | None = GLOBAL_STRUCTURE_CACHE
+                   ) -> DesignBatch:
+    """Build + encode every design point into one padded batch.
+
+    ``cache=None`` disables structure reuse across calls (each call still
+    builds every unique structure within the batch only once).
+    """
+    entries = _structures_for(points, validate, cache)
+
+    n_max = max(e.arrays.next_hop.shape[0] for e in entries.values())
     n = n_pad or n_max
     if n < n_max:
         raise ValueError(f"n_pad={n} smaller than largest design ({n_max})")
-    B = len(prepared)
+    _fill_diameters(entries, n)
+    B = len(points)
 
     # nh[b, u, d] = u  (padded vertices route to themselves = unreachable)
     next_hop = np.tile(np.arange(n, dtype=np.int32)[None, :, None], (B, 1, n))
@@ -66,15 +124,17 @@ def encode_designs(points: list[DesignPoint], n_pad: int | None = None,
     adj_bw = np.zeros((B, n, n), np.float32)
     traffic = np.zeros((B, n, n), np.float32)
     max_hops = 1
-    for b, (arrays, tr) in enumerate(prepared):
+    for b, pt in enumerate(points):
+        entry = entries[pt.structure_key()]
+        arrays = entry.arrays
         k = arrays.next_hop.shape[0]
         nc = arrays.n_chiplets
         next_hop[b, :k, :k] = arrays.next_hop
         step_cost[b, :k, :k] = arrays.step_cost
         node_weight[b, :k] = arrays.node_weight
         adj_bw[b, :k, :k] = arrays.adj_bw
-        traffic[b, :nc, :nc] = tr
-        max_hops = max(max_hops, routed_diameter(arrays.next_hop))
+        traffic[b, :nc, :nc] = pt.traffic()
+        max_hops = max(max_hops, entry.diameter)
 
     return DesignBatch(next_hop=next_hop, step_cost=step_cost,
                        node_weight=node_weight, adj_bw=adj_bw,

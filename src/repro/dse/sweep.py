@@ -56,6 +56,16 @@ class DesignPoint:
         return make_traffic(self.traffic_pattern, self.n_chiplets,
                             seed=self.seed)
 
+    def structure_key(self) -> tuple:
+        """Hashable key of everything that determines the built *structure*
+        (graph + routing table + step costs): all fields except ``index`` and
+        ``traffic_pattern``. Sweep points sharing a key differ only in the
+        traffic matrix, so the DSE encoder builds the structure once per key
+        (core.structure_cache)."""
+        return ("design", self.topology, self.n_chiplets, self.routing,
+                self.seed, self.shg_bits, self.packaging, self.technology,
+                self.chiplet_kwargs_items)
+
 
 def expand_experiments(spec: ExperimentSpec) -> list[DesignPoint]:
     """Cartesian expansion of the parameter ranges into design points."""

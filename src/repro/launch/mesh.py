@@ -21,14 +21,13 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {n} devices but only {len(devices)} exist — "
             f"set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             f"the first jax import (launch/dryrun.py does this)")
-    return jax.make_mesh(shape, axes,
-                         devices=devices[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    from ..utils.jaxcompat import make_auto_mesh
+    return make_auto_mesh(shape, axes, devices=devices[:n])
 
 
 def make_host_mesh():
     """Whatever devices exist right now, as a 1-axis data mesh (elastic
     fallback for CPU tests and degraded pods)."""
+    from ..utils.jaxcompat import make_auto_mesh
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_auto_mesh((n, 1), ("data", "model"))

@@ -316,7 +316,7 @@ def _context_parallel_flash(cfg: ModelConfig, q, k, v, q_positions,
     does not divide the TP axis (hymba's 25, llava's 56): otherwise every
     model rank would compute ALL heads over the FULL sequence — the
     dominant memory term of those cells (§Perf cell B it3)."""
-    from jax import shard_map
+    from ..utils.jaxcompat import shard_map
     from ..sharding.annotate import current_mesh, resolve_spec
 
     mesh = current_mesh()

@@ -130,7 +130,7 @@ def _fused_selective_scan(cfg: ModelConfig, xc32, dt, b_mat, c_mat, a):
     traffic = kernel I/O only. Under a mesh the kernel runs per-shard via
     shard_map (batch over the data axes, D_inner over "model"; B/C are
     replicated along "model" — no collectives inside)."""
-    from jax import shard_map
+    from ..utils.jaxcompat import shard_map
     from jax.sharding import PartitionSpec
     from ..kernels.selective_scan import selective_scan
     from ..sharding.annotate import current_mesh, resolve_spec

@@ -19,8 +19,17 @@ Tables are dense int32 ``next_hop[u, d]`` matrices: the next vertex on the
 route from ``u`` toward destination ``d`` (``next_hop[d, d] = d``; unreachable
 pairs also map to ``u`` itself and are detected by the proxies).
 
-Routing tables are *setup*, not the hot loop, so they are built on the host in
-numpy and shipped to the device as int32 matrices (DESIGN.md §2).
+Routing tables are *setup*, but on large sweeps that setup dominates
+wall-clock, so both algorithms are built from one **vectorized relaxation
+core**: instead of a per-destination heap Dijkstra in interpreted Python, the
+relay-constrained all-pairs distances are computed for *all* destinations at
+once with dense min-plus relaxation in numpy (Bellman–Ford / path-doubling
+over [n, n] matrices), and the next hops are selected with one batched
+argmin. The original per-destination implementations are kept as
+``*_reference`` oracles; equivalence is asserted in tests
+(``tests/test_sweep_prep.py``).
+
+Tables ship to the device as int32 matrices (DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -29,6 +38,10 @@ import heapq
 import numpy as np
 
 from ..core.graph import DenseGraph, step_cost_matrix
+
+# Tolerance used by the reference Dijkstra when comparing float path costs;
+# the vectorized builders use the same value so tie-breaking is identical.
+TIE_TOL = 1e-12
 
 
 def _edge_costs(g: DenseGraph, metric: str) -> np.ndarray:
@@ -43,8 +56,9 @@ def _edge_costs(g: DenseGraph, metric: str) -> np.ndarray:
     return c
 
 
-def dijkstra_lowest_id_table(g: DenseGraph, metric: str = "hops") -> np.ndarray:
-    """Deterministic shortest-path next-hop table with lowest-ID tie-break.
+def dijkstra_lowest_id_table_reference(g: DenseGraph,
+                                       metric: str = "hops") -> np.ndarray:
+    """Per-destination Dijkstra reference oracle for ``dijkstra_lowest_id``.
 
     For each destination d we run Dijkstra *from* d (the graph is undirected)
     to get dist_d[v], then pick
@@ -93,6 +107,90 @@ def dijkstra_lowest_id_table(g: DenseGraph, metric: str = "hops") -> np.ndarray:
     return next_hop
 
 
+# ---------------------------------------------------------------------------
+# Vectorized relaxation core (all destinations at once)
+# ---------------------------------------------------------------------------
+
+def _dest_block(n: int, budget_bytes: float = 6.4e7) -> int:
+    """Destination-axis chunk size keeping the [n, n, block] float64
+    relaxation temporary under ~64 MB."""
+    return max(1, min(n, int(budget_bytes / 8.0 / (n * n))))
+
+
+def _minplus(left: np.ndarray, right: np.ndarray) -> np.ndarray:
+    """(min, +) product over [n, n] float matrices, chunked over the
+    destination (column) axis to bound the broadcast temporary."""
+    n = left.shape[0]
+    out = np.empty_like(right)
+    block = _dest_block(n)
+    for d0 in range(0, n, block):
+        d1 = min(n, d0 + block)
+        out[:, d0:d1] = np.min(left[:, :, None] + right[None, :, d0:d1], axis=1)
+    return out
+
+
+def _relay_masked_distances(cost: np.ndarray, relay: np.ndarray) -> np.ndarray:
+    """dist[v, d] = cheapest forward-path cost v -> d whose *intermediate*
+    vertices are all relays, for every (v, d) pair simultaneously.
+
+    Min-plus path doubling: d_{2k} = min(d_k, d_k[:, relay] (+) d_k). Masking
+    the split vertex w to relays is exactly the transit constraint — w is an
+    intermediate of the concatenated path, while the endpoints stay free.
+    """
+    n = cost.shape[0]
+    dist = cost.copy()
+    np.fill_diagonal(dist, 0.0)
+    relay_col = np.asarray(relay, dtype=bool)[None, :]
+    n_doublings = max(1, int(np.ceil(np.log2(max(n - 1, 2)))) + 1)
+    for _ in range(n_doublings):
+        left = np.where(relay_col, dist, np.inf)
+        new = np.minimum(dist, _minplus(left, dist))
+        if np.array_equal(new, dist):
+            break
+        dist = new
+    return dist
+
+
+def _lowest_id_next_hops(cost: np.ndarray, dist: np.ndarray,
+                         relay: np.ndarray) -> np.ndarray:
+    """Batched next-hop selection: for every (u, d) pick the lowest-ID legal
+    neighbor v minimizing cost[u, v] + dist[v, d] (ties within TIE_TOL go to
+    the lowest ID, matching the reference's sequential scan)."""
+    n = cost.shape[0]
+    ids = np.arange(n, dtype=np.int32)
+    next_hop = np.tile(ids[:, None], (1, n))
+    edge = np.isfinite(cost)
+    relay_v = np.asarray(relay, dtype=bool)
+    block = _dest_block(n)
+    for d0 in range(0, n, block):
+        d1 = min(n, d0 + block)
+        dd = ids[d0:d1]
+        legal = edge[:, :, None] & (relay_v[None, :, None] |
+                                    (ids[None, :, None] == dd[None, None, :]))
+        scores = np.where(legal, cost[:, :, None] + dist[None, :, d0:d1],
+                          np.inf)
+        best = scores.min(axis=1)
+        # First True along the neighbor axis = lowest ID within tolerance.
+        pick = (scores < best[:, None, :] + TIE_TOL).argmax(axis=1)
+        take = np.isfinite(dist[:, d0:d1]) & (ids[:, None] != dd[None, :])
+        next_hop[:, d0:d1] = np.where(take, pick.astype(np.int32),
+                                      next_hop[:, d0:d1])
+    return next_hop
+
+
+def dijkstra_lowest_id_table(g: DenseGraph, metric: str = "hops") -> np.ndarray:
+    """Deterministic shortest-path next-hop table with lowest-ID tie-break.
+
+    Vectorized over all destinations: relay-constrained all-pairs distances
+    via min-plus path doubling, then one batched lowest-ID argmin. Produces
+    tables bit-identical to ``dijkstra_lowest_id_table_reference`` (asserted
+    in tests/test_sweep_prep.py).
+    """
+    cost = _edge_costs(g, metric)
+    dist = _relay_masked_distances(cost, g.relay)
+    return _lowest_id_next_hops(cost, dist, g.relay)
+
+
 def _bfs_levels(g: DenseGraph, root: int) -> np.ndarray:
     n = g.n
     lvl = np.full(n, -1, dtype=np.int64)
@@ -116,9 +214,11 @@ def _is_up_edge(u: int, v: int, lvl: np.ndarray) -> bool:
     return (lvl[v], v) < (lvl[u], u)
 
 
-def updown_random_table(g: DenseGraph, metric: str = "hops", seed: int = 0,
-                        root: int | None = None) -> np.ndarray:
-    """Randomized up*/down* shortest-legal-path next-hop table.
+def updown_random_table_reference(g: DenseGraph, metric: str = "hops",
+                                  seed: int = 0,
+                                  root: int | None = None) -> np.ndarray:
+    """Per-destination phase-automaton Dijkstra reference oracle for
+    ``updown_random``.
 
     Legal routes traverse zero or more 'up' edges followed by zero or more
     'down' edges (no down->up turn), which provably breaks all channel-
@@ -183,6 +283,93 @@ def updown_random_table(g: DenseGraph, metric: str = "hops", seed: int = 0,
                 elif c < best_c + 1e-12:
                     cands.append(int(v))
             next_hop[u, d] = int(rng.choice(cands))
+    return next_hop
+
+
+def _updown_distances(cost: np.ndarray, relay: np.ndarray,
+                      lvl: np.ndarray
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Phase-automaton distances for all destinations at once; also returns
+    the up-edge matrix (up[a, b]: forward edge a -> b moves 'up') so the
+    caller's next-hop selection reuses it.
+
+    dist0[v, d]: cheapest legal v -> d path whose suffix from v is all 'down'
+    edges; dist1[v, d]: cheapest legal path starting with an 'up' edge (the
+    'up' prefix). Transit vertices must be relays. Dense Bellman–Ford over
+    the two coupled phases, iterated to the fixpoint:
+
+        dist0 = min(dist0, cost_down (+) E0)
+        dist1 = min(dist1, cost_up   (+) min(E0, E1))
+
+    where E_p masks rows of dist_p to vertices allowed to be transited.
+    """
+    n = cost.shape[0]
+    ids = np.arange(n)
+    edge = np.isfinite(cost)
+    # up[a, b]: traversing the forward edge a -> b moves 'up' (see _is_up_edge)
+    up = edge & ((lvl[None, :] < lvl[:, None]) |
+                 ((lvl[None, :] == lvl[:, None]) & (ids[None, :] < ids[:, None])))
+    cost_down = np.where(edge & ~up, cost, np.inf)
+    cost_up = np.where(up, cost, np.inf)
+    dist0 = np.full((n, n), np.inf)
+    np.fill_diagonal(dist0, 0.0)
+    dist1 = np.full((n, n), np.inf)
+    can_transit = np.asarray(relay, dtype=bool)[:, None] | np.eye(n, dtype=bool)
+    for _ in range(2 * n):
+        e0 = np.where(can_transit, dist0, np.inf)
+        emin = np.minimum(e0, np.where(can_transit, dist1, np.inf))
+        new0 = np.minimum(dist0, _minplus(cost_down, e0))
+        new1 = np.minimum(dist1, _minplus(cost_up, emin))
+        if np.array_equal(new0, dist0) and np.array_equal(new1, dist1):
+            break
+        dist0, dist1 = new0, new1
+    return dist0, dist1, up
+
+
+def updown_random_table(g: DenseGraph, metric: str = "hops", seed: int = 0,
+                        root: int | None = None) -> np.ndarray:
+    """Randomized up*/down* table with the vectorized relaxation core.
+
+    Same phase-automaton semantics and RNG stream as the reference (asserted
+    in tests/test_sweep_prep.py): the per-destination Dijkstra is replaced by
+    one dense two-phase Bellman–Ford; the seeded uniform choice among
+    equal-cost legal next hops walks (d, u) in the same order as before.
+    """
+    n = g.n
+    rng = np.random.default_rng(seed)
+    cost = _edge_costs(g, metric)
+    if root is None:
+        root = int(np.argmax(g.degree()))
+    lvl = _bfs_levels(g, root)
+    dist0, dist1, up = _updown_distances(cost, g.relay, lvl)
+    dmin = np.minimum(dist0, dist1)
+    ids = np.arange(n, dtype=np.int32)
+    next_hop = np.tile(ids[:, None], (1, n))
+    edge = np.isfinite(cost)
+    relay_v = np.asarray(g.relay, dtype=bool)
+    block = _dest_block(n)
+    for d0 in range(0, n, block):
+        d1 = min(n, d0 + block)
+        dd = ids[d0:d1]
+        # Remaining cost after stepping u -> v: an 'up' step may continue in
+        # either phase, a 'down' step locks the all-down suffix (phase 0).
+        rest = np.where(up[:, :, None], dmin[None, :, d0:d1],
+                        dist0[None, :, d0:d1])
+        legal = edge[:, :, None] & (relay_v[None, :, None] |
+                                    (ids[None, :, None] == dd[None, None, :]))
+        scores = np.where(legal, cost[:, :, None] + rest, np.inf)
+        best = scores.min(axis=1)
+        cand_mask = scores < best[:, None, :] + TIE_TOL
+        # Seeded choice per (u, d), same iteration order (d outer, u inner)
+        # and same per-call population sizes as the reference -> identical
+        # RNG stream -> identical tables.
+        for j in range(d1 - d0):
+            d = d0 + j
+            for u in range(n):
+                if u == d or not np.isfinite(dmin[u, d]):
+                    continue
+                cands = np.nonzero(cand_mask[u, :, j])[0]
+                next_hop[u, d] = int(rng.choice(cands))
     return next_hop
 
 

@@ -18,7 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from ..utils.jaxcompat import shard_map
 
 
 def quantize_int8(x: jax.Array, block: int = 256):

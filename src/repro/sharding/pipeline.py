@@ -21,8 +21,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from ..utils.jaxcompat import shard_map
 
 
 def pipeline_apply(stage_fn, mesh: Mesh, axis: str = "stage"):

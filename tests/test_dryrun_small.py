@@ -28,6 +28,7 @@ def test_small_mesh_train_and_decode_compile():
         import functools, json
         import jax, jax.numpy as jnp
         from repro.configs import get_config
+        from repro.utils.jaxcompat import make_auto_mesh
         from repro.models import Model, ShapeSpec, reduced, token_spec
         from repro.sharding import DEFAULT_RULES, logical_axis_rules
         from repro.sharding.rules import batch_specs, cache_specs, param_specs
@@ -36,8 +37,7 @@ def test_small_mesh_train_and_decode_compile():
         from repro.train.state import train_state_specs
         from repro.utils.hlo_cost import analyze
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_auto_mesh((4, 2), ("data", "model"))
         nm = lambda t: jax.tree.map(
             lambda s: jax.sharding.NamedSharding(mesh, s), t)
 

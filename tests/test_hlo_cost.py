@@ -79,8 +79,8 @@ def test_flops_match_xla_without_loops():
 
 def test_collectives_inside_scan_are_multiplied():
     import os
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.utils.jaxcompat import make_auto_mesh
+    mesh = make_auto_mesh((1,), ("d",))
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     w = jnp.ones((64, 64), jnp.float32)

@@ -10,11 +10,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.sharding.pipeline import pipeline_apply, split_stages
+from repro.utils.jaxcompat import make_auto_mesh
 
 
 def test_single_stage_equals_direct():
-    mesh = jax.make_mesh((1,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_auto_mesh((1,), ("stage",))
     w = jnp.stack([jnp.eye(8) * 2.0])          # one stage: y = 2x
 
     def stage_fn(params, x):
@@ -47,9 +47,9 @@ def test_multi_stage_subprocess():
         import numpy as np
         import jax, jax.numpy as jnp
         from repro.sharding.pipeline import pipeline_apply
+        from repro.utils.jaxcompat import make_auto_mesh
 
-        mesh = jax.make_mesh((4,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_auto_mesh((4,), ("stage",))
         rng = np.random.default_rng(0)
         w = jnp.asarray(rng.normal(0, 0.3, (4, 8, 8)), jnp.float32)
 
@@ -82,6 +82,7 @@ def test_context_parallel_attention_subprocess():
         import numpy as np
         import jax, jax.numpy as jnp
         from repro.configs import get_config
+        from repro.utils.jaxcompat import make_auto_mesh
         from repro.models import Model, reduced
         from repro.sharding import DEFAULT_RULES, logical_axis_rules
 
@@ -95,8 +96,7 @@ def test_context_parallel_attention_subprocess():
                              jnp.int32)
         x_plain, _ = model.forward(params, tokens)
 
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_auto_mesh((2, 2), ("data", "model"))
         with mesh, logical_axis_rules(mesh, DEFAULT_RULES):
             # heads 5 % model 2 != 0 and seq 256 % 2 == 0 -> CP active
             x_cp, _ = jax.jit(lambda p, t: model.forward(p, t))(params,
@@ -144,14 +144,14 @@ def test_elastic_checkpoint_restore_subprocess(tmp_path):
         sys.path.insert(0, "src")
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_config
+        from repro.utils.jaxcompat import make_auto_mesh
         from repro.models import Model, ShapeSpec, make_inputs, reduced
         from repro.ckpt import restore_checkpoint
         from repro.sharding import DEFAULT_RULES, logical_axis_rules
         from repro.sharding.rules import param_shardings
         cfg = reduced(get_config("qwen2.5-3b"), n_layers=2)
         model = Model(cfg)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_auto_mesh((4, 2), ("data", "model"))
         like = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
         with mesh, logical_axis_rules(mesh, DEFAULT_RULES):
             sh = param_shardings(like, mesh)

@@ -12,6 +12,7 @@ from repro.train.optimizer import (
     OptConfig, adafactor_init, adafactor_update, adamw_init, adamw_update,
     clip_by_global_norm, lr_schedule,
 )
+from repro.utils.jaxcompat import make_auto_mesh
 
 
 def _quad_problem(seed=0):
@@ -192,8 +193,7 @@ def test_error_feedback_reduces_bias():
 def test_compressed_psum_single_device():
     from repro.sharding.compression import make_compressed_allreduce
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
     fn = make_compressed_allreduce(mesh, axes=("data",))
     g = {"w": jnp.arange(16, dtype=jnp.float32)}
     out = fn(g)
@@ -206,8 +206,7 @@ def test_param_specs_divisibility():
     from repro.models import Model, reduced
     from repro.sharding.rules import param_specs
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
     cfg = reduced(get_config("hymba-1.5b"))
     params = jax.eval_shape(Model(cfg).init_params, jax.random.PRNGKey(0))
     specs = param_specs(params, mesh)

@@ -1,0 +1,189 @@
+"""Sweep-preparation pipeline equivalence tests.
+
+The batched pipeline (vectorized routing tables, structure caching, batched
+routed diameter, prefetched engine) must be *exactly* equivalent to the
+serial reference path it replaced:
+
+* vectorized ``dijkstra_lowest_id_table`` == per-destination Dijkstra
+  reference, bit-identical, on every registered topology up to 64 chiplets,
+  both metrics, plus adversarial random graphs with non-relay vertices;
+* vectorized ``updown_random_table`` == reference, including the seeded RNG
+  stream;
+* ``routed_diameter_batch`` == per-design ``routed_diameter`` loop;
+* cached vs uncached ``encode_designs`` produce identical DesignBatch
+  tensors, and the cache actually deduplicates structure builds;
+* prefetched ``DseEngine.run`` == serial run, and checkpoint resume works
+  with prefetch on.
+"""
+import numpy as np
+import pytest
+
+from repro.core import build_graph
+from repro.core.graph import DenseGraph
+from repro.core.latency import routed_diameter, routed_diameter_batch
+from repro.core.structure_cache import StructureCache
+from repro.dse import DseEngine, ExperimentSpec, encode_designs, expand_experiments
+from repro.routing import (
+    dijkstra_lowest_id_table, dijkstra_lowest_id_table_reference,
+    updown_random_table, updown_random_table_reference,
+)
+from repro.topologies import make_design
+from repro.topologies.registry import TOPOLOGIES
+
+ALL_TOPOS = sorted(t for t in TOPOLOGIES if t != "shg")
+
+
+def _sizes_for(topo: str) -> tuple[int, ...]:
+    return (16, 64) if topo == "hypercube" else (16, 36, 64)
+
+
+def _random_graph(n: int, seed: int, relay_frac: float = 0.7) -> DenseGraph:
+    """Random connected graph with random edge latencies, bandwidths, and
+    relay flags — adversarial input for the table builders."""
+    rng = np.random.default_rng(seed)
+    adj_lat = np.full((n, n), np.inf)
+    # random spanning tree for connectivity
+    order = rng.permutation(n)
+    for i in range(1, n):
+        u, v = order[i], order[rng.integers(0, i)]
+        adj_lat[u, v] = adj_lat[v, u] = float(rng.uniform(1.0, 5.0))
+    # extra random edges
+    for _ in range(2 * n):
+        u, v = rng.integers(0, n, 2)
+        if u != v and not np.isfinite(adj_lat[u, v]):
+            adj_lat[u, v] = adj_lat[v, u] = float(rng.uniform(1.0, 5.0))
+    adj_bw = np.where(np.isfinite(adj_lat), 16.0, 0.0)
+    relay = rng.random(n) < relay_frac
+    return DenseGraph(n=n, n_chiplets=n,
+                      node_weight=rng.uniform(0.5, 3.0, n),
+                      adj_lat=adj_lat, adj_bw=adj_bw,
+                      lengths=np.where(np.isfinite(adj_lat), 1.0, 0.0),
+                      relay=relay)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized table builders == reference oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo", ALL_TOPOS)
+@pytest.mark.parametrize("metric", ["hops", "latency"])
+def test_vectorized_dijkstra_bit_identical_registered(topo, metric):
+    for n in _sizes_for(topo):
+        g = build_graph(make_design(topo, n))
+        ref = dijkstra_lowest_id_table_reference(g, metric)
+        vec = dijkstra_lowest_id_table(g, metric)
+        np.testing.assert_array_equal(vec, ref, err_msg=f"{topo} n={n}")
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_vectorized_dijkstra_bit_identical_random(seed):
+    g = _random_graph(24, seed)
+    for metric in ("hops", "latency"):
+        np.testing.assert_array_equal(
+            dijkstra_lowest_id_table(g, metric),
+            dijkstra_lowest_id_table_reference(g, metric))
+
+
+@pytest.mark.parametrize("topo", ["mesh", "torus", "hexamesh",
+                                  "double_butterfly"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_vectorized_updown_identical_stream(topo, seed):
+    g = build_graph(make_design(topo, 16, routing="updown_random"))
+    np.testing.assert_array_equal(
+        updown_random_table(g, seed=seed),
+        updown_random_table_reference(g, seed=seed))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_vectorized_updown_identical_random_graph(seed):
+    g = _random_graph(20, seed)
+    np.testing.assert_array_equal(
+        updown_random_table(g, seed=seed),
+        updown_random_table_reference(g, seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# Batched routed diameter == per-design loop
+# ---------------------------------------------------------------------------
+
+def test_routed_diameter_batch_matches_loop():
+    spec = ExperimentSpec(topologies=("mesh", "torus", "hexamesh"),
+                          chiplet_counts=(9, 16, 25))
+    pts = expand_experiments(spec)
+    batch = encode_designs(pts, cache=None)
+    dias = routed_diameter_batch(batch.next_hop)
+    assert dias.shape == (len(pts),)
+    for b, pt in enumerate(pts):
+        from repro.core.proxies import prepare_arrays
+        arrays, _ = prepare_arrays(pt.build())
+        assert dias[b] == max(routed_diameter(arrays.next_hop), 1), pt
+    assert batch.max_hops == int(dias.max())
+
+
+# ---------------------------------------------------------------------------
+# Structure caching
+# ---------------------------------------------------------------------------
+
+def _batch_tensors(b):
+    return (b.next_hop, b.step_cost, b.node_weight, b.adj_bw, b.traffic)
+
+
+def test_cached_encode_identical_to_uncached():
+    spec = ExperimentSpec(
+        topologies=("mesh", "torus"), chiplet_counts=(9, 16),
+        traffic_patterns=("random_uniform", "transpose", "hotspot"),
+        seeds=(0, 1))
+    pts = expand_experiments(spec)
+    cache = StructureCache()
+    cold = encode_designs(pts, cache=cache)
+    warm = encode_designs(pts, cache=cache)     # fully cached second pass
+    plain = encode_designs(pts, cache=None)
+    for a, b, c in zip(_batch_tensors(cold), _batch_tensors(warm),
+                       _batch_tensors(plain)):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)
+    assert cold.max_hops == warm.max_hops == plain.max_hops
+    # 2 topologies x 2 sizes x 2 seeds structures; traffic patterns share them.
+    assert len(cache) == 8
+    assert cache.hits > 0
+
+
+def test_structure_key_ignores_traffic_only():
+    spec = ExperimentSpec(topologies=("mesh",), chiplet_counts=(16,),
+                          traffic_patterns=("random_uniform", "transpose"),
+                          seeds=(0, 1))
+    pts = expand_experiments(spec)
+    keys = {pt.structure_key() for pt in pts}
+    assert len(keys) == 2            # one per seed; patterns collapse
+    by_key = {}
+    for pt in pts:
+        by_key.setdefault(pt.structure_key(), []).append(pt)
+    assert all(len(v) == 2 for v in by_key.values())
+
+
+# ---------------------------------------------------------------------------
+# Engine overlap
+# ---------------------------------------------------------------------------
+
+def test_prefetch_run_matches_serial():
+    spec = ExperimentSpec(topologies=("mesh", "torus"), chiplet_counts=(9, 16),
+                          traffic_patterns=("random_uniform", "hotspot"))
+    pts = expand_experiments(spec)
+    r_pre = DseEngine(chunk_size=3, prefetch=True).run(pts)
+    r_ser = DseEngine(chunk_size=3, prefetch=False).run(pts)
+    np.testing.assert_allclose(r_pre.latency, r_ser.latency, rtol=1e-6)
+    np.testing.assert_allclose(r_pre.throughput, r_ser.throughput, rtol=1e-6)
+
+
+def test_prefetch_checkpoint_resume(tmp_path):
+    ckpt = str(tmp_path / "sweep.jsonl")
+    spec = ExperimentSpec(topologies=("mesh",), chiplet_counts=(9, 16, 25),
+                          traffic_patterns=("random_uniform", "transpose"))
+    pts = expand_experiments(spec)
+    e1 = DseEngine(chunk_size=2, checkpoint_path=ckpt, prefetch=True)
+    r1 = e1.run(pts[:4])
+    e2 = DseEngine(chunk_size=2, checkpoint_path=ckpt, prefetch=True)
+    assert set(e2._done) == {0, 1, 2, 3}
+    r2 = e2.run(pts)
+    np.testing.assert_allclose(r2.latency[:4], r1.latency, rtol=1e-6)
+    assert np.isfinite(r2.latency).all()
