@@ -1,0 +1,70 @@
+"""Optimizing instead of sweeping: search free-form 32-chiplet topologies.
+
+The paper positions the proxies as "a cost function for optimization
+algorithms"; this example is that loop. An NSGA-II-style evolutionary search
+over the free-form adjacency genome (explicit link lists, decoded through the
+"custom" topology entry) finds a latency/throughput Pareto front under an
+interposer-area budget, evaluating whole populations per generation through
+the batched, structure-cached proxy engine. A random-search baseline gets the
+same evaluation budget for comparison.
+
+Runs on CPU in well under a minute:
+
+    PYTHONPATH=src python examples/optimize_topology.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+from repro.opt import (
+    AdjacencySpace, Budgets, EvolutionarySearch, OptRunner,
+    PopulationEvaluator, RandomSearch,
+)
+
+N_CHIPLETS = 32
+GENERATIONS = 10
+POP_SIZE = 16
+AREA_BUDGET = 6500.0        # mm^2 of interposer
+REF_LATENCY = 300.0         # hypervolume reference point
+
+
+def build(cls, seed=0):
+    space = AdjacencySpace(n_chiplets=N_CHIPLETS, max_degree=8)
+    evaluator = PopulationEvaluator(
+        space, budgets=Budgets(max_interposer_area=AREA_BUDGET))
+    kw = ({"batch_size": POP_SIZE} if cls is RandomSearch
+          else {"pop_size": POP_SIZE})
+    return space, cls(space, evaluator, seed=seed, **kw)
+
+
+def main():
+    print(f"[opt] {N_CHIPLETS}-chiplet free-form topologies, "
+          f"interposer area <= {AREA_BUDGET:.0f} mm^2, "
+          f"{GENERATIONS} generations x {POP_SIZE} designs")
+
+    t0 = time.perf_counter()
+    space, opt = build(EvolutionarySearch)
+    result = OptRunner(opt, ref_latency=REF_LATENCY).run(
+        GENERATIONS, progress=True)
+    dt = time.perf_counter() - t0
+
+    _, rnd = build(RandomSearch)
+    baseline = OptRunner(rnd).run(GENERATIONS)
+
+    hv = result.archive.hypervolume(REF_LATENCY)
+    hv_rnd = baseline.archive.hypervolume(REF_LATENCY)
+    print(f"\n[opt] {result.n_evals} evaluations in {dt:.1f}s "
+          f"({result.n_evals / dt:.1f} designs/s)")
+    print(f"[opt] hypervolume: evolutionary {hv:.3g} vs "
+          f"equal-budget random {hv_rnd:.3g}")
+    print(f"\n[opt] final front ({len(result.archive)} designs):")
+    for row in result.to_rows(space):
+        print(f"   lat={row['latency']:7.2f} thr={row['throughput']:10.2f} "
+              f"links={row['n_links']:3d} "
+              f"area={row['interposer_area']:7.1f}mm^2 "
+              f"power={row['power']:6.1f}W cost=${row['cost']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,10 @@ from .latency import (
     num_doubling_steps,
 )
 from .throughput import edge_flows, throughput_proxy, bottleneck_edges
-from .reports import area_report, power_report, cost_report, die_yield, die_cost
+from .reports import (
+    area_report, power_report, cost_report, die_yield, die_cost,
+    ReportArrays, report_arrays,
+)
 from .proxies import evaluate_design, prepare_arrays, DeviceArrays, EvaluationReport
 
 __all__ = [
@@ -22,5 +25,6 @@ __all__ = [
     "average_latency", "num_doubling_steps",
     "edge_flows", "throughput_proxy", "bottleneck_edges",
     "area_report", "power_report", "cost_report", "die_yield", "die_cost",
+    "ReportArrays", "report_arrays",
     "evaluate_design", "prepare_arrays", "DeviceArrays", "EvaluationReport",
 ]

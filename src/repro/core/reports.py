@@ -65,21 +65,42 @@ def power_report(design: Design) -> PowerReport:
                        link_power=link_p)
 
 
-def die_yield(area: float, tech: Technology) -> float:
-    """Negative-binomial yield model:
+def die_yield_batch(area, defect_density, critical_level_ratio,
+                    clustering_alpha) -> np.ndarray:
+    """Vectorized negative-binomial yield model:
         Y = (1 + A * D0 * r / alpha)^(-alpha)
     with D0 the defect density, r the critical-level ratio, alpha the
-    clustering parameter."""
+    clustering parameter. All arguments broadcast."""
+    d_eff = np.asarray(defect_density, np.float64) * critical_level_ratio
+    alpha = np.asarray(clustering_alpha, np.float64)
+    return (1.0 + np.asarray(area, np.float64) * d_eff / alpha) ** (-alpha)
+
+
+def dies_per_wafer_batch(area, wafer_radius) -> np.ndarray:
+    """Vectorized geometric approximation: pi*R^2/A - pi*2R/sqrt(2A)."""
+    r = np.asarray(wafer_radius, np.float64)
+    a = np.asarray(area, np.float64)
+    n = np.pi * r * r / a - np.pi * 2.0 * r / np.sqrt(2.0 * a)
+    return np.maximum(np.floor(n), 1.0)
+
+
+def die_cost_batch(area, wafer_cost, wafer_radius, defect_density,
+                   critical_level_ratio, clustering_alpha) -> np.ndarray:
+    """Vectorized per-good-die cost: wafer cost split over good dies."""
+    dpw = dies_per_wafer_batch(area, wafer_radius)
+    y = die_yield_batch(area, defect_density, critical_level_ratio,
+                        clustering_alpha)
+    return np.asarray(wafer_cost, np.float64) / (dpw * y)
+
+
+def die_yield(area: float, tech: Technology) -> float:
     d_eff = tech.defect_density * tech.critical_level_ratio
     return float((1.0 + area * d_eff / tech.clustering_alpha)
                  ** (-tech.clustering_alpha))
 
 
 def dies_per_wafer(area: float, tech: Technology) -> int:
-    """Standard geometric approximation: pi*R^2/A - pi*2R/sqrt(2A)."""
-    r = tech.wafer_radius
-    n = np.pi * r * r / area - np.pi * 2.0 * r / np.sqrt(2.0 * area)
-    return max(int(np.floor(n)), 1)
+    return int(dies_per_wafer_batch(area, tech.wafer_radius))
 
 
 def die_cost(area: float, tech: Technology) -> float:
@@ -87,13 +108,22 @@ def die_cost(area: float, tech: Technology) -> float:
     return tech.wafer_cost / (dies_per_wafer(area, tech) * die_yield(area, tech))
 
 
+def _interposer_tech_default(design: Design) -> Technology:
+    """The interposer is manufactured in a mature node: a relaxed copy of the
+    first technology with 10x lower defect density (interposers use old
+    processes). Shared by the per-design and batched cost paths."""
+    t0 = design.technologies[0]
+    return Technology(
+        name="interposer", wafer_radius=t0.wafer_radius,
+        wafer_cost=t0.wafer_cost * 0.2,
+        defect_density=t0.defect_density * 0.1,
+        critical_level_ratio=t0.critical_level_ratio,
+        clustering_alpha=t0.clustering_alpha)
+
+
 def cost_report(design: Design, interposer_tech: Technology | None = None
                 ) -> CostReport:
-    """Paper §2.1.4: per-chiplet costs (yield model) + packaging cost.
-
-    The interposer (if its area is nonzero) is manufactured in a mature node:
-    by default a relaxed copy of the first technology with 10x lower defect
-    density (interposers use old processes)."""
+    """Paper §2.1.4: per-chiplet costs (yield model) + packaging cost."""
     lib = design.library()
     tech = design.technology_map()
     chip_costs = tuple(
@@ -101,16 +131,93 @@ def cost_report(design: Design, interposer_tech: Technology | None = None
         for pc in design.placement.chiplets)
     ia = interposer_area(design)
     if interposer_tech is None:
-        t0 = design.technologies[0]
-        interposer_tech = Technology(
-            name="interposer", wafer_radius=t0.wafer_radius,
-            wafer_cost=t0.wafer_cost * 0.2,
-            defect_density=t0.defect_density * 0.1,
-            critical_level_ratio=t0.critical_level_ratio,
-            clustering_alpha=t0.clustering_alpha)
+        interposer_tech = _interposer_tech_default(design)
     interposer_cost = die_cost(ia, interposer_tech) if ia > 0 else 0.0
     packaging_cost = (design.packaging.packaging_cost_base +
                       design.packaging.packaging_cost_per_mm2 * ia)
     return CostReport(chiplet_costs=chip_costs,
                       interposer_cost=interposer_cost,
                       packaging_cost=packaging_cost)
+
+
+@dataclass(frozen=True)
+class ReportArrays:
+    """Per-design report scalars stacked over the design axis [B].
+
+    This is the batched form the optimizer's constraint masks consume
+    (area/power/cost budgets over whole populations); numbers match the
+    per-design reports above exactly."""
+    total_chiplet_area: np.ndarray
+    interposer_area: np.ndarray
+    power: np.ndarray
+    cost: np.ndarray
+
+    @property
+    def total_area(self) -> np.ndarray:
+        return self.total_chiplet_area + self.interposer_area
+
+
+def report_arrays(designs) -> ReportArrays:
+    """Area/power/cost reports for a population of designs at once.
+
+    Geometry (interposer bounding box, link lengths) stays per-design; the
+    yield/cost arithmetic — the bulk of the report math on large populations —
+    runs vectorized over one flattened chiplet axis with a segment-sum back to
+    the design axis."""
+    designs = list(designs)
+    B = len(designs)
+    if B == 0:
+        z = np.zeros(0, np.float64)
+        return ReportArrays(z, z, z, z)
+
+    # Flatten every placed chiplet of every design into one axis.
+    seg, c_area, c_power = [], [], []
+    c_wradius, c_wcost, c_dd, c_clr, c_alpha = [], [], [], [], []
+    ia = np.zeros(B, np.float64)
+    router_p = np.zeros(B, np.float64)
+    link_p = np.zeros(B, np.float64)
+    pkg_cost = np.zeros(B, np.float64)
+    i_wradius, i_wcost, i_dd, i_clr, i_alpha = (
+        np.zeros(B, np.float64) for _ in range(5))
+    for b, d in enumerate(designs):
+        lib = d.library()
+        tech = d.technology_map()
+        pkg = d.packaging
+        for pc in d.placement.chiplets:
+            ct = lib[pc.chiplet]
+            t = tech[ct.technology]
+            seg.append(b)
+            c_area.append(ct.area)
+            c_power.append(ct.power)
+            c_wradius.append(t.wafer_radius)
+            c_wcost.append(t.wafer_cost)
+            c_dd.append(t.defect_density)
+            c_clr.append(t.critical_level_ratio)
+            c_alpha.append(t.clustering_alpha)
+        ia[b] = interposer_area(d)
+        lengths = link_lengths(d)
+        router_p[b] = pkg.router_power * d.n_routers
+        link_p[b] = float(np.sum(pkg.link_power_const +
+                                 pkg.link_power_per_mm * lengths))
+        pkg_cost[b] = pkg.packaging_cost_base + pkg.packaging_cost_per_mm2 * ia[b]
+        it = _interposer_tech_default(d)
+        i_wradius[b], i_wcost[b] = it.wafer_radius, it.wafer_cost
+        i_dd[b], i_clr[b], i_alpha[b] = (it.defect_density,
+                                         it.critical_level_ratio,
+                                         it.clustering_alpha)
+
+    seg = np.asarray(seg, np.int64)
+    c_area = np.asarray(c_area, np.float64)
+    chip_area = np.bincount(seg, weights=c_area, minlength=B)
+    chip_power = np.bincount(seg, weights=np.asarray(c_power, np.float64),
+                             minlength=B)
+    chip_cost = die_cost_batch(c_area, c_wcost, c_wradius, c_dd, c_clr,
+                               c_alpha)
+    cost = np.bincount(seg, weights=chip_cost, minlength=B) + pkg_cost
+    has_ia = ia > 0
+    if has_ia.any():
+        icost = die_cost_batch(np.where(has_ia, ia, 1.0), i_wcost,
+                               i_wradius, i_dd, i_clr, i_alpha)
+        cost = cost + np.where(has_ia, icost, 0.0)
+    return ReportArrays(total_chiplet_area=chip_area, interposer_area=ia,
+                        power=chip_power + router_p + link_p, cost=cost)

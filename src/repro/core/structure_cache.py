@@ -19,6 +19,7 @@ threads are safe.
 """
 from __future__ import annotations
 
+import pickle
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -35,13 +36,24 @@ class StructureEntry:
 
 
 def _entry_nbytes(entry: StructureEntry) -> int:
-    """Approximate host-memory footprint of one entry (dense arrays only)."""
+    """Approximate host-memory footprint of one entry: dense arrays plus any
+    non-trivial objects retained in ``extra`` (e.g. the built Design kept for
+    the optimizer's report masks) so the byte-budgeted eviction sees them."""
     total = 0
     for obj in (entry.arrays, entry.graph):
         if obj is None:
             continue
         for v in vars(obj).values():
             total += getattr(v, "nbytes", 0)
+    for v in entry.extra.values():
+        nb = getattr(v, "nbytes", None)
+        if nb is not None:
+            total += int(nb)
+        elif not isinstance(v, (bool, int, float, str, bytes, type(None))):
+            try:
+                total += len(pickle.dumps(v, protocol=pickle.HIGHEST_PROTOCOL))
+            except Exception:
+                pass
     return total
 
 

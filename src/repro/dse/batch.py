@@ -54,9 +54,14 @@ class DesignBatch:
 
 
 def _structures_for(points: list[DesignPoint], validate: bool,
-                    cache: StructureCache | None) -> dict:
+                    cache: StructureCache | None,
+                    keep_designs: bool = False) -> dict:
     """Map structure_key -> StructureEntry, building each unique structure
-    once (through the cache when one is given)."""
+    once (through the cache when one is given).
+
+    ``keep_designs`` retains the built ``Design`` in ``entry.extra`` — it
+    holds no dense arrays, and consumers that need per-design geometry (the
+    optimizer's report masks) read it back instead of rebuilding."""
     from ..core.design import validate_design
 
     entries: dict = {}
@@ -68,16 +73,28 @@ def _structures_for(points: list[DesignPoint], validate: bool,
         if entry is None:
             # The graph is not retained: cached entries keep only the dense
             # device arrays (+ diameter) so the cache stays small.
-            arrays, _ = prepare_arrays(pt.build(), validate=validate)
+            design = pt.build()
+            arrays, _ = prepare_arrays(design, validate=validate)
             entry = StructureEntry(arrays=arrays,
                                    extra={"validated": validate})
+            if keep_designs:
+                entry.extra["design"] = design
             if cache is not None:
                 cache.put(key, entry)
-        elif validate and not entry.extra.get("validated"):
-            # Entry was cached by a validate=False caller; a validate=True
-            # request must still see validation errors.
-            validate_design(pt.build())
-            entry.extra["validated"] = True
+        else:
+            design = entry.extra.get("design")
+            if validate and not entry.extra.get("validated"):
+                # Entry was cached by a validate=False caller; a
+                # validate=True request must still see validation errors.
+                design = design if design is not None else pt.build()
+                validate_design(design)
+                entry.extra["validated"] = True
+            if keep_designs and "design" not in entry.extra:
+                entry.extra["design"] = (design if design is not None
+                                         else pt.build())
+                if cache is not None:
+                    # re-account: the retained Design changed the entry size
+                    cache.put(key, entry)
         entries[key] = entry
     return entries
 
@@ -101,14 +118,14 @@ def _fill_diameters(entries: dict, n: int) -> None:
 
 def encode_designs(points: list[DesignPoint], n_pad: int | None = None,
                    validate: bool = True,
-                   cache: StructureCache | None = GLOBAL_STRUCTURE_CACHE
-                   ) -> DesignBatch:
+                   cache: StructureCache | None = GLOBAL_STRUCTURE_CACHE,
+                   keep_designs: bool = False) -> DesignBatch:
     """Build + encode every design point into one padded batch.
 
     ``cache=None`` disables structure reuse across calls (each call still
     builds every unique structure within the batch only once).
     """
-    entries = _structures_for(points, validate, cache)
+    entries = _structures_for(points, validate, cache, keep_designs)
 
     n_max = max(e.arrays.next_hop.shape[0] for e in entries.values())
     n = n_pad or n_max

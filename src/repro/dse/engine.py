@@ -125,6 +125,30 @@ class DseEngine:
                          throughput=np.asarray(thr)[:b_real],
                          points=batch.points)
 
+    def evaluate_points(self, points: list[DesignPoint],
+                        validate: bool = False, n_pad: int | None = None,
+                        round_hops: bool = False,
+                        keep_designs: bool = False) -> DseResult:
+        """Population evaluation without cursor bookkeeping — the optimizer
+        inner loop (repro.opt). Encodes through the shared structure cache
+        (mutated traffic-only siblings across generations hit it) and
+        evaluates one padded batch.
+
+        ``n_pad`` pads every population to a fixed node count and
+        ``round_hops`` rounds the static hop bound up to the next power of
+        two, so generation after generation reuses one compiled program
+        (extra hops are no-ops once all routes have converged).
+        ``keep_designs`` retains built Designs in the structure cache for
+        consumers that need per-design geometry (optimizer report masks)."""
+        batch = encode_designs(points, n_pad=n_pad, validate=validate,
+                               keep_designs=keep_designs)
+        if round_hops:
+            mh = 1
+            while mh < batch.max_hops:
+                mh *= 2
+            batch.max_hops = min(mh, max(batch.n - 1, 1))
+        return self.evaluate_batch(batch)
+
     def _finish_chunk(self, batch: DesignBatch,
                       results: dict[int, tuple[float, float]]) -> None:
         """Evaluate one encoded chunk, fold results in, checkpoint."""

@@ -1,24 +1,11 @@
-"""Latency-throughput Pareto fronts under area constraints (paper §4.2)."""
+"""Latency-throughput Pareto fronts under area constraints (paper §4.2).
+
+The dominance/front computation now lives in ``repro.opt.archive`` — the
+multi-objective archive the optimizers maintain — and is re-exported here so
+the sweep-side API is unchanged.
+"""
 from __future__ import annotations
 
-import numpy as np
+from ..opt.archive import hypervolume_2d, pareto_front
 
-
-def pareto_front(latency: np.ndarray, throughput: np.ndarray,
-                 mask: np.ndarray | None = None) -> np.ndarray:
-    """Indices of the Pareto-optimal points (minimize latency, maximize
-    throughput), sorted by latency. ``mask`` filters candidates (e.g. an
-    area budget)."""
-    lat = np.asarray(latency, np.float64)
-    thr = np.asarray(throughput, np.float64)
-    idx = np.arange(len(lat))
-    if mask is not None:
-        idx = idx[np.asarray(mask, bool)]
-    order = idx[np.lexsort((-thr[idx], lat[idx]))]
-    front = []
-    best_thr = -np.inf
-    for i in order:
-        if thr[i] > best_thr + 1e-12:
-            front.append(i)
-            best_thr = thr[i]
-    return np.asarray(front, np.int64)
+__all__ = ["pareto_front", "hypervolume_2d"]

@@ -43,10 +43,17 @@ class DesignPoint:
     packaging: Packaging
     technology: Technology
     chiplet_kwargs_items: tuple = ()
+    # Explicit link list for the "custom" topology (the optimizer's adjacency
+    # genome decodes into this); empty for parametric topologies.
+    links: tuple = ()
 
     def build(self) -> Design:
         kw = dict(self.chiplet_kwargs_items)
-        topo_kwargs = {"bits": self.shg_bits} if self.topology == "shg" else {}
+        topo_kwargs = {}
+        if self.topology == "shg":
+            topo_kwargs["bits"] = self.shg_bits
+        elif self.topology == "custom":
+            topo_kwargs["edges"] = self.links
         return make_design(
             self.topology, self.n_chiplets, packaging=self.packaging,
             technology=self.technology, routing=self.routing, seed=self.seed,
@@ -64,7 +71,7 @@ class DesignPoint:
         (core.structure_cache)."""
         return ("design", self.topology, self.n_chiplets, self.routing,
                 self.seed, self.shg_bits, self.packaging, self.technology,
-                self.chiplet_kwargs_items)
+                self.chiplet_kwargs_items, self.links)
 
 
 def expand_experiments(spec: ExperimentSpec) -> list[DesignPoint]:

@@ -35,7 +35,7 @@ from repro.sharding.rules import batch_specs, cache_specs, param_specs
 from repro.train import adamw_init, make_train_step
 from repro.train.optimizer import OptConfig
 from repro.train.state import train_state_specs
-from repro.utils.hlo_cost import analyze
+from repro.utils.hlo_cost import analyze, xla_cost_analysis
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "benchmarks", "results", "dryrun")
@@ -210,7 +210,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = xla_cost_analysis(compiled)
     n_dev = mesh.size
     hlo = compiled.as_text()
     # While-loop-aware accounting: XLA's cost_analysis counts scan bodies

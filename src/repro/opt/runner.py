@@ -1,0 +1,195 @@
+"""Checkpointable optimizer runner + CLI.
+
+Mirrors the DSE engine's cursor-file story at the optimizer level: after
+every generation the full optimizer state — RNG stream, population, archive,
+evaluation count — is written atomically to a JSON checkpoint. A run that is
+killed mid-search resumes from the checkpoint and reproduces exactly the
+archive an uninterrupted run would have produced (asserted in
+``tests/test_opt.py``).
+
+CLI::
+
+    PYTHONPATH=src python -m repro.opt --space adjacency --n-chiplets 32 \
+        --algo nsga2 --generations 20 --pop-size 24 \
+        --max-interposer-area 2500 --checkpoint opt_ckpt.json --out front.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .algorithms import ALGORITHMS, Budgets, OptimizerBase, PopulationEvaluator
+from .archive import ParetoArchive
+from .space import AdjacencySpace, ParametricSpace, SearchSpace
+
+
+@dataclass
+class OptResult:
+    archive: ParetoArchive
+    n_evals: int
+    generations: int
+    # Per-generation hypervolume for the generations executed by *this*
+    # run() call: history[i] belongs to generation history_start + 1 + i.
+    # After a checkpoint resume, history_start > 0 and pre-resume
+    # generations have no entries.
+    history: list = field(default_factory=list)
+    history_start: int = 0
+
+    def to_rows(self, space: SearchSpace | None = None) -> list[dict]:
+        rows = []
+        for e in self.archive.front():
+            row = {"latency": e.latency, "throughput": e.throughput,
+                   **e.metrics}
+            if space is not None and e.payload is not None:
+                row.update(space.describe(np.asarray(e.payload, np.int64)))
+            rows.append(row)
+        return rows
+
+
+def save_checkpoint(path: str, optimizer: OptimizerBase) -> None:
+    """Atomic write so a kill mid-dump never corrupts the resume point."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(optimizer.state(), f)
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+class OptRunner:
+    """Drives an optimizer for N generations with per-generation
+    checkpointing and optional hypervolume tracking."""
+
+    def __init__(self, optimizer: OptimizerBase,
+                 checkpoint_path: str | None = None,
+                 ref_latency: float | None = None,
+                 ref_throughput: float = 0.0):
+        self.optimizer = optimizer
+        self.checkpoint_path = checkpoint_path
+        self.ref_latency = ref_latency
+        self.ref_throughput = ref_throughput
+        if checkpoint_path and os.path.exists(checkpoint_path):
+            self.optimizer.load_state(load_checkpoint(checkpoint_path))
+
+    def run(self, generations: int, progress: bool = False) -> OptResult:
+        opt = self.optimizer
+        history = []
+        history_start = opt.generation
+        while opt.generation < generations:
+            opt.step()
+            if self.checkpoint_path:
+                save_checkpoint(self.checkpoint_path, opt)
+            hv = None
+            if self.ref_latency is not None:
+                hv = opt.archive.hypervolume(self.ref_latency,
+                                             self.ref_throughput)
+                history.append(hv)
+            if progress:
+                msg = (f"[opt] gen {opt.generation}/{generations} "
+                       f"evals={opt.evaluator.n_evals} "
+                       f"archive={len(opt.archive)}")
+                if hv is not None:
+                    msg += f" hv={hv:.4g}"
+                print(msg)
+        return OptResult(archive=opt.archive, n_evals=opt.evaluator.n_evals,
+                         generations=opt.generation, history=history,
+                         history_start=history_start)
+
+
+def make_space(kind: str, **kw) -> SearchSpace:
+    if kind == "adjacency":
+        return AdjacencySpace(**kw)
+    if kind == "parametric":
+        return ParametricSpace(**kw)
+    raise ValueError(f"unknown space {kind!r}; options: adjacency, parametric")
+
+
+def make_optimizer(algo: str, space: SearchSpace,
+                   evaluator: PopulationEvaluator, seed: int = 0,
+                   **kw) -> OptimizerBase:
+    try:
+        cls = ALGORITHMS[algo]
+    except KeyError:
+        raise ValueError(f"unknown algorithm {algo!r}; options: "
+                         f"{sorted(ALGORITHMS)}") from None
+    return cls(space, evaluator, seed=seed, **kw)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.opt",
+        description="Population-based multi-objective ICI design "
+                    "optimization on the batched proxy engine.")
+    p.add_argument("--space", choices=("adjacency", "parametric"),
+                   default="adjacency")
+    p.add_argument("--algo", choices=sorted(ALGORITHMS), default="nsga2")
+    p.add_argument("--n-chiplets", type=int, default=32,
+                   help="adjacency space: chiplet count")
+    p.add_argument("--max-degree", type=int, default=8,
+                   help="adjacency space: soft per-chiplet link cap")
+    p.add_argument("--counts", type=str, default="16,36,64",
+                   help="parametric space: comma-separated chiplet counts")
+    p.add_argument("--traffic", type=str, default="random_uniform")
+    p.add_argument("--routing", type=str, default="dijkstra_lowest_id")
+    p.add_argument("--generations", type=int, default=20)
+    p.add_argument("--pop-size", type=int, default=24)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--max-interposer-area", type=float, default=None)
+    p.add_argument("--max-total-area", type=float, default=None)
+    p.add_argument("--max-power", type=float, default=None)
+    p.add_argument("--max-cost", type=float, default=None)
+    p.add_argument("--checkpoint", type=str, default=None,
+                   help="resume point, written after every generation")
+    p.add_argument("--out", type=str, default=None,
+                   help="write the final front as JSON rows")
+    p.add_argument("--quiet", action="store_true")
+    args = p.parse_args(argv)
+
+    if args.space == "adjacency":
+        space = make_space("adjacency", n_chiplets=args.n_chiplets,
+                           max_degree=args.max_degree,
+                           traffic_pattern=args.traffic,
+                           routing=args.routing)
+    else:
+        counts = tuple(int(c) for c in args.counts.split(","))
+        space = make_space("parametric", chiplet_counts=counts,
+                           traffic_pattern=args.traffic,
+                           routings=(args.routing,))
+    budgets = Budgets(max_interposer_area=args.max_interposer_area,
+                      max_total_area=args.max_total_area,
+                      max_power=args.max_power, max_cost=args.max_cost)
+    evaluator = PopulationEvaluator(space, budgets=budgets)
+    size_kw = ({"batch_size": args.pop_size} if args.algo == "random"
+               else {"n_chains": args.pop_size} if args.algo == "sa"
+               else {"pop_size": args.pop_size})
+    optimizer = make_optimizer(args.algo, space, evaluator, seed=args.seed,
+                               **size_kw)
+    runner = OptRunner(optimizer, checkpoint_path=args.checkpoint)
+    result = runner.run(args.generations, progress=not args.quiet)
+
+    rows = result.to_rows(space)
+    if not args.quiet:
+        print(f"[opt] {result.n_evals} evaluations, "
+              f"{len(result.archive)} points on the front:")
+        for r in rows:
+            print(f"   lat={r['latency']:8.2f} thr={r['throughput']:10.2f} "
+                  f"area={r.get('interposer_area', float('nan')):8.1f} "
+                  f"links={r.get('n_links', '-')}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=2)
+            f.write("\n")
+        if not args.quiet:
+            print(f"[opt] front written to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

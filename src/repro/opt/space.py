@@ -1,0 +1,247 @@
+"""Genome ⇄ DesignPoint encodings for the design-space optimizers.
+
+Two search spaces over the paper's design space:
+
+* ``ParametricSpace`` — categorical genome over the registered parametric
+  topologies × chiplet counts × routings (+ an SHG bits gene, active only
+  when the topology gene decodes to "shg");
+* ``AdjacencySpace`` — PlaceIT-style free-form topologies: one bit per
+  unordered chiplet pair, decoded through the ``custom`` topology entry's
+  explicit link list, with deterministic validity *repair* (degree capping +
+  connectivity) so every genome decodes to a buildable, connected design.
+
+Genomes are int64 arrays [P, G]; ``repair`` is a pure function of the genome
+(no RNG), which the checkpoint/resume story relies on.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.design import Packaging, Technology
+from ..dse.sweep import DesignPoint
+from ..topologies.grid import grid_dims
+
+# Parametric topologies valid for any chiplet count (hypercube needs powers
+# of two; router topologies double the node count — both opt-in).
+DEFAULT_TOPOLOGIES = (
+    "mesh", "torus", "folded_torus", "flattened_butterfly", "shg",
+    "sid_mesh", "octamesh", "octatorus", "folded_octatorus",
+    "hexamesh", "hexatorus", "folded_hexatorus",
+)
+_ROUTER_TOPOS = ("double_butterfly", "butterdonut", "cluscross", "kite")
+
+
+class SearchSpace:
+    """Base interface: integer genomes with per-gene cardinalities."""
+
+    genome_length: int
+    cardinalities: np.ndarray     # int64 [G]
+    max_nodes: int                # padded node count for the proxy batch
+
+    def sample(self, rng: np.random.Generator, size: int) -> np.ndarray:
+        """[size, G] valid (already repaired) genomes."""
+        raise NotImplementedError
+
+    def repair(self, genomes: np.ndarray) -> np.ndarray:
+        """Deterministically map arbitrary genomes to valid ones — a pure
+        function of the genome, so optimizer trajectories replay exactly."""
+        raise NotImplementedError
+
+    def decode_one(self, genome: np.ndarray, index: int) -> DesignPoint:
+        raise NotImplementedError
+
+    def decode(self, genomes: np.ndarray,
+               start_index: int = 0) -> list[DesignPoint]:
+        return [self.decode_one(g, start_index + i)
+                for i, g in enumerate(np.asarray(genomes, np.int64))]
+
+    def describe(self, genome: np.ndarray) -> dict:
+        """Human-readable summary of one genome (for result files)."""
+        pt = self.decode_one(np.asarray(genome, np.int64), 0)
+        return {"topology": pt.topology, "n_chiplets": pt.n_chiplets,
+                "routing": pt.routing, "shg_bits": pt.shg_bits,
+                "n_links": len(pt.links)}
+
+
+@dataclass
+class ParametricSpace(SearchSpace):
+    """Genome = [topology, chiplet-count, routing, shg-bits] categorical
+    indices over the registered generators."""
+
+    topologies: tuple = DEFAULT_TOPOLOGIES
+    chiplet_counts: tuple = (16, 36, 64)
+    routings: tuple = ("dijkstra_lowest_id",)
+    shg_bits_choices: tuple = tuple(range(16))
+    traffic_pattern: str = "random_uniform"
+    seed: int = 0
+    packaging: Packaging = field(default_factory=Packaging)
+    technology: Technology = field(default_factory=Technology)
+
+    def __post_init__(self):
+        self.cardinalities = np.asarray(
+            [len(self.topologies), len(self.chiplet_counts),
+             len(self.routings), max(len(self.shg_bits_choices), 1)],
+            np.int64)
+        self.genome_length = 4
+        mult = 2 if any(t in _ROUTER_TOPOS for t in self.topologies) else 1
+        self.max_nodes = max(self.chiplet_counts) * mult
+
+    def sample(self, rng: np.random.Generator, size: int) -> np.ndarray:
+        return rng.integers(0, self.cardinalities[None, :],
+                            size=(size, self.genome_length))
+
+    def repair(self, genomes: np.ndarray) -> np.ndarray:
+        return np.asarray(genomes, np.int64) % self.cardinalities[None, :]
+
+    def decode_one(self, genome: np.ndarray, index: int) -> DesignPoint:
+        topo_i, count_i, routing_i, bits_i = (int(v) for v in genome)
+        topology = self.topologies[topo_i]
+        n = self.chiplet_counts[count_i]
+        bits = 0
+        if topology == "shg":
+            bits = int(self.shg_bits_choices[bits_i])
+            r, c = grid_dims(n)
+            bits %= 2 ** (r + c - 4)     # clamp to the grid's parametrization
+        return DesignPoint(
+            index=index, topology=topology, n_chiplets=n,
+            traffic_pattern=self.traffic_pattern,
+            routing=self.routings[routing_i], seed=self.seed, shg_bits=bits,
+            packaging=self.packaging, technology=self.technology)
+
+    def enumerate_genomes(self) -> np.ndarray:
+        """Every *distinct* design in the space (the exhaustive-sweep
+        baseline). The SHG-bits gene is inert for non-shg topologies, so it
+        is enumerated only where it changes the decoded design — a cartesian
+        product over all four genes would hand the sweep mostly duplicate
+        evaluations."""
+        rows = []
+        for ti, topo in enumerate(self.topologies):
+            for ci, n in enumerate(self.chiplet_counts):
+                if topo == "shg":
+                    # decode clamps the chosen bits *value* to the grid's
+                    # parametrization; emit one index per distinct clamped
+                    # value so the enumeration never repeats a design
+                    r, c = grid_dims(n)
+                    mod = 2 ** (r + c - 4)
+                    seen_vals: set[int] = set()
+                    bits_range = []
+                    for bi, choice in enumerate(self.shg_bits_choices):
+                        v = int(choice) % mod
+                        if v not in seen_vals:
+                            seen_vals.add(v)
+                            bits_range.append(bi)
+                else:
+                    bits_range = [0]
+                for ri in range(len(self.routings)):
+                    for bi in bits_range:
+                        rows.append((ti, ci, ri, bi))
+        return np.asarray(rows, np.int64)
+
+
+@dataclass
+class AdjacencySpace(SearchSpace):
+    """Free-form topology genome: bit g(u,v) = link between chiplets u < v.
+
+    ``repair`` makes any bit-vector a valid design, deterministically:
+
+    1. degree cap — scan set bits from the highest pair index down and clear
+       any whose endpoints both stay connected but exceed ``max_degree``;
+    2. connectivity — union components by adding a link between each
+       component's minimum-degree chiplet (ties toward the lowest index).
+       A join may exceed the cap by one when a component is saturated;
+       the cap is a soft area-control bound, the chiplet radix follows the
+       realized degree.
+    """
+
+    n_chiplets: int = 32
+    max_degree: int = 8
+    init_density: float | None = None   # default: target max_degree/2 average
+    traffic_pattern: str = "random_uniform"
+    routing: str = "dijkstra_lowest_id"
+    seed: int = 0
+    packaging: Packaging = field(default_factory=Packaging)
+    technology: Technology = field(default_factory=Technology)
+
+    def __post_init__(self):
+        n = self.n_chiplets
+        iu = np.triu_indices(n, k=1)
+        self.pair_u = iu[0].astype(np.int64)
+        self.pair_v = iu[1].astype(np.int64)
+        self.genome_length = len(self.pair_u)
+        self.cardinalities = np.full(self.genome_length, 2, np.int64)
+        self.max_nodes = n
+        if self.init_density is None:
+            self.init_density = min(1.0, 0.5 * self.max_degree / max(n - 1, 1))
+
+    def sample(self, rng: np.random.Generator, size: int) -> np.ndarray:
+        bits = (rng.random((size, self.genome_length))
+                < self.init_density).astype(np.int64)
+        return self.repair(bits)
+
+    def repair(self, genomes: np.ndarray) -> np.ndarray:
+        genomes = np.asarray(genomes, np.int64) % 2
+        return np.stack([self._repair_one(g) for g in genomes])
+
+    def _repair_one(self, bits: np.ndarray) -> np.ndarray:
+        n, maxd = self.n_chiplets, self.max_degree
+        bits = bits.copy()
+        deg = np.zeros(n, np.int64)
+        set_idx = np.nonzero(bits)[0]
+        np.add.at(deg, self.pair_u[set_idx], 1)
+        np.add.at(deg, self.pair_v[set_idx], 1)
+        # 1. degree cap, dropping from the highest pair index down
+        for g in set_idx[::-1]:
+            u, v = self.pair_u[g], self.pair_v[g]
+            if deg[u] > maxd or deg[v] > maxd:
+                bits[g] = 0
+                deg[u] -= 1
+                deg[v] -= 1
+        # 2. connectivity via union-find over the surviving links
+        parent = np.arange(n)
+
+        def find(x):
+            while parent[x] != x:
+                parent[x] = parent[parent[x]]
+                x = parent[x]
+            return x
+
+        for g in np.nonzero(bits)[0]:
+            ru, rv = find(self.pair_u[g]), find(self.pair_v[g])
+            if ru != rv:
+                parent[ru] = rv
+        roots = np.asarray([find(i) for i in range(n)])
+        comp_ids = np.unique(roots)
+        while len(comp_ids) > 1:
+            # connect the two lexicographically-first components at their
+            # minimum-degree chiplets (deterministic, no RNG)
+            members_a = np.nonzero(roots == comp_ids[0])[0]
+            members_b = np.nonzero(roots == comp_ids[1])[0]
+            a = members_a[np.argmin(deg[members_a])]
+            b = members_b[np.argmin(deg[members_b])]
+            u, v = (a, b) if a < b else (b, a)
+            g = self._pair_index(u, v)
+            bits[g] = 1
+            deg[u] += 1
+            deg[v] += 1
+            roots[members_b] = comp_ids[0]
+            comp_ids = np.unique(roots)
+        return bits
+
+    def _pair_index(self, u: int, v: int) -> int:
+        """Index of pair (u, v), u < v, in the upper-triangular flattening."""
+        n = self.n_chiplets
+        return int(u * (2 * n - u - 1) // 2 + (v - u - 1))
+
+    def edges_of(self, bits: np.ndarray) -> tuple:
+        set_idx = np.nonzero(np.asarray(bits, np.int64))[0]
+        return tuple((int(self.pair_u[g]), int(self.pair_v[g]))
+                     for g in set_idx)
+
+    def decode_one(self, genome: np.ndarray, index: int) -> DesignPoint:
+        return DesignPoint(
+            index=index, topology="custom", n_chiplets=self.n_chiplets,
+            traffic_pattern=self.traffic_pattern, routing=self.routing,
+            seed=self.seed, shg_bits=0, packaging=self.packaging,
+            technology=self.technology, links=self.edges_of(genome))

@@ -30,12 +30,15 @@ def _stable(sim: CycleSim, rate: float, cfg: SimConfig,
 def saturation_throughput(sim: CycleSim, config: SimConfig | None = None,
                           latency_cap_factor: float = 4.0,
                           max_rate: float = 1.0,
-                          verbose: bool = False) -> tuple[float, int]:
+                          progress: bool = False) -> tuple[float, int]:
     """Find the saturation injection rate (flits/cycle/node fraction).
 
     Returns (saturation_rate, number_of_simulations_run) — the count feeds
     the speedup comparison, since the paper attributes the throughput
     proxy's larger speedup to the many near-saturation simulations.
+
+    ``progress`` reports each probe of the search, in the same style as
+    ``DseEngine.run(progress=True)``.
     """
     cfg = config or sim.cfg
     zl = zero_load_latency(sim, cfg)
@@ -45,8 +48,8 @@ def saturation_throughput(sim: CycleSim, config: SimConfig | None = None,
     def ok(rate: float) -> bool:
         nonlocal sims
         sims += 1
-        if verbose:
-            print(f"  [sat-search] rate={rate:.3f}")
+        if progress:
+            print(f"[sat] {sims} simulations, probing rate={rate:.3f}")
         return _stable(sim, rate, cfg, latency_cap)
 
     # 10% steps

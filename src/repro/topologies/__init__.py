@@ -1,7 +1,7 @@
-from .registry import TOPOLOGIES, topology_edges, diameter_bound
+from .registry import TOPOLOGIES, topology_edges, diameter_bound, custom_edges
 from .factory import make_design, make_chiplet, grid_placement, hex_placement
 
 __all__ = [
-    "TOPOLOGIES", "topology_edges", "diameter_bound",
+    "TOPOLOGIES", "topology_edges", "diameter_bound", "custom_edges",
     "make_design", "make_chiplet", "grid_placement", "hex_placement",
 ]

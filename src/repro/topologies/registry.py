@@ -25,8 +25,31 @@ def _wrap_grid(fn: Callable[[int, int], list[Edge]]):
     return gen
 
 
+def custom_edges(n: int, edges=()) -> list[Edge]:
+    """Validate + canonicalize an explicit link list (PlaceIT-style free-form
+    topologies; the optimizer's adjacency genome decodes through this).
+
+    Accepts any iterable of (u, v) chiplet-index pairs; returns the sorted,
+    deduplicated undirected edge list. Raises on self-loops and out-of-range
+    indices."""
+    edges = list(edges)
+    if not edges:
+        raise ValueError("custom topology requires a non-empty edges list")
+    seen: set[Edge] = set()
+    for (u, v) in edges:
+        u, v = int(u), int(v)
+        if u == v:
+            raise ValueError(f"custom topology: self-loop on chiplet {u}")
+        if not (0 <= u < n and 0 <= v < n):
+            raise ValueError(
+                f"custom topology: edge ({u},{v}) out of range for n={n}")
+        seen.add((min(u, v), max(u, v)))
+    return sorted(seen)
+
+
 # name -> (edge generator over n chiplets, uses_interposer_routers, placement)
 TOPOLOGIES: dict[str, dict] = {
+    "custom":           {"gen": custom_edges, "routers": False, "placement": "grid"},
     "mesh":             {"gen": _wrap_grid(_g.mesh), "routers": False, "placement": "grid"},
     "torus":            {"gen": _wrap_grid(_g.torus), "routers": False, "placement": "grid"},
     "folded_torus":     {"gen": _wrap_grid(_g.folded_torus), "routers": False, "placement": "grid"},

@@ -81,6 +81,18 @@ class Computation:
     fused: bool = False       # referenced via calls=/to_apply=
 
 
+def _operand_names(comp: Computation, inst: Instruction) -> list[str]:
+    """Operand instruction names of an op call, tolerant of both HLO operand
+    styles: bare ``op(%a, %b)`` and the inline-shape form newer XLA emits,
+    ``op(f32[128,128]{1,0} %a, f32[...] %b)``. Only names that resolve within
+    the computation are returned (shape dtypes like ``f32`` never do)."""
+    args = inst.line.split("(", 1)[-1]
+    named = [o for o in re.findall(r"%([\w\.\-]+)", args) if o in comp.by_name]
+    if named:
+        return named
+    return [o for o in re.findall(r"[\w\.\-]+", args) if o in comp.by_name]
+
+
 def _shape_bytes(shape_txt: str) -> int:
     total = 0
     for dtype, dims in re.findall(r"\b([a-z0-9]+)\[([\d,]*)\]", shape_txt):
@@ -162,16 +174,29 @@ def _trip_count(cond: Computation) -> int:
     return best
 
 
+def _while_trips(inst: Instruction, comps: dict) -> int:
+    """Trip count of a while instruction. Scheduled modules annotate it
+    directly (``backend_config={"known_trip_count":{"n":"9"}}``); fall back to
+    the largest constant in the condition computation."""
+    m = re.search(r'known_trip_count[^}]*"n"\s*:\s*"?(\d+)', inst.line)
+    if m:
+        return int(m.group(1))
+    mc = re.search(r"condition=%?([\w\.\-]+)", inst.line)
+    if mc and mc.group(1) in comps:
+        return _trip_count(comps[mc.group(1)])
+    return 1
+
+
 def _dot_flops(comp: Computation, inst: Instruction) -> float:
     result_elems = 1
     for d in _shape_dims(inst.shape):
         result_elems *= d
     # contracting dims come from the lhs operand's shape
-    m = re.search(r"dot\(%?([\w\.\-]+),", inst.line)
+    ops = _operand_names(comp, inst)
     cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.line)
     contract = 1
-    if m and cdims and m.group(1) in comp.by_name:
-        lhs_dims = _shape_dims(comp.by_name[m.group(1)].shape)
+    if ops and cdims:
+        lhs_dims = _shape_dims(comp.by_name[ops[0]].shape)
         for ci in cdims.group(1).split(","):
             if ci and int(ci) < len(lhs_dims):
                 contract *= lhs_dims[int(ci)]
@@ -183,22 +208,18 @@ def _conv_flops(comp: Computation, inst: Instruction) -> float:
     result_elems = 1
     for d in _shape_dims(inst.shape):
         result_elems *= d
-    m = re.findall(r"%?([\w\.\-]+)", inst.line.split("convolution(")[-1])
+    ops = _operand_names(comp, inst)
     kernel = 1
-    if len(m) >= 2 and m[1] in comp.by_name:
-        kd = _shape_dims(comp.by_name[m[1]].shape)
+    if len(ops) >= 2:
+        kd = _shape_dims(comp.by_name[ops[1]].shape)
         for d in kd[:-1]:       # all but output-feature dim (approximation)
             kernel *= d
     return 2.0 * result_elems * kernel
 
 
 def _operand_bytes(comp: Computation, inst: Instruction) -> int:
-    ops = re.findall(r"%([\w\.\-]+)", inst.line.split("(", 1)[-1])
-    total = 0
-    for o in ops:
-        if o in comp.by_name:
-            total += _shape_bytes(comp.by_name[o].shape)
-    return total
+    return sum(_shape_bytes(comp.by_name[o].shape)
+               for o in _operand_names(comp, inst))
 
 
 @dataclass
@@ -261,19 +282,9 @@ def analyze(hlo: str, exclude_bytes_substring: str | None = None) -> HloCost:
                 if callee not in comps:
                     continue
                 if kind == "while_body":
-                    m = re.search(r"condition=%?([\w\.\-]+)", inst.line)
-                    trips = _trip_count(comps[m.group(1)]) if m and \
-                        m.group(1) in comps else 1
-                    new[callee] += cnt * trips
+                    new[callee] += cnt * _while_trips(inst, comps)
                 elif kind == "while_cond":
-                    m2 = re.search(r"body=%?([\w\.\-]+)", inst.line)
-                    trips = 1
-                    if m2:
-                        mcond = re.search(r"condition=%?([\w\.\-]+)",
-                                          inst.line)
-                        if mcond and mcond.group(1) in comps:
-                            trips = _trip_count(comps[mcond.group(1)])
-                    new[callee] += cnt * (trips + 1)
+                    new[callee] += cnt * (_while_trips(inst, comps) + 1)
                 else:
                     new[callee] += cnt
         new[entry] = 1.0
@@ -316,10 +327,7 @@ def analyze(hlo: str, exclude_bytes_substring: str | None = None) -> HloCost:
                     elif base_op == "dynamic-update-slice":
                         # writes (and reads) only the update window
                         ops_b = [_shape_bytes(comp.by_name[o].shape)
-                                 for o in re.findall(
-                                     r"%([\w\.\-]+)",
-                                     inst.line.split("(", 1)[-1])
-                                 if o in comp.by_name]
+                                 for o in _operand_names(comp, inst)]
                         b = cnt * 2 * (min(ops_b) if ops_b else res_b)
                     else:
                         b = cnt * (res_b + _operand_bytes(comp, inst))
@@ -330,10 +338,17 @@ def analyze(hlo: str, exclude_bytes_substring: str | None = None) -> HloCost:
         # record loop info for diagnostics
         for callee, kind, inst in _call_edges(comp):
             if kind == "while_body" and callee in comps:
-                m = re.search(r"condition=%?([\w\.\-]+)", inst.line)
-                if m and m.group(1) in comps:
-                    out.while_loops.append(
-                        {"body": callee,
-                         "trips": _trip_count(comps[m.group(1)]),
-                         "caller_count": cnt})
+                out.while_loops.append(
+                    {"body": callee,
+                     "trips": _while_trips(inst, comps),
+                     "caller_count": cnt})
     return out
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: some
+    return one dict, others a one-element list of per-partition dicts."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca)

@@ -34,7 +34,9 @@ def test_rotation_preserves_footprint_containment():
 @pytest.mark.parametrize("topo", sorted(TOPOLOGIES))
 def test_generated_designs_validate(topo):
     n = 16
-    design = make_design(topo, n)
+    # "custom" takes an explicit link list; a ring exercises the constructor.
+    kw = {"edges": [(i, (i + 1) % n) for i in range(n)]} if topo == "custom" else {}
+    design = make_design(topo, n, **kw)
     validate_design(design)                      # no exception
     assert not check_overlaps(design)            # no overlapping chiplets
     g = build_graph(design)

@@ -1,0 +1,367 @@
+"""Optimization subsystem tests: spaces, operators, archive, algorithms,
+checkpoint/resume, and the accept-gate — evolutionary search beats random
+search at the same evaluation budget."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import evaluate_design, validate_design
+from repro.opt import (
+    AdjacencySpace, ArchiveEntry, Budgets, EvolutionarySearch, OptRunner,
+    ParametricSpace, ParetoArchive, PopulationEvaluator, RandomSearch,
+    SimulatedAnnealing, crowding_distance, hypervolume_2d, mutate_genes,
+    nondominated_ranks, pareto_front, tournament_select, uniform_crossover,
+)
+from repro.topologies import custom_edges, make_design
+
+
+# ---------------------------------------------------------------------------
+# custom topology + spaces
+# ---------------------------------------------------------------------------
+
+def test_custom_edges_validate_and_canonicalize():
+    assert custom_edges(4, [(1, 0), (0, 1), (2, 3)]) == [(0, 1), (2, 3)]
+    with pytest.raises(ValueError):
+        custom_edges(4, [(0, 0)])
+    with pytest.raises(ValueError):
+        custom_edges(4, [(0, 4)])
+    with pytest.raises(ValueError):
+        custom_edges(4, [])
+
+
+def test_custom_design_matches_mesh():
+    """A custom topology given mesh edges must evaluate exactly like the
+    registered mesh generator (same structure, same proxies)."""
+    from repro.topologies import topology_edges
+    from repro.traffic import make_traffic
+    n = 16
+    edges = topology_edges("mesh", n)
+    t = make_traffic("random_uniform", n)
+    rep_mesh = evaluate_design(make_design("mesh", n), t)
+    rep_custom = evaluate_design(make_design("custom", n, edges=edges), t)
+    assert rep_custom.latency == pytest.approx(rep_mesh.latency, rel=1e-6)
+    assert rep_custom.throughput == pytest.approx(rep_mesh.throughput, rel=1e-6)
+
+
+def test_adjacency_repair_produces_valid_designs():
+    rng = np.random.default_rng(7)
+    space = AdjacencySpace(n_chiplets=12, max_degree=5)
+    raw = (rng.random((6, space.genome_length)) < 0.5).astype(np.int64)
+    repaired = space.repair(raw)
+    for b, bits in enumerate(repaired):
+        pt = space.decode_one(bits, b)
+        design = pt.build()
+        validate_design(design)
+        deg = np.zeros(space.n_chiplets, np.int64)
+        for (u, v) in pt.links:
+            deg[u] += 1
+            deg[v] += 1
+        # soft cap: connectivity joins may exceed by one
+        assert deg.max() <= space.max_degree + 1
+        assert deg.min() >= 1
+        # connected: the latency proxy must be finite everywhere
+        rep = evaluate_design(design, pt.traffic())
+        assert np.isfinite(rep.latency) and np.isfinite(rep.throughput)
+
+
+def test_adjacency_repair_deterministic_and_idempotent_on_valid():
+    rng = np.random.default_rng(3)
+    space = AdjacencySpace(n_chiplets=10, max_degree=4)
+    raw = (rng.random((4, space.genome_length)) < 0.4).astype(np.int64)
+    r1, r2 = space.repair(raw), space.repair(raw)
+    assert np.array_equal(r1, r2)
+    # sampled genomes are already repaired: connected => at least n-1 links
+    g = space.sample(np.random.default_rng(5), 4)
+    for bits in g:
+        assert len(space.edges_of(bits)) >= space.n_chiplets - 1
+        validate_design(space.decode_one(bits, 0).build())
+
+
+def test_parametric_space_decodes_registered_topologies():
+    space = ParametricSpace(chiplet_counts=(16,),
+                            routings=("dijkstra_lowest_id",))
+    genomes = space.enumerate_genomes()
+    # one genome per distinct design: the SHG-bits gene only expands "shg"
+    assert len(genomes) == (len(space.topologies) - 1
+                            + len(space.shg_bits_choices))
+    seen, keys = set(), set()
+    for g in genomes:
+        pt = space.decode_one(g, 0)
+        seen.add(pt.topology)
+        keys.add(pt.structure_key())
+        validate_design(pt.build())
+    assert seen == set(space.topologies)
+    assert len(keys) == len(genomes)      # enumeration holds no duplicates
+
+
+def test_parametric_enumeration_dedupes_clamped_bits():
+    # choice value 16 clamps to 0 on a 4x4 grid: one genome, not two
+    space = ParametricSpace(topologies=("shg",), chiplet_counts=(16,),
+                            routings=("dijkstra_lowest_id",),
+                            shg_bits_choices=(0, 16, 3))
+    genomes = space.enumerate_genomes()
+    keys = {space.decode_one(g, 0).structure_key() for g in genomes}
+    assert len(genomes) == len(keys) == 2
+
+
+def test_evaluate_points_matches_per_design():
+    """The optimizer's batched inner loop must agree with single-design
+    evaluation, including the rounded static hop bound."""
+    from repro.dse import DseEngine
+    space = AdjacencySpace(n_chiplets=10, max_degree=4)
+    genomes = space.sample(np.random.default_rng(11), 5)
+    points = space.decode(genomes)
+    engine = DseEngine()
+    res = engine.evaluate_points(points, n_pad=space.max_nodes,
+                                 round_hops=True)
+    for i, pt in enumerate(points):
+        rep = evaluate_design(pt.build(), pt.traffic())
+        assert res.latency[i] == pytest.approx(rep.latency, rel=1e-4)
+        assert res.throughput[i] == pytest.approx(rep.throughput, rel=1e-3)
+
+
+def test_report_arrays_match_per_design_reports():
+    """The batched report path feeding the constraint masks must agree with
+    the per-design reports exactly."""
+    from repro.core.reports import (
+        area_report, cost_report, power_report, report_arrays,
+    )
+    designs = [make_design(t, n) for t in ("mesh", "torus", "kite")
+               for n in (16, 36)]
+    ra = report_arrays(designs)
+    for b, d in enumerate(designs):
+        a, p, c = area_report(d), power_report(d), cost_report(d)
+        assert ra.total_chiplet_area[b] == pytest.approx(
+            a.total_chiplet_area, rel=1e-12)
+        assert ra.interposer_area[b] == pytest.approx(
+            a.interposer_area, rel=1e-12)
+        assert ra.power[b] == pytest.approx(p.total, rel=1e-12)
+        assert ra.cost[b] == pytest.approx(c.total, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# operators
+# ---------------------------------------------------------------------------
+
+def test_operators_seeded_and_in_range():
+    card = np.asarray([2, 2, 5, 17, 1], np.int64)
+    g = np.zeros((8, 5), np.int64)
+    m1 = mutate_genes(g, card, 0.5, np.random.default_rng(0))
+    m2 = mutate_genes(g, card, 0.5, np.random.default_rng(0))
+    assert np.array_equal(m1, m2)
+    assert (m1 >= 0).all() and (m1 < card[None, :]).all()
+    assert (m1[:, 4] == 0).all()          # cardinality-1 genes never mutate
+    big = mutate_genes(g, card, 1.0, np.random.default_rng(1))
+    assert (big[:, :4] != 0).all()        # rate 1.0 changes every mutable gene
+
+    a = np.zeros((6, 4), np.int64)
+    b = np.ones((6, 4), np.int64)
+    c1 = uniform_crossover(a, b, np.random.default_rng(2))
+    c2 = uniform_crossover(a, b, np.random.default_rng(2))
+    assert np.array_equal(c1, c2)
+    assert set(np.unique(c1)) <= {0, 1}
+
+    scores = np.asarray([5.0, 1.0, 3.0, 0.5])
+    sel = tournament_select(scores, 200, np.random.default_rng(3), k=2)
+    # the best individual must win every tournament it enters
+    assert (scores[sel].mean() < scores.mean())
+
+
+# ---------------------------------------------------------------------------
+# archive + fronts
+# ---------------------------------------------------------------------------
+
+def test_archive_keeps_only_nondominated():
+    a = ParetoArchive()
+    added = a.update([3.0, 1.0, 2.0], [1.0, 1.0, 3.0])
+    # (3,1) dominated by (1,1); survivors: (1,1) and (2,3)
+    assert added == 2
+    assert len(a) == 2
+    a.update([0.5], [0.5])       # new corner point, dominates nothing
+    assert len(a) == 3
+    a.update([0.4], [3.5])       # dominates everything
+    assert len(a) == 1
+    assert a.entries[0].latency == 0.4
+
+
+def test_archive_feasibility_and_nonfinite_filtered():
+    a = ParetoArchive()
+    added = a.update([1.0, 2.0, np.inf], [1.0, 5.0, 9.0],
+                     feasible=[False, True, True])
+    assert added == 1
+    assert a.entries[0].latency == 2.0
+
+
+def test_archive_metrics_and_payload_roundtrip():
+    a = ParetoArchive()
+    a.update([1.0], [2.0], payloads=[[0, 1, 1]],
+             metrics={"cost": np.asarray([42.0])})
+    rows = a.to_dicts()
+    b = ParetoArchive.from_dicts(rows)
+    assert b.entries[0].metrics["cost"] == 42.0
+    assert b.entries[0].payload == [0, 1, 1]
+
+
+def test_hypervolume_2d_known_values():
+    # single point: rectangle to the reference
+    assert hypervolume_2d([2.0], [3.0], ref_latency=4.0,
+                          ref_throughput=1.0) == pytest.approx(4.0)
+    # two-point staircase
+    hv = hypervolume_2d([1.0, 2.0], [1.0, 2.0], ref_latency=3.0,
+                        ref_throughput=0.0)
+    assert hv == pytest.approx(2.0 * 1.0 + 1.0 * 1.0)
+    # dominated point adds nothing
+    hv2 = hypervolume_2d([1.0, 2.0, 2.5], [1.0, 2.0, 1.5], ref_latency=3.0,
+                         ref_throughput=0.0)
+    assert hv2 == pytest.approx(hv)
+    # nothing dominates the reference -> 0
+    assert hypervolume_2d([5.0], [1.0], ref_latency=3.0) == 0.0
+    assert hypervolume_2d([], [], ref_latency=3.0) == 0.0
+
+
+def test_nondominated_ranks_and_crowding():
+    lat = np.asarray([1.0, 2.0, 3.0, 2.0])
+    thr = np.asarray([1.0, 2.0, 1.5, 0.5])
+    feas = np.asarray([True, True, True, False])
+    ranks = nondominated_ranks(lat, thr, feas)
+    assert ranks[0] == 0 and ranks[1] == 0    # the front
+    assert ranks[2] == 1                      # dominated by (2,2)
+    assert ranks[3] == 2                      # infeasible ranks last
+    crowd = crowding_distance(lat, thr, ranks)
+    assert np.isinf(crowd[0]) and np.isinf(crowd[1])
+
+
+def test_nondominated_ranks_nonfinite_feasible_points():
+    # a "feasible" point with non-finite throughput must not crash or hang
+    ranks = nondominated_ranks(np.asarray([1.0, 2.0]),
+                               np.asarray([np.nan, 3.0]),
+                               np.asarray([True, True]))
+    assert ranks[1] == 0          # the finite point leads
+    assert ranks[0] > ranks[1]    # the non-finite one ranks behind
+    only_bad = nondominated_ranks(np.asarray([1.0]), np.asarray([np.nan]),
+                                  np.asarray([True]))
+    assert only_bad[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# pareto_front edge cases (satellite)
+# ---------------------------------------------------------------------------
+
+def test_pareto_front_duplicate_points():
+    lat = np.asarray([1.0, 1.0, 2.0])
+    thr = np.asarray([1.0, 1.0, 2.0])
+    front = pareto_front(lat, thr)
+    # exactly one of the duplicates survives
+    assert len(front) == 2
+    assert 2 in front and (0 in front) != (1 in front)
+
+
+def test_pareto_front_all_masked():
+    front = pareto_front(np.asarray([1.0, 2.0]), np.asarray([1.0, 2.0]),
+                         mask=np.asarray([False, False]))
+    assert len(front) == 0
+
+
+def test_pareto_front_single_point():
+    front = pareto_front(np.asarray([1.0]), np.asarray([5.0]))
+    assert list(front) == [0]
+
+
+def test_pareto_front_throughput_ties():
+    # equal throughput: only the lowest-latency representative survives
+    lat = np.asarray([1.0, 2.0, 3.0])
+    thr = np.asarray([4.0, 4.0, 4.0])
+    assert list(pareto_front(lat, thr)) == [0]
+
+
+def test_pareto_front_empty_input():
+    front = pareto_front(np.asarray([]), np.asarray([]))
+    assert len(front) == 0
+
+
+# ---------------------------------------------------------------------------
+# algorithms: accept-gate + resume (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+def _make_optimizer(cls, seed, size=16, n=12):
+    space = AdjacencySpace(n_chiplets=n, max_degree=5)
+    ev = PopulationEvaluator(space,
+                             budgets=Budgets(max_interposer_area=2500.0))
+    kw = ({"batch_size": size} if cls is RandomSearch
+          else {"n_chains": size} if cls is SimulatedAnnealing
+          else {"pop_size": size})
+    return space, cls(space, ev, seed=seed, **kw)
+
+
+def test_evolutionary_beats_random_at_equal_budget():
+    gens = 12
+    _, ea = _make_optimizer(EvolutionarySearch, seed=0)
+    r_e = OptRunner(ea).run(gens)
+    _, ra = _make_optimizer(RandomSearch, seed=0)
+    r_r = OptRunner(ra).run(gens)
+    assert r_e.n_evals == r_r.n_evals          # same evaluation budget
+    hv_e = r_e.archive.hypervolume(200.0)
+    hv_r = r_r.archive.hypervolume(200.0)
+    assert hv_e > hv_r, (hv_e, hv_r)
+
+
+def test_archive_entries_respect_budget():
+    _, opt = _make_optimizer(EvolutionarySearch, seed=1, size=8)
+    res = OptRunner(opt).run(4)
+    assert len(res.archive) >= 1
+    for e in res.archive.entries:
+        assert e.metrics["interposer_area"] <= 2500.0
+        assert np.isfinite(e.latency) and np.isfinite(e.throughput)
+
+
+def test_simulated_annealing_runs_and_archives():
+    _, opt = _make_optimizer(SimulatedAnnealing, seed=2, size=8)
+    res = OptRunner(opt).run(6)
+    assert res.n_evals == 48
+    assert len(res.archive) >= 1
+    assert opt.temperature < opt.t0
+
+
+def test_resume_reproduces_uninterrupted_run(tmp_path):
+    ckpt = str(tmp_path / "opt.json")
+    gens = 6
+
+    _, full = _make_optimizer(EvolutionarySearch, seed=3, size=10, n=10)
+    r_full = OptRunner(full).run(gens)
+
+    _, part = _make_optimizer(EvolutionarySearch, seed=3, size=10, n=10)
+    OptRunner(part, checkpoint_path=ckpt).run(3)
+    _, fresh = _make_optimizer(EvolutionarySearch, seed=3, size=10, n=10)
+    r_res = OptRunner(fresh, checkpoint_path=ckpt).run(gens)
+
+    a = [(e.latency, e.throughput, e.payload) for e in r_full.archive.front()]
+    b = [(e.latency, e.throughput, e.payload) for e in r_res.archive.front()]
+    assert a == b
+    assert r_full.n_evals == r_res.n_evals
+
+
+def test_checkpoint_is_json_and_atomic(tmp_path):
+    import json
+    ckpt = str(tmp_path / "opt.json")
+    _, opt = _make_optimizer(RandomSearch, seed=4, size=6, n=10)
+    OptRunner(opt, checkpoint_path=ckpt).run(2)
+    with open(ckpt) as f:
+        state = json.load(f)
+    assert state["algo"] == "random"
+    assert state["generation"] == 2
+    assert not os.path.exists(ckpt + ".tmp")
+
+
+def test_structure_cache_hits_across_generations():
+    """Re-visited genomes (elitist survivors re-evaluated, SA rejections)
+    must hit the process-wide structure cache instead of rebuilding."""
+    from repro.core.structure_cache import GLOBAL_STRUCTURE_CACHE
+    space = AdjacencySpace(n_chiplets=10, max_degree=4)
+    ev = PopulationEvaluator(space)
+    genomes = space.sample(np.random.default_rng(9), 6)
+    ev(genomes)
+    before = GLOBAL_STRUCTURE_CACHE.stats()
+    ev(genomes)     # identical population again: all structures cached
+    after = GLOBAL_STRUCTURE_CACHE.stats()
+    assert after["hits"] >= before["hits"] + 6

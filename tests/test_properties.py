@@ -126,6 +126,37 @@ def test_latency_permutation_equivariance(seed):
     assert perm == pytest.approx(base, rel=1e-5)
 
 
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=1, max_value=30))
+@settings(max_examples=50, deadline=None)
+def test_opt_archive_never_keeps_dominated(seed, n_batches, batch):
+    """Whatever sequence of candidate batches (with arbitrary feasibility
+    masks, duplicates, NaN/inf values) is folded in, the archive's entries
+    are pairwise non-dominated and every entry was feasible and finite."""
+    from repro.opt.archive import ParetoArchive
+    rng = np.random.default_rng(seed)
+    archive = ParetoArchive()
+    for _ in range(n_batches):
+        lat = rng.choice([1.0, 2.0, 3.0, np.inf, np.nan], batch) \
+            * rng.uniform(0.5, 2.0, batch)
+        thr = rng.choice([1.0, 2.0, 5.0, np.inf], batch) \
+            * rng.uniform(0.5, 2.0, batch)
+        feas = rng.random(batch) < 0.8
+        archive.update(lat, thr, feasible=feas)
+    lats, thrs = archive.latencies, archive.throughputs
+    assert np.isfinite(lats).all() and np.isfinite(thrs).all()
+    for i in range(len(archive)):
+        for j in range(len(archive)):
+            if i == j:
+                continue
+            dominates = (lats[i] <= lats[j] and thrs[i] >= thrs[j]
+                         and (lats[i] < lats[j] or thrs[i] > thrs[j]))
+            assert not dominates, (i, j, lats, thrs)
+            # no exact duplicates either
+            assert not (lats[i] == lats[j] and thrs[i] == thrs[j])
+
+
 @given(st.sampled_from(["mesh", "torus"]), st.integers(0, 30))
 @settings(max_examples=8, deadline=None)
 def test_proxy_latency_vs_reference_property(topo, seed):
