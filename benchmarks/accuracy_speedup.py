@@ -23,7 +23,7 @@ from repro.core import prepare_arrays, average_latency, throughput_proxy
 from repro.core.latency import routed_diameter
 from repro.sim import SimConfig, saturation_throughput, sim_from_design, zero_load_latency
 from repro.topologies import make_design
-from repro.traffic import make_traffic
+from repro.traffic import make_traffic, unit_injection_scale
 
 from .common import emit, full_mode, time_fn, RESULTS_DIR
 
@@ -46,7 +46,7 @@ def proxy_latency_and_runtime(arrays, traffic):
 def proxy_throughput_and_runtime(arrays, g, traffic):
     """Proxy saturation injection rate under unit link capacity."""
     # scale traffic: heaviest source injects 1 flit/cycle at rate 1.0
-    t = traffic / traffic.sum(axis=1).max()
+    t = unit_injection_scale(traffic)
     n = g.n
     bw_unit = np.where(np.isfinite(g.adj_lat), 1.0, 0.0).astype(np.float32)
     mh = routed_diameter(arrays.next_hop)
@@ -88,7 +88,8 @@ def run_cell(topo: str, pattern: str, n: int, seed: int = 0) -> dict:
                         measure_cycles=cyc, drain_cycles=cyc, seed=seed)
     sim_t = sim_from_design(design, traffic, cfg_thr)
     t0 = time.perf_counter()
-    sat, n_sims = saturation_throughput(sim_t, cfg_thr)
+    sat_res = saturation_throughput(sim_t, cfg_thr)
+    sat, n_probes = sat_res.rate, sat_res.probes
     sim_thr_rt = time.perf_counter() - t0
 
     lat_err = abs(plat - zl.avg_packet_latency) / zl.avg_packet_latency
@@ -101,7 +102,7 @@ def run_cell(topo: str, pattern: str, n: int, seed: int = 0) -> dict:
         "proxy_throughput": pthr, "sim_saturation": sat,
         "throughput_err_pct": 100 * thr_err,
         "throughput_speedup": sim_thr_rt / thr_rt,
-        "n_sat_sims": n_sims,
+        "n_sat_probes": n_probes,
         "proxy_lat_us": lat_rt * 1e6, "proxy_thr_us": thr_rt * 1e6,
         "sim_lat_s": sim_lat_rt, "sim_thr_s": sim_thr_rt,
     }

@@ -196,8 +196,6 @@ class CycleSim:
                                                  - flit.pkt.birth)
                                 measured_done += 1
                                 accepted += psize
-                        if key != "inj" and not flit.is_tail:
-                            pass
                         continue
                     v = int(self.next_hop[u, d])
                     if v == u:
@@ -239,10 +237,9 @@ class CycleSim:
             if progressed:
                 last_progress = cycle
             elif (cycle - last_progress > cfg.deadlock_cycles
-                  and any(inj_q) or self._any_buf(in_buf)):
-                if cycle - last_progress > cfg.deadlock_cycles:
-                    deadlock = True
-                    break
+                  and (any(inj_q) or self._any_buf(in_buf))):
+                deadlock = True
+                break
             cycle += 1
             # early exit once drained
             if cycle > meas_end and not self._any_buf(in_buf) and \
@@ -273,17 +270,21 @@ class CycleSim:
 
 
 def sim_from_design(design, traffic: np.ndarray,
-                    config: SimConfig | None = None) -> CycleSim:
-    """Build a CycleSim from a Design + traffic matrix, using the same
+                    config: SimConfig | None = None,
+                    cls: type | None = None) -> CycleSim:
+    """Build a simulator from a Design + traffic matrix, using the same
     prepared arrays (graph + routing table) as the proxies — so the
-    comparison isolates *proxy approximation error*, not input differences."""
+    comparison isolates *proxy approximation error*, not input differences.
+    ``cls`` picks the engine class (CycleSim default; FastSim via
+    ``fast_sim_from_design``) so both engines see identical inputs."""
     from ..core.proxies import prepare_arrays
 
     arrays, g = prepare_arrays(design)
     n = g.n
     tp = np.zeros((n, n), np.float64)
     tp[:traffic.shape[0], :traffic.shape[1]] = traffic
-    return CycleSim(next_hop=arrays.next_hop,
-                    hop_delay=np.where(np.isfinite(g.adj_lat), g.adj_lat, np.inf),
-                    node_delay=g.node_weight,
-                    traffic_probs=tp, config=config)
+    return (cls or CycleSim)(
+        next_hop=arrays.next_hop,
+        hop_delay=np.where(np.isfinite(g.adj_lat), g.adj_lat, np.inf),
+        node_delay=g.node_weight,
+        traffic_probs=tp, config=config)

@@ -81,6 +81,22 @@ def hotspot(n: int, seed: int = 0, n_hotspots: int = 4,
     return _normalize(t + th)
 
 
+def unit_injection_scale(t: np.ndarray) -> np.ndarray:
+    """Scale a traffic matrix so the heaviest source injects exactly
+    1 flit/cycle at injection rate 1.0.
+
+    The cycle simulators' links carry 1 flit/cycle, so evaluating the
+    throughput proxy on a matrix scaled this way (with unit link
+    capacities) makes its sustainable fraction directly comparable to a
+    simulator's saturation injection rate — the normalization the
+    accuracy/speedup benchmarks rely on (DESIGN note in
+    benchmarks/accuracy_speedup.py)."""
+    mx = t.sum(axis=1).max()
+    if mx <= 0:
+        raise ValueError("traffic pattern has no sending source")
+    return t / mx
+
+
 TRAFFIC_PATTERNS = {
     "random_uniform": random_uniform,
     "transpose": transpose,

@@ -1,10 +1,16 @@
 """Cycle-simulator tests: zero-load latency == latency proxy (by
-construction on uncontended paths), conservation, saturation ordering."""
+construction on uncontended paths), conservation, saturation ordering.
+
+These exercise the slow per-flit ``CycleSim`` oracle and are marked
+``slow`` (the default tier-1 run covers the same behaviours through the
+fast engine in tests/test_simfast.py; CI runs everything with ``-m ''``).
+The watchdog-semantics and search-schedule tests are cheap and stay in
+the default run."""
 import numpy as np
 import pytest
 
 from repro.core import evaluate_design, prepare_arrays, average_latency
-from repro.sim import SimConfig, saturation_throughput, sim_from_design, zero_load_latency
+from repro.sim import CycleSim, SimConfig, saturation_throughput, sim_from_design, zero_load_latency
 from repro.topologies import make_design
 from repro.traffic import make_traffic
 
@@ -14,6 +20,7 @@ def _fast_cfg(seed=0, psize=1):
                      measure_cycles=1200, drain_cycles=2000, seed=seed)
 
 
+@pytest.mark.slow
 def test_zero_load_latency_matches_proxy_single_flit():
     """With 1-flit packets and no contention the simulator must agree with
     the latency proxy to sub-cycle accuracy (rounding of link delays)."""
@@ -29,6 +36,7 @@ def test_zero_load_latency_matches_proxy_single_flit():
     assert st.avg_packet_latency == pytest.approx(rep.latency, rel=0.08)
 
 
+@pytest.mark.slow
 def test_zero_load_latency_transpose_tight():
     n = 16
     design = make_design("torus", n)
@@ -39,6 +47,7 @@ def test_zero_load_latency_transpose_tight():
     assert st.avg_packet_latency == pytest.approx(rep.latency, rel=0.08)
 
 
+@pytest.mark.slow
 def test_multiflit_serialization_adds_latency():
     n = 9
     design = make_design("mesh", n)
@@ -51,6 +60,7 @@ def test_multiflit_serialization_adds_latency():
     assert s4.avg_packet_latency > s1.avg_packet_latency + 2.0
 
 
+@pytest.mark.slow
 def test_accepted_tracks_offered_below_saturation():
     n = 16
     design = make_design("torus", n)
@@ -62,6 +72,7 @@ def test_accepted_tracks_offered_below_saturation():
         st.offered_flits_per_node, rel=0.1)
 
 
+@pytest.mark.slow
 def test_overload_is_unstable():
     n = 16
     design = make_design("mesh", n)
@@ -72,6 +83,7 @@ def test_overload_is_unstable():
     assert (not st.stable) or st.avg_packet_latency > 200
 
 
+@pytest.mark.slow
 def test_saturation_ordering_mesh_torus_fb():
     """More bisection bandwidth -> higher saturation point."""
     n = 16
@@ -82,12 +94,14 @@ def test_saturation_ordering_mesh_torus_fb():
         cfg = SimConfig(packet_size_flits=2, warmup_cycles=200,
                         measure_cycles=800, drain_cycles=1500, seed=0)
         sim = sim_from_design(design, traffic, cfg)
-        sat[topo], _ = saturation_throughput(sim, cfg)
+        sat[topo] = saturation_throughput(sim, cfg).rate
     assert sat["flattened_butterfly"] > sat["mesh"]
 
 
 def test_saturation_search_schedule_counts():
-    """The search must follow the 10% -> 1% -> 0.1% refinement schedule."""
+    """The search must follow the 10% -> 1% -> 0.1% refinement schedule,
+    and report the paper's probe count (9) separately from the zero-load
+    calibration run."""
     calls = []
 
     class FakeSim:
@@ -103,9 +117,37 @@ def test_saturation_search_schedule_counts():
                             accepted_flits_per_node=rate if stable else 0.0,
                             packets_measured=100, stable=stable)
 
-    sat, sims = saturation_throughput(FakeSim())
-    assert sat == pytest.approx(0.123)
-    # paper example: 0.005 (zero load) + 10,20 + 11,12,13 + 12.1..12.4
+    res = saturation_throughput(FakeSim())
+    assert res.rate == pytest.approx(0.123)
+    # paper example: "9 simulations" = the probes; the zero-load run (0.005)
+    # is accounted separately
+    assert res.probes == 9
+    assert res.zero_load_runs == 1
+    assert res.total_sims == 10
     assert calls == [0.005, 0.1, 0.2, 0.11, 0.12, 0.13,
                      pytest.approx(0.121), pytest.approx(0.122),
                      pytest.approx(0.123), pytest.approx(0.124)]
+
+
+def test_watchdog_flags_idle_but_undrained_network():
+    """Regression for the `A and B or C` precedence bug: the watchdog must
+    trip exactly once the no-progress window elapses while flits are still
+    buffered (here: in flight across an absurdly slow link), and must NOT
+    trip when the horizon ends first or when the window outlasts the
+    stall."""
+    hop = np.full((2, 2), np.inf)
+    hop[0, 1] = hop[1, 0] = 5000.0
+    tp = np.zeros((2, 2))
+    tp[0, 1] = 1.0
+    for dc, drain, expect in ((50, 200, True),      # window elapses -> trip
+                              (50, 30, False),      # horizon ends first
+                              (6000, 20000, False)):  # flit arrives in time
+        cfg = SimConfig(packet_size_flits=1, warmup_cycles=0,
+                        measure_cycles=10, drain_cycles=drain,
+                        deadlock_cycles=dc, seed=0)
+        sim = CycleSim(next_hop=np.array([[0, 1], [0, 1]]), hop_delay=hop,
+                       node_delay=np.zeros(2), traffic_probs=tp, config=cfg)
+        st = sim.run(1.0)
+        assert st.deadlock == expect, (dc, drain)
+        if expect:
+            assert not st.stable

@@ -1,0 +1,261 @@
+"""FastSim tests: backend bit-identity (numpy / C / jax), cross-engine
+equivalence against the CycleSim oracle (exact on deterministic single-flow
+runs, statistical elsewhere), batched-search equivalence, and the fast-engine
+versions of the legacy behavioural tests (the slow CycleSim originals keep
+running under ``-m ''``/``-m slow``)."""
+import numpy as np
+import pytest
+
+from repro.core import evaluate_design
+from repro.sim import (FastSim, SaturationResult, SimConfig,
+                       fast_sim_from_design, saturation_throughput,
+                       saturation_throughput_batched, sim_from_design,
+                       zero_load_latency)
+from repro.topologies import make_design
+from repro.traffic import make_traffic
+
+
+def _fast_cfg(seed=0, psize=1):
+    return SimConfig(packet_size_flits=psize, warmup_cycles=300,
+                     measure_cycles=1200, drain_cycles=2000, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# exactness: deterministic single-flow runs match CycleSim and the analytic
+# hop/delay sum bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("psize", [1, 4])
+def test_single_flow_exact_vs_oracle_and_analytic(psize):
+    n = 16
+    design = make_design("mesh", n)
+    t = np.zeros((n, n))
+    t[0, n - 1] = 1.0
+    cfg = SimConfig(packet_size_flits=psize, warmup_cycles=200,
+                    measure_cycles=1000, drain_cycles=1500, seed=2)
+    ref = sim_from_design(design, t, cfg)
+    fast = fast_sim_from_design(design, t, cfg)
+    sr = ref.run(0.004)
+    sf = fast.run(0.004)
+    assert sr.packets_measured > 0 and sf.packets_measured > 0
+    # analytic uncontended latency along the routed path
+    u, d, lat = 0, n - 1, 0
+    while u != d:
+        v = int(ref.next_hop[u, d])
+        lat += int(ref.node_delay[u] + ref.hop_delay[u, v])
+        u = v
+    lat += int(ref.node_delay[d]) + (psize - 1)
+    assert sr.avg_packet_latency == lat
+    assert sf.avg_packet_latency == lat
+
+
+# ---------------------------------------------------------------------------
+# backend bit-identity
+# ---------------------------------------------------------------------------
+
+def test_batch_equals_solo_runs():
+    n = 16
+    design = make_design("mesh", n)
+    traffic = make_traffic("random_uniform", n)
+    cfg = SimConfig(packet_size_flits=2, warmup_cycles=200,
+                    measure_cycles=800, drain_cycles=1500, seed=0)
+    fast = fast_sim_from_design(design, traffic, cfg)
+    rates = [0.05, 0.15, 0.3]
+    solo = [fast.run_batch([r], cfg, backend="numpy")[0] for r in rates]
+    batch = fast.run_batch(rates, cfg, backend="numpy")
+    assert solo == batch
+
+
+def test_c_backend_bit_identical_to_numpy():
+    from repro.sim._ckernel import get_kernel
+    if get_kernel() is None:
+        pytest.skip("no C compiler available")
+    n = 16
+    design = make_design("mesh", n)
+    for pattern, psize, seed in (("random_uniform", 4, 0),
+                                 ("hotspot", 2, 1)):
+        traffic = make_traffic(pattern, n, seed=0)
+        cfg = SimConfig(packet_size_flits=psize, warmup_cycles=200,
+                        measure_cycles=700, drain_cycles=1200, seed=seed)
+        fast = fast_sim_from_design(design, traffic, cfg)
+        a = fast.run_batch([0.04, 0.3, 0.8], cfg, backend="numpy")
+        b = fast.run_batch([0.04, 0.3, 0.8], cfg, backend="c")
+        assert a == b
+
+
+@pytest.mark.slow
+def test_jax_backend_bit_identical_to_numpy():
+    pytest.importorskip("jax")
+    n = 16
+    design = make_design("mesh", n)
+    traffic = make_traffic("random_uniform", n)
+    cfg = SimConfig(packet_size_flits=2, warmup_cycles=200,
+                    measure_cycles=800, drain_cycles=1500, seed=0)
+    fast = fast_sim_from_design(design, traffic, cfg)
+    a = fast.run_batch([0.05, 0.3], cfg, backend="numpy")
+    b = fast.run_batch([0.05, 0.3], cfg, backend="jax")
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# fast-engine versions of the legacy behavioural tests
+# ---------------------------------------------------------------------------
+
+def test_zero_load_latency_matches_proxy_single_flit():
+    n = 16
+    design = make_design("mesh", n)
+    traffic = make_traffic("random_uniform", n)
+    sim = fast_sim_from_design(design, traffic, _fast_cfg())
+    st = zero_load_latency(sim, rate=0.004)
+    assert st.packets_measured > 30
+    rep = evaluate_design(design, traffic)
+    assert st.avg_packet_latency == pytest.approx(rep.latency, rel=0.08)
+
+
+def test_zero_load_latency_transpose_tight():
+    n = 16
+    design = make_design("torus", n)
+    traffic = make_traffic("transpose", n)
+    sim = fast_sim_from_design(design, traffic, _fast_cfg(seed=3))
+    st = zero_load_latency(sim, rate=0.004)
+    rep = evaluate_design(design, traffic)
+    assert st.avg_packet_latency == pytest.approx(rep.latency, rel=0.08)
+
+
+def test_multiflit_serialization_adds_latency():
+    n = 9
+    design = make_design("mesh", n)
+    traffic = make_traffic("random_uniform", n)
+    s1 = zero_load_latency(
+        fast_sim_from_design(design, traffic, _fast_cfg(psize=1)),
+        rate=0.004)
+    s4 = zero_load_latency(
+        fast_sim_from_design(design, traffic, _fast_cfg(psize=4)),
+        rate=0.004)
+    assert s4.avg_packet_latency > s1.avg_packet_latency + 2.0
+
+
+def test_accepted_tracks_offered_below_saturation():
+    n = 16
+    design = make_design("torus", n)
+    traffic = make_traffic("random_uniform", n)
+    sim = fast_sim_from_design(design, traffic, _fast_cfg(seed=1))
+    st = sim.run(0.05)
+    assert st.stable
+    assert st.accepted_flits_per_node == pytest.approx(
+        st.offered_flits_per_node, rel=0.1)
+
+
+def test_overload_is_unstable():
+    n = 16
+    design = make_design("mesh", n)
+    traffic = make_traffic("hotspot", n, seed=0)
+    sim = fast_sim_from_design(design, traffic, _fast_cfg(seed=1, psize=4))
+    st = sim.run(0.9)
+    assert (not st.stable) or st.avg_packet_latency > 200
+
+
+def test_saturation_ordering_mesh_fb():
+    """More bisection bandwidth -> higher saturation point."""
+    n = 16
+    traffic = make_traffic("random_uniform", n)
+    sat = {}
+    for topo in ("mesh", "flattened_butterfly"):
+        design = make_design(topo, n)
+        cfg = SimConfig(packet_size_flits=2, warmup_cycles=200,
+                        measure_cycles=800, drain_cycles=1500, seed=0)
+        sim = fast_sim_from_design(design, traffic, cfg)
+        sat[topo] = saturation_throughput_batched(sim, cfg).rate
+    assert sat["flattened_butterfly"] > sat["mesh"]
+
+
+# ---------------------------------------------------------------------------
+# cross-engine statistical equivalence
+# ---------------------------------------------------------------------------
+
+def test_cross_engine_zero_load_latency():
+    """With enough samples the engines' zero-load means agree closely
+    (per-packet latencies are identical; only pair sampling differs)."""
+    n = 16
+    design = make_design("mesh", n)
+    traffic = make_traffic("random_uniform", n)
+    cfg = SimConfig(packet_size_flits=2, warmup_cycles=300,
+                    measure_cycles=6000, drain_cycles=2000, seed=0)
+    zr = sim_from_design(design, traffic, cfg).run(0.02, cfg)
+    zf = fast_sim_from_design(design, traffic, cfg).run(0.02, cfg)
+    assert zf.avg_packet_latency == pytest.approx(
+        zr.avg_packet_latency, rel=0.05)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("topo", ["mesh", "hexamesh"])
+def test_cross_engine_saturation_within_coarse_step(topo):
+    """Under a shared latency cap the engines' saturation rates agree to
+    within one coarse (10%) refinement step — the residual comes from
+    arbitration-order differences near saturation."""
+    n = 16
+    design = make_design(topo, n)
+    traffic = make_traffic("random_uniform", n)
+    cfg = SimConfig(packet_size_flits=2, warmup_cycles=400,
+                    measure_cycles=1600, drain_cycles=2500, seed=0)
+    cap = 300.0
+    rr = saturation_throughput(sim_from_design(design, traffic, cfg),
+                               cfg, latency_cap=cap)
+    rf = saturation_throughput_batched(
+        fast_sim_from_design(design, traffic, cfg), cfg, latency_cap=cap)
+    assert abs(rr.rate - rf.rate) <= 0.1
+    assert rr.zero_load_runs == rf.zero_load_runs == 0
+
+
+# ---------------------------------------------------------------------------
+# batched search == sequential search; accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.filterwarnings("ignore:os.fork")
+def test_batched_search_equals_sequential():
+    n = 16
+    design = make_design("mesh", n)
+    traffic = make_traffic("random_uniform", n)
+    cfg = SimConfig(packet_size_flits=2, warmup_cycles=200,
+                    measure_cycles=800, drain_cycles=1500, seed=0)
+    fast = fast_sim_from_design(design, traffic, cfg)
+    seq = saturation_throughput(fast, cfg)
+    bat = saturation_throughput_batched(fast, cfg)
+    par = saturation_throughput_batched(fast, cfg, workers=2, chunk=6)
+    assert (seq.rate, seq.probes) == (bat.rate, bat.probes)
+    assert (seq.rate, seq.probes) == (par.rate, par.probes)
+    assert seq.zero_load_runs == 1
+    assert seq.total_sims == seq.probes + 1
+
+
+def test_saturation_result_accounting():
+    r = SaturationResult(rate=0.123, probes=9, zero_load_runs=1)
+    assert r.total_sims == 10
+    rate, probes, zl = r          # tuple protocol
+    assert (rate, probes, zl) == (0.123, 9, 1)
+
+
+# ---------------------------------------------------------------------------
+# deadlock watchdog semantics (fast engine mirror of the CycleSim test)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["numpy", "c"])
+def test_watchdog_idle_but_undrained(backend):
+    if backend == "c":
+        from repro.sim._ckernel import get_kernel
+        if get_kernel() is None:
+            pytest.skip("no C compiler available")
+    hop = np.full((2, 2), np.inf)
+    hop[0, 1] = hop[1, 0] = 5000.0
+    tp = np.zeros((2, 2))
+    tp[0, 1] = 1.0
+    for dc, drain, expect in ((50, 200, True),      # window elapses -> trip
+                              (50, 30, False),      # horizon ends first
+                              (6000, 20000, False)):  # flit arrives in time
+        cfg = SimConfig(packet_size_flits=1, warmup_cycles=0,
+                        measure_cycles=10, drain_cycles=drain,
+                        deadlock_cycles=dc, seed=0)
+        sim = FastSim(next_hop=np.array([[0, 1], [0, 1]]), hop_delay=hop,
+                      node_delay=np.zeros(2), traffic_probs=tp, config=cfg)
+        st = sim.run_batch([1.0], cfg, backend=backend)[0]
+        assert st.deadlock == expect, (backend, dc, drain)
