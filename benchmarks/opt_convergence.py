@@ -1,5 +1,5 @@
 """Optimizer-vs-sweep benchmark: evals/s and front hypervolume at equal
-evaluation budget.
+evaluation budget, plus the host-path vs device-path cost-function record.
 
 Primary comparison — same parametric design space (topologies x chiplet
 counts x routings x SHG parametrizations, 1000+ designs), same evaluation
@@ -11,12 +11,20 @@ budget, same interposer-area constraint, same hypervolume reference point:
   adaptively across the whole space.
 
 Secondary record: the same optimizer on the free-form adjacency space for 32
-chiplets — 2^496 genomes, a space no sweep can enumerate at any budget.
+chiplets — 2^496 genomes, a space no sweep can enumerate at any budget —
+run twice, once through the classic host path (decode -> DesignPoint ->
+graph build -> numpy routing tables) and once through the fused device
+genome pipeline (``DseEngine.evaluate_genomes``), with total and
+steady-state (post-compile) evals/s side by side. The steady-state rate is
+what a 100k-point search pays per evaluation.
 
-Emits BENCH_opt.json at the repo root (the perf-trajectory record).
+Emits BENCH_opt.json at the repo root (the perf-trajectory record);
+``--smoke`` runs a tiny configuration for CI (pass ``--out`` to keep the
+committed record intact).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -63,14 +71,85 @@ def _fresh_caches():
     jax.clear_caches()
 
 
-def run_opt(space, budget_evals: int):
-    opt = EvolutionarySearch(space, evaluator_for(space), seed=0,
-                             pop_size=POP_SIZE)
+def run_opt(space, budget_evals: int, pop_size: int | None = None,
+            device_path: bool | None = None):
+    pop_size = pop_size or POP_SIZE
+    evaluator = PopulationEvaluator(
+        space, budgets=Budgets(max_interposer_area=AREA_BUDGET),
+        device_path=device_path)
+    opt = EvolutionarySearch(space, evaluator, seed=0, pop_size=pop_size)
     _fresh_caches()
     t0 = time.perf_counter()
-    result = OptRunner(opt).run(budget_evals // POP_SIZE)
+    result = OptRunner(opt).run(budget_evals // pop_size)
     dt = time.perf_counter() - t0
     return result, dt
+
+
+def _median(xs):
+    xs = sorted(xs)
+    return xs[len(xs) // 2]
+
+
+def run_opt_timed_generations(space, generations: int, pop_size: int,
+                              device_path: bool):
+    """One optimizer run with per-generation wall-clock: returns (result,
+    total seconds, steady-state seconds/gen — the median over generations
+    after the first, which carries jit compiles and cold caches; the median
+    keeps co-tenant CPU spikes out of the record)."""
+    evaluator = PopulationEvaluator(
+        space, budgets=Budgets(max_interposer_area=AREA_BUDGET),
+        device_path=device_path)
+    opt = EvolutionarySearch(space, evaluator, seed=0, pop_size=pop_size)
+    _fresh_caches()
+    gen_s = []
+    for _ in range(generations):
+        t0 = time.perf_counter()
+        opt.step()
+        gen_s.append(time.perf_counter() - t0)
+    steady = _median(gen_s[1:]) if len(gen_s) > 1 else gen_s[0]
+    return opt, sum(gen_s), steady
+
+
+def run_cost_function(space, pop_size: int, n_calls: int):
+    """The acceptance-criterion microbenchmark: the genome→metrics cost
+    function itself, host path (decode → DesignPoint → structure build →
+    evaluate_points) vs device path (evaluate_genomes), on identical fresh
+    populations (fresh genomes are the realistic case — a free-form search
+    rarely revisits a structure). Median seconds per call, first call (jit
+    compile / cold caches) excluded."""
+    import numpy as np
+    from repro.dse import DseEngine
+
+    rng = np.random.default_rng(123)
+    pops = [space.sample(rng, pop_size) for _ in range(n_calls + 1)]
+    engine = DseEngine()
+    _fresh_caches()
+
+    def host_call(genomes):
+        engine.evaluate_points(space.decode(genomes), n_pad=space.max_nodes,
+                               round_hops=True)
+
+    def device_call(genomes):
+        engine.evaluate_genomes(space, genomes)
+
+    # Interleave the two paths on identical populations so co-tenant CPU
+    # drift hits both equally; the first pair (jit compile, cold caches) is
+    # recorded separately.
+    times = {"host": [], "device": []}
+    for genomes in pops:
+        for name, call in (("host", host_call), ("device", device_call)):
+            t0 = time.perf_counter()
+            call(genomes)
+            times[name].append(time.perf_counter() - t0)
+    out = {}
+    for name in ("host", "device"):
+        med = _median(times[name][1:])
+        out[name] = {"s_per_call": round(med, 5),
+                     "evals_per_s": round(pop_size / med, 2),
+                     "first_call_s": round(times[name][0], 4)}
+    out["speedup"] = round(out["device"]["evals_per_s"]
+                           / out["host"]["evals_per_s"], 2)
+    return out
 
 
 def run_sweep(space: ParametricSpace, budget_evals: int):
@@ -88,15 +167,35 @@ def run_sweep(space: ParametricSpace, budget_evals: int):
     return archive, evaluator.n_evals, dt
 
 
-def main():
-    budget = POP_SIZE * GENERATIONS
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny CI configuration (seconds, not minutes)")
+    p.add_argument("--out", type=str, default=OUT_PATH,
+                   help="output JSON path")
+    args = p.parse_args(argv)
+    if args.smoke and os.path.abspath(args.out) == OUT_PATH:
+        # never clobber the committed full-run record with a smoke run
+        args.out = os.path.join(os.path.dirname(OUT_PATH),
+                                "BENCH_opt_smoke.json")
+        print(f"--smoke without --out: writing to {args.out} instead of "
+              f"the committed record")
+
+    pop_size = 8 if args.smoke else POP_SIZE
+    generations = 3 if args.smoke else GENERATIONS
+    adj_chiplets = 16 if args.smoke else ADJ_CHIPLETS
+    # Device-vs-host phase: enough generations that the one-time jit compile
+    # does not drown the steady-state signal the record is about.
+    path_gens = 4 if args.smoke else max(GENERATIONS, 20)
+
+    budget = pop_size * generations
     pspace = parametric_space()
     space_size = len(pspace.enumerate_genomes())
     print(f"opt_convergence: {budget} evaluations each over a "
           f"{space_size}-design parametric space, "
           f"interposer <= {AREA_BUDGET:.0f} mm^2")
 
-    result, opt_s = run_opt(pspace, budget)
+    result, opt_s = run_opt(pspace, budget, pop_size)
     hv_opt = result.archive.hypervolume(REF_LATENCY)
     print(f"opt:   {result.n_evals} evals in {opt_s:.2f}s "
           f"({result.n_evals / opt_s:.1f} evals/s)  hv={hv_opt:.4g}")
@@ -106,18 +205,59 @@ def main():
     print(f"sweep: {sweep_evals} evals in {sweep_s:.2f}s "
           f"({sweep_evals / sweep_s:.1f} evals/s)  hv={hv_sweep:.4g}")
 
-    adj_space = AdjacencySpace(n_chiplets=ADJ_CHIPLETS, max_degree=8)
-    adj_result, adj_s = run_opt(adj_space, budget)
-    hv_adj = adj_result.archive.hypervolume(REF_LATENCY)
-    print(f"free-form ({ADJ_CHIPLETS} chiplets, 2^{adj_space.genome_length} "
-          f"designs): {adj_result.n_evals} evals in {adj_s:.2f}s  "
-          f"hv={hv_adj:.4g}")
+    # -- host path vs device path on the free-form space (same seed/budget) --
+    adj_space = AdjacencySpace(n_chiplets=adj_chiplets, max_degree=8)
+    path_evals = pop_size * path_gens
+    sides = {}
+    for name, device in (("host", False), ("device", True)):
+        opt, total_s, steady_s = run_opt_timed_generations(
+            adj_space, path_gens, pop_size, device)
+        hv = opt.archive.hypervolume(REF_LATENCY)
+        sides[name] = {
+            "evals": opt.evaluator.n_evals,
+            "total_s": round(total_s, 4),
+            "evals_per_s": round(opt.evaluator.n_evals / total_s, 2),
+            "steady_state_s_per_gen": round(steady_s, 5),
+            "steady_state_evals_per_s": round(pop_size / steady_s, 2),
+            "hypervolume": round(hv, 2),
+            "front_size": len(opt.archive),
+        }
+        print(f"free-form {name} path ({adj_chiplets} chiplets, "
+              f"2^{adj_space.genome_length} designs): "
+              f"{opt.evaluator.n_evals} evals in {total_s:.2f}s "
+              f"({sides[name]['evals_per_s']} evals/s, steady "
+              f"{sides[name]['steady_state_evals_per_s']} evals/s)  "
+              f"hv={hv:.4g}")
+    speedup = (sides["device"]["steady_state_evals_per_s"]
+               / max(sides["host"]["steady_state_evals_per_s"], 1e-9))
+    total_speedup = (sides["device"]["evals_per_s"]
+                     / max(sides["host"]["evals_per_s"], 1e-9))
+    print(f"device/host steady-state speedup: {speedup:.1f}x "
+          f"(whole-run {total_speedup:.1f}x)")
+
+    # -- the cost function itself (the acceptance-criterion record), at the
+    # benchmark population and at the batch size a 100k-point search would
+    # actually use --
+    cost_fn = run_cost_function(adj_space, pop_size,
+                                n_calls=3 if args.smoke else 9)
+    print(f"cost function ({adj_chiplets} chiplets, pop {pop_size}): "
+          f"host {cost_fn['host']['evals_per_s']} evals/s, "
+          f"device {cost_fn['device']['evals_per_s']} evals/s "
+          f"-> {cost_fn['speedup']}x")
+    big_pop = 32 if args.smoke else 64
+    cost_fn_big = run_cost_function(adj_space, big_pop,
+                                    n_calls=3 if args.smoke else 7)
+    print(f"cost function ({adj_chiplets} chiplets, pop {big_pop}): "
+          f"host {cost_fn_big['host']['evals_per_s']} evals/s, "
+          f"device {cost_fn_big['device']['evals_per_s']} evals/s "
+          f"-> {cost_fn_big['speedup']}x")
 
     record = {
         "benchmark": "opt_convergence",
+        "smoke": bool(args.smoke),
         "budget_evals": budget,
-        "pop_size": POP_SIZE,
-        "generations": GENERATIONS,
+        "pop_size": pop_size,
+        "generations": generations,
         "max_interposer_area": AREA_BUDGET,
         "ref_latency": REF_LATENCY,
         "parametric_space_size": space_size,
@@ -131,17 +271,26 @@ def main():
         "sweep_evals_per_s": round(sweep_evals / sweep_s, 2),
         "sweep_hypervolume": round(hv_sweep, 2),
         "hypervolume_ratio": round(hv_opt / max(hv_sweep, 1e-9), 4),
-        "adjacency_chiplets": ADJ_CHIPLETS,
+        "adjacency_chiplets": adj_chiplets,
         "adjacency_genome_bits": adj_space.genome_length,
-        "adjacency_evals_per_s": round(adj_result.n_evals / adj_s, 2),
-        "adjacency_hypervolume": round(hv_adj, 2),
+        "adjacency_budget_evals": path_evals,
+        "adjacency_host": sides["host"],
+        "adjacency_device": sides["device"],
+        "adjacency_device_speedup_steady_state": round(speedup, 2),
+        "adjacency_device_speedup_total": round(total_speedup, 2),
+        "cost_function": cost_fn,
+        "cost_function_batch_pop": big_pop,
+        "cost_function_batch": cost_fn_big,
+        # legacy field: the default path is now the device pipeline
+        "adjacency_evals_per_s": sides["device"]["evals_per_s"],
+        "adjacency_hypervolume": sides["device"]["hypervolume"],
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
     }
-    with open(OUT_PATH, "w") as f:
+    with open(args.out, "w") as f:
         json.dump(record, f, indent=2)
         f.write("\n")
     print(f"hypervolume ratio (opt/sweep at equal budget): "
-          f"{record['hypervolume_ratio']}x -> {OUT_PATH}")
+          f"{record['hypervolume_ratio']}x -> {args.out}")
 
 
 if __name__ == "__main__":

@@ -31,14 +31,24 @@ import jax
 import jax.numpy as jnp
 
 
-@functools.partial(jax.jit, static_argnames=("max_hops", "use_kernel"))
+@functools.partial(jax.jit, static_argnames=("max_hops", "use_kernel",
+                                              "adaptive"))
 def edge_flows(next_hop: jax.Array, traffic: jax.Array,
                max_hops: int | None = None,
-               use_kernel: bool = False) -> jax.Array:
+               use_kernel: bool = False,
+               adaptive: bool = False) -> jax.Array:
     """Directed edge flows [n, n]: flow[u, v] = total traffic traversing the
     directed channel u->v under the routing table.
 
     traffic is [n_chiplets, n_chiplets]; routers never source traffic.
+
+    ``adaptive=True`` replaces the fixed-length scan with a while_loop that
+    stops once every route has reached its destination (``max_hops`` stays
+    the safety bound). Same flows; the trip count becomes the actual routed
+    diameter instead of the static bound — the right trade for the fused
+    genome pipeline, where the bound must be shape-stable (n-1) but real
+    diameters are small. Under vmap the loop runs until the *batch* maximum
+    diameter.
     """
     n = next_hop.shape[0]
     n_c = traffic.shape[0]
@@ -54,27 +64,106 @@ def edge_flows(next_hop: jax.Array, traffic: jax.Array,
     if use_kernel:
         from ..kernels.ops import flow_accumulate
 
-        def body(carry, _):
-            cur, flow = carry
+        def step(cur, flow):
             nxt = next_hop[cur, dest]
             active = (cur != dest) & (amount > 0)
             contrib = jnp.where(active, amount, 0.0)
             flow = flow_accumulate(flow, cur, nxt, contrib)
-            return (jnp.where(active, nxt, cur), flow), None
+            return jnp.where(active, nxt, cur), flow
     else:
-        def body(carry, _):
-            cur, flow = carry
+        def step(cur, flow):
             nxt = next_hop[cur, dest]
             active = (cur != dest) & (amount > 0)
             contrib = jnp.where(active, amount, 0.0)
             flat = cur.astype(jnp.int32) * n + nxt.astype(jnp.int32)
             flow = flow.ravel().at[flat].add(contrib).reshape(n, n)
-            return (jnp.where(active, nxt, cur), flow), None
+            return jnp.where(active, nxt, cur), flow
 
-    (_, flow), _ = jax.lax.scan(
-        body, (cur0, jnp.zeros((n, n), dtype=jnp.float32)), None,
-        length=max_hops)
+    flow0 = jnp.zeros((n, n), dtype=jnp.float32)
+    if adaptive:
+        def cond(state):
+            i, cur, _ = state
+            return (i < max_hops) & jnp.any((cur != dest) & (amount > 0))
+
+        def body(state):
+            i, cur, flow = state
+            cur, flow = step(cur, flow)
+            return i + 1, cur, flow
+
+        _, _, flow = jax.lax.while_loop(cond, body,
+                                        (jnp.int32(0), cur0, flow0))
+        return flow
+
+    def body(carry, _):
+        return step(*carry), None
+
+    (_, flow), _ = jax.lax.scan(body, (cur0, flow0), None, length=max_hops)
     return flow
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops", "adaptive"))
+def edge_flows_load(next_hop: jax.Array, traffic: jax.Array,
+                    max_hops: int | None = None,
+                    adaptive: bool = True) -> jax.Array:
+    """``edge_flows`` reformulated as per-destination load propagation —
+    scatter-free, for backends where XLA scatter-add is a scalar loop (CPU).
+
+    State is the load matrix L[u, d] = traffic currently residing at u and
+    destined for d. The routing table is static across hops, so its one-hot
+    tensor OH[u, d, v] = [next_hop[u, d] = v and u != d] is built once;
+    each hop is one small dot contraction propagating the load, the summed
+    per-hop loads W = Σ_j L_j are accumulated as a cheap [n, n] add, and
+    the edge flows come from ONE final contraction
+
+        flow[u, v] = Σ_d OH[u, d, v] · W[u, d]
+
+    (every unit of load at u toward d crosses edge (u, next_hop[u, d])
+    exactly once per hop). Delivered traffic (u == d) leaves the system;
+    unreachable pairs (next_hop[u, d] = u) accumulate on the diagonal
+    exactly like the walk in ``edge_flows`` (zero-bandwidth self-edges
+    drive the proxy to 0). Same flows as ``edge_flows`` up to f32
+    summation order (asserted in tests/test_device_path.py); the fused
+    genome pipeline (``dse.genomes._eval_proxies``) inlines this
+    formulation to extract the traffic-weighted latency from the same load
+    tensor.
+    """
+    n = next_hop.shape[0]
+    n_c = traffic.shape[0]
+    if max_hops is None:
+        max_hops = n - 1
+    ids = jnp.arange(n, dtype=next_hop.dtype)
+    oh = ((next_hop[:, :, None] == ids[None, None, :]) &
+          (ids[:, None, None] != ids[None, :, None])).astype(jnp.float32)
+    offdiag = ~jnp.eye(n, dtype=bool)
+    load0 = jnp.zeros((n, n), dtype=jnp.float32).at[:n_c, :n_c].set(
+        traffic.astype(jnp.float32))
+    load0 = jnp.where(offdiag, load0, 0.0)
+
+    def step(load, total):
+        total = total + load
+        load = jnp.einsum("udv,ud->vd", oh, load)
+        return jnp.where(offdiag, load, 0.0), total
+
+    if adaptive:
+        def cond(state):
+            i, load, _ = state
+            return (i < max_hops) & jnp.any(load > 0)
+
+        def body(state):
+            i, load, total = state
+            load, total = step(load, total)
+            return i + 1, load, total
+
+        _, _, total = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), load0, jnp.zeros((n, n), jnp.float32)))
+    else:
+        def body(carry, _):
+            return step(*carry), None
+
+        (_, total), _ = jax.lax.scan(
+            body, (load0, jnp.zeros((n, n), jnp.float32)), None,
+            length=max_hops)
+    return jnp.einsum("udv,ud->uv", oh, total)
 
 
 @jax.jit
@@ -84,11 +173,12 @@ def undirected_flows(flow: jax.Array) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("max_hops", "use_kernel",
-                                              "directed"))
+                                              "directed", "adaptive"))
 def throughput_proxy(next_hop: jax.Array, adj_bw: jax.Array,
                      traffic: jax.Array, max_hops: int | None = None,
                      use_kernel: bool = False,
-                     directed: bool = False) -> jax.Array:
+                     directed: bool = False,
+                     adaptive: bool = False) -> jax.Array:
     """Paper §2.1.3:
 
         T = min_{u,v} B({u,v}) / F({u,v}) * sum(traffic)
@@ -103,7 +193,7 @@ def throughput_proxy(next_hop: jax.Array, adj_bw: jax.Array,
     separately — the right structural model when comparing against a
     simulator (or hardware like TPU ICI) with full-duplex channels.
     """
-    flow_dir = edge_flows(next_hop, traffic, max_hops, use_kernel)
+    flow_dir = edge_flows(next_hop, traffic, max_hops, use_kernel, adaptive)
     f = flow_dir if directed else undirected_flows(flow_dir)
     bw = adj_bw.astype(jnp.float32)
     ratio = jnp.where(f > 0, bw / jnp.maximum(f, 1e-30), jnp.inf)

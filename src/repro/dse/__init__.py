@@ -1,11 +1,13 @@
 from .sweep import ExperimentSpec, expand_experiments, DesignPoint
 from .batch import DesignBatch, encode_designs
 from .engine import batched_evaluate, DseEngine, DseResult
+from .genomes import GenomeEvalResult, make_pipeline
 from .pareto import pareto_front
 
 __all__ = [
     "ExperimentSpec", "expand_experiments", "DesignPoint",
     "DesignBatch", "encode_designs",
     "batched_evaluate", "DseEngine", "DseResult",
+    "GenomeEvalResult", "make_pipeline",
     "pareto_front",
 ]

@@ -83,6 +83,7 @@ class DseEngine:
         self.checkpoint_path = checkpoint_path
         self.prefetch = prefetch
         self._done: dict[int, tuple[float, float]] = {}
+        self._genome_pipelines: dict[int, tuple] = {}
         if checkpoint_path and os.path.exists(checkpoint_path):
             with open(checkpoint_path) as f:
                 for line in f:
@@ -92,6 +93,38 @@ class DseEngine:
     @property
     def n_devices(self) -> int:
         return int(np.prod(list(self.mesh.shape.values())))
+
+    # -- device-resident genome path (repro.dse.genomes) --------------------
+    def _genome_pipeline(self, space):
+        """Per-space pipeline, built once and cached for the engine's
+        lifetime (the key holds a strong reference to the space, so ids
+        stay unique)."""
+        from .genomes import make_pipeline
+        cached = self._genome_pipelines.get(id(space))
+        if cached is not None and cached[0] is space:
+            return cached[1]
+        pipeline = make_pipeline(space, self.mesh)
+        self._genome_pipelines[id(space)] = (space, pipeline)
+        return pipeline
+
+    def supports_genomes(self, space) -> bool:
+        """True when ``evaluate_genomes`` has a device path for this space."""
+        return self._genome_pipeline(space) is not None
+
+    def evaluate_genomes(self, space, genomes):
+        """Fused device path from a genome batch to metrics (no DesignPoint
+        materialization): decode, geometry, routing tables, and proxies run
+        in one jitted program per (bucketed population, node-count) shape —
+        the optimizer inner loop (see repro.dse.genomes). Genomes must be
+        valid (``space.repair`` output). Raises ValueError for spaces whose
+        structures the device cannot reproduce (use ``evaluate_points``)."""
+        pipeline = self._genome_pipeline(space)
+        if pipeline is None:
+            raise ValueError(
+                f"no device genome path for {type(space).__name__} "
+                f"(routing {getattr(space, 'routing', None)!r}); "
+                f"use evaluate_points")
+        return pipeline.evaluate(genomes)
 
     def _pad_chunk(self, batch: DesignBatch) -> tuple[DesignBatch, int]:
         """Pad the chunk's design axis to a device-count multiple (elastic)."""

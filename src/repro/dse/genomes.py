@@ -1,0 +1,587 @@
+"""Device-resident genome→metrics pipelines (ISSUE 4 tentpole).
+
+The optimizer's steady-state loop used to round-trip every genome through
+per-design Python: decode → DesignPoint → host graph build → numpy routing
+tables, with structure-cache misses on essentially every free-form genome.
+These pipelines remove the host from the loop:
+
+* ``AdjacencyPipeline`` — one fused, jit-compiled program from a bit-genome
+  batch to (latency, throughput) arrays for ``opt.space.AdjacencySpace``.
+  The genome decode (bits → adjacency), chiplet geometry (grid placement,
+  greedy nearest-PHY assignment, link lengths/latencies/bandwidths), batched
+  routing-table construction (``routing.device``), and the two proxies all
+  run on the device. Everything data-independent — chiplet side lengths,
+  PHY offsets, bump-limited bandwidths per (radix, degree) — is precomputed
+  on the host in float64 as small lookup tables indexed by the design's
+  radix, so the device path reproduces the host build's numbers (proxy
+  metrics agree within 1e-5; the greedy PHY scan and routing tie-breaks are
+  exact, asserted in tests/test_device_path.py).
+
+* ``ParametricPipeline`` — ``opt.space.ParametricSpace`` genomes index a
+  *finite* set of structures, so the decode is a gather: structures are
+  built lazily through the shared structure cache (host, exact), stacked
+  once, and each generation is one indexed gather plus the same jitted
+  proxy evaluation the sweep engine uses. Any registered topology/routing
+  (including the RNG-streamed ``updown_random``) is supported because the
+  tables come from the host builder.
+
+Both pipelines are jit-cache-stable: the population axis is padded to
+power-of-two buckets (×device-count multiples) and every static argument is
+derived from the space, so generation after generation reuses one compiled
+program per (bucketed P, n) shape. ``COMPILE_COUNTS`` records a trace-time
+probe per shape key; tests assert exactly one compilation across a whole
+run.
+
+Reports (area/power/cost for the constraint masks) stay on the host in
+float64 — they are O(P) scalar gathers from per-radix/per-structure tables,
+exact against ``core.reports``.
+"""
+from __future__ import annotations
+
+import functools
+from collections import defaultdict
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core.latency import num_doubling_steps
+from ..core.reports import ReportArrays
+from ..kernels.ref import BIG
+from ..routing.device import hops_next_hop_batch
+
+# Trace-time compile probe: key -> number of jit traces. One generation after
+# another must reuse the same compiled program, so each key stays at 1 for a
+# whole run (asserted in tests/test_device_path.py).
+COMPILE_COUNTS: dict[tuple, int] = defaultdict(int)
+
+
+def _note_compile(key: tuple) -> None:
+    COMPILE_COUNTS[key] += 1
+
+
+def reset_compile_counts() -> None:
+    COMPILE_COUNTS.clear()
+
+
+def bucket_population(size: int, multiple: int = 1) -> int:
+    """Pad the population axis to a power-of-two bucket (>= 8) rounded up to
+    a device-count multiple, so repeated generations hit one compiled
+    program regardless of small population-size jitter."""
+    b = 1 << max(3, int(size - 1).bit_length())
+    if multiple > 1:
+        b = ((b + multiple - 1) // multiple) * multiple
+    return b
+
+
+@dataclass
+class GenomeEvalResult:
+    """Metrics for one genome population (see DseEngine.evaluate_genomes)."""
+    latency: np.ndarray       # [P] f32
+    throughput: np.ndarray    # [P] f32
+    reports: ReportArrays     # [P] f64 host-exact constraint columns
+
+
+# ---------------------------------------------------------------------------
+# AdjacencySpace: fused bits -> metrics
+# ---------------------------------------------------------------------------
+
+def _eval_proxies(next_hop, step_cost, node_weight, adj_bw, traffic,
+                  max_hops: int):
+    """Both proxies from ONE load-propagation loop (see
+    ``throughput.edge_flows_load``): the accumulated per-vertex load
+    W[u, d] gives the edge flows via a single contraction with the next-hop
+    one-hot, and — because a unit of traffic pays step_cost(u, nh[u, d])
+    each time it leaves u — the traffic-weighted total path cost is
+
+        Σ_{u,d} W[u, d] · step_cost[u, nh[u, d]] + Σ_d (Σ_s T[s, d]) · nw[d]
+
+    which replaces the whole path-doubling pass. Exact for connected
+    (repaired) designs, where every routed pair terminates; ``max_hops`` is
+    the shape-stable safety bound (n-1), the while_loop stops at the
+    batch's actual routed diameter. Matches the reference proxies to f32
+    summation order (asserted against the host path in tests).
+    """
+    from ..core.throughput import undirected_flows
+
+    n = next_hop.shape[-1]
+    ids = jnp.arange(n, dtype=next_hop.dtype)
+    offdiag = ~jnp.eye(n, dtype=bool)
+    t_total = jnp.sum(traffic)
+    dest_weight = jnp.sum(jnp.sum(traffic, axis=0) * node_weight)
+
+    def one(nh, sc, bw):
+        # One-hot laid out [d, u, v] and load [d, u]: the destination axis is
+        # the leading batch dim of every contraction, so the loop body is a
+        # plain batched matvec with no per-iteration relayout.
+        ohd = ((nh.T[:, :, None] == ids[None, None, :]) &
+               offdiag[:, :, None]).astype(jnp.float32)        # [d, u, v]
+        load0 = jnp.where(offdiag, traffic.astype(jnp.float32).T, 0.0)
+
+        def cond(state):
+            i, load, _ = state
+            return (i < max_hops) & jnp.any(load > 0)
+
+        def body(state):
+            i, load, total = state
+            total = total + load
+            load = jnp.where(offdiag,
+                             jnp.einsum("duv,du->dv", ohd, load), 0.0)
+            return i + 1, load, total
+
+        _, _, total = jax.lax.while_loop(
+            cond, body,
+            (jnp.int32(0), load0, jnp.zeros((n, n), jnp.float32)))
+        flow = jnp.einsum("duv,du->uv", ohd, total)
+        f = undirected_flows(flow)
+        ratio = jnp.where(f > 0, bw / jnp.maximum(f, 1e-30), jnp.inf)
+        thr = (jnp.min(ratio) * t_total).astype(jnp.float32)
+        sc_next = jnp.take_along_axis(sc, nh, axis=1)          # [u, d]
+        lat = ((jnp.sum(total * sc_next.T) + dest_weight)
+               / t_total).astype(jnp.float32)
+        return lat, thr
+
+    return jax.vmap(one)(next_hop, step_cost, adj_bw)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "k_phys", "euclid",
+                                             "max_hops"))
+def _adjacency_eval(bits, pair_u, pair_v, pair_id, chain_slot, chain_eslot,
+                    inv_map, col, row, side_t, phyx_t, phyy_t,
+                    cphyx_t, cphyy_t, bw_t, traffic, consts, *, n: int,
+                    k_phys: int, euclid: bool, max_hops: int):
+    """Fused device path: repaired bit genomes [P, G] -> per-design latency,
+    throughput, and summed link length.
+
+    pair_u/pair_v: [G] pair endpoints; pair_id: [n, n] static map from a
+    vertex pair to its genome slot (G on the diagonal), which turns every
+    [P, n, n] materialization into a gather — no XLA scatters anywhere.
+
+    The greedy PHY scan's used-set is per-chiplet, so the host's sequential
+    pass decomposes into n *independent* chains — chiplet c walks its n-1
+    incident slots in the greedy order restricted to c. chain_slot/
+    chain_eslot: [n-1, n] static schedules (step j, chiplet c) -> genome
+    slot / (slot, endpoint) index into the precomputed distance tensor;
+    inv_map: [2G] gather positions of each (slot, endpoint) pick in the
+    scan output. side_t/phyx_t/phyy_t/bw_t: per-radix lookup tables (host
+    f64 → f32). consts: [spacing, link_const, link_per_mm, phy_lat2,
+    internal].
+    """
+    Pn, G = bits.shape
+    _note_compile(("adjacency", Pn, G, n, k_phys, max_hops))
+    spacing, link_const, link_per_mm, phy_lat2, internal = consts
+    bitsb = bits.astype(bool)
+    bits_pad = jnp.concatenate(
+        [bitsb, jnp.zeros((Pn, 1), bool)], axis=1)  # column G = padding
+
+    # --- decode: bits -> adjacency, degrees, radix-indexed geometry ---
+    adj = bits_pad[:, pair_id]                                  # [P, n, n]
+    deg = adj.sum(axis=2, dtype=jnp.int32)                      # [P, n]
+    radix = jnp.clip(jnp.max(deg, axis=1), 1, k_phys)           # [P]
+    side = side_t[radix]                                        # [P]
+    pitch = side + spacing
+    offx = phyx_t[radix]                                        # [P, K]
+    offy = phyy_t[radix]
+    coffx = cphyx_t[radix]          # centered: phy - side/2 (greedy ties)
+    coffy = cphyy_t[radix]
+    phy_valid = jnp.arange(k_phys)[None, :] < radix[:, None]    # [P, K]
+
+    # --- greedy nearest-PHY assignment (the host's sequential scan as n
+    # independent per-chiplet chains, one chain step per scan step) ---
+    # The candidate distance |pos_a + phy - (pos_b + side/2)| is evaluated
+    # in the factored form |Δcol·pitch + (phy.x - side/2)| + |Δrow·pitch +
+    # (phy.y - side/2)| (centered offsets precomputed in f64). Like the
+    # host's scan (factory.PHY_TIE_TOL), the pick goes to the lowest PHY
+    # index within a relative tolerance of the minimum: geometrically tied
+    # candidates (noise ~1e-6 in f32) resolve identically on both paths,
+    # while genuinely distinct candidates differ by ≥ fractions of the
+    # chiplet side (~1e-2 relative).
+    tie_tol = 1e-4
+    phy_ids = jnp.arange(k_phys, dtype=jnp.int32)
+    # Candidate distances depend on (slot, endpoint, phy) but not on the
+    # evolving used-state: precompute them for all 2G endpoint slots at
+    # once (index layout: slot + endpoint*G), leaving the scan body with a
+    # single gather plus the masked argmax.
+    dcol2 = jnp.concatenate([col[pair_u] - col[pair_v],
+                             col[pair_v] - col[pair_u]])        # [2G]
+    drow2 = jnp.concatenate([row[pair_u] - row[pair_v],
+                             row[pair_v] - row[pair_u]])
+    d_all = (jnp.abs(dcol2[None, :, None] * pitch[:, None, None]
+                     + coffx[:, None, :]) +
+             jnp.abs(drow2[None, :, None] * pitch[:, None, None]
+                     + coffy[:, None, :]))                      # [P, 2G, K]
+
+    def step(used, xs):
+        sl, es = xs                     # [n]: chiplet c's step-j slot
+        bitcol = bits_pad[:, sl]                                # [P, n]
+        d = d_all[:, es, :]                                     # [P, n, K]
+        free = phy_valid[:, None, :] & ~used
+        d = jnp.where(free, d, BIG)
+        dm = jnp.min(d, axis=2)
+        near = d <= (dm + tie_tol * jnp.maximum(dm, 1.0))[:, :, None]
+        pick = jnp.argmax(free & near, axis=2).astype(jnp.int32)  # [P, n]
+        used = used | ((phy_ids[None, None, :] == pick[:, :, None]) &
+                       bitcol[:, :, None])
+        return used, pick
+
+    used0 = jnp.zeros((Pn, n, k_phys), bool)
+    _, picks = jax.lax.scan(step, used0, (chain_slot, chain_eslot))
+    # [n-1, P, n] -> per (pair, endpoint) picks [P, G], via the static
+    # inverse gather map.
+    picks_flat = jnp.moveaxis(picks, 0, 1).reshape(Pn, -1)
+    pick_u = picks_flat[:, inv_map[:G]]
+    pick_v = picks_flat[:, inv_map[G:]]
+
+    # --- link geometry -> latencies, bandwidths (pair order) ---
+    posx_u = col[pair_u][None, :] * pitch[:, None]              # [P, G]
+    posy_u = row[pair_u][None, :] * pitch[:, None]
+    posx_v = col[pair_v][None, :] * pitch[:, None]
+    posy_v = row[pair_v][None, :] * pitch[:, None]
+    ax = posx_u + jnp.take_along_axis(offx, pick_u, axis=1)
+    ay = posy_u + jnp.take_along_axis(offy, pick_u, axis=1)
+    bx = posx_v + jnp.take_along_axis(offx, pick_v, axis=1)
+    by = posy_v + jnp.take_along_axis(offy, pick_v, axis=1)
+    if euclid:
+        length = jnp.sqrt((ax - bx) ** 2 + (ay - by) ** 2)
+    else:
+        length = jnp.abs(ax - bx) + jnp.abs(ay - by)
+    lat = link_const + link_per_mm * length + phy_lat2
+    bw = jnp.minimum(bw_t[radix[:, None], deg[:, pair_u]],
+                     bw_t[radix[:, None], deg[:, pair_v]])
+
+    lat_pad = jnp.concatenate(
+        [jnp.where(bitsb, lat, BIG).astype(jnp.float32),
+         jnp.full((Pn, 1), BIG, jnp.float32)], axis=1)
+    lat_full = lat_pad[:, pair_id]
+    bw_pad = jnp.concatenate(
+        [jnp.where(bitsb, bw, 0.0).astype(jnp.float32),
+         jnp.zeros((Pn, 1), jnp.float32)], axis=1)
+    adj_bw = bw_pad[:, pair_id]
+    step_cost = jnp.where(adj, internal + lat_full, 0.0).astype(jnp.float32)
+
+    # --- batched routing tables (hops metric, every chiplet relays) ---
+    next_hop = hops_next_hop_batch(adj)
+
+    # --- proxies ---
+    node_weight = jnp.full((n,), internal, jnp.float32)
+    lat_m, thr_m = _eval_proxies(next_hop, step_cost, node_weight, adj_bw,
+                                 traffic, max_hops)
+    len_sum = jnp.sum(jnp.where(bitsb, length, 0.0), axis=1)
+    return lat_m, thr_m, len_sum
+
+
+class AdjacencyPipeline:
+    """Fused device path for ``opt.space.AdjacencySpace`` populations."""
+
+    def __init__(self, space, mesh: jax.sharding.Mesh):
+        from ..core.reports import die_cost
+        from ..core.reports import _interposer_tech_default as _itech
+        from ..core.graph import link_bandwidth
+        from ..topologies.factory import grid_placement, make_chiplet
+        from ..topologies.grid import grid_dims
+
+        if space.routing != "dijkstra_lowest_id":
+            raise ValueError(
+                f"device path supports dijkstra_lowest_id routing only "
+                f"(space routing: {space.routing!r}); use the host path")
+        self.space = space
+        self.mesh = mesh
+        n = space.n_chiplets
+        self.n = n
+        pkg = space.packaging
+        # Repair's soft cap: connectivity joins may exceed max_degree by one.
+        k = min(n - 1, space.max_degree + 1)
+        self.k_phys = max(k, 1)
+
+        # Per-radix host tables (float64 geometry, cast once for the device).
+        side = np.zeros(self.k_phys + 1, np.float64)
+        phyx = np.zeros((self.k_phys + 1, self.k_phys), np.float64)
+        phyy = np.zeros((self.k_phys + 1, self.k_phys), np.float64)
+        cphyx = np.zeros((self.k_phys + 1, self.k_phys), np.float64)
+        cphyy = np.zeros((self.k_phys + 1, self.k_phys), np.float64)
+        bw = np.zeros((self.k_phys + 1, self.k_phys + 2), np.float64)
+        chip_area = np.zeros(self.k_phys + 1, np.float64)
+        chip_power = np.zeros(self.k_phys + 1, np.float64)
+        ia = np.zeros(self.k_phys + 1, np.float64)
+        cost_col = np.zeros(self.k_phys + 1, np.float64)
+        tech = space.technology
+        itech = None
+        for r in range(1, self.k_phys + 1):
+            ct = make_chiplet(r)
+            side[r] = ct.width
+            for pi, phy in enumerate(ct.phys):
+                phyx[r, pi] = phy.x
+                phyy[r, pi] = phy.y
+                cphyx[r, pi] = phy.x - ct.width / 2
+                cphyy[r, pi] = phy.y - ct.height / 2
+            for d in range(1, self.k_phys + 2):
+                bw[r, d] = link_bandwidth(ct.area, ct.bump_area_fraction, d,
+                                          pkg.bump_pitch, pkg.non_data_wires)
+            chip_area[r] = ct.area
+            chip_power[r] = ct.power
+            pos = grid_placement(n, ct.width, 1.0)
+            x1 = max(px for px, py in pos) + ct.width
+            y1 = max(py for px, py in pos) + ct.width
+            ia[r] = x1 * y1
+            if itech is None:
+                # mirrors Design.technologies[0] for make_design-built points
+                class _D:  # minimal shim for _interposer_tech_default
+                    technologies = (tech,)
+                itech = _itech(_D)
+            cost_col[r] = (n * die_cost(ct.area, tech) + die_cost(ia[r], itech)
+                           + pkg.packaging_cost_base
+                           + pkg.packaging_cost_per_mm2 * ia[r])
+        self._chip_area = chip_area
+        self._chip_power = chip_power
+        self._ia = ia
+        self._cost = cost_col
+
+        rows, cols = grid_dims(n)
+        col_of = np.arange(n) % cols
+        row_of = np.arange(n) // cols
+        pu, pv = space.pair_u, space.pair_v
+        G = len(pu)
+        gridd = np.abs(col_of[pu] - col_of[pv]) + np.abs(row_of[pu] - row_of[pv])
+        self.order = np.lexsort((np.arange(G), gridd)).astype(np.int64)
+        # The greedy scan's used-set is per-chiplet, so the sequential pass
+        # decomposes into n independent chains: chiplet c processes its n-1
+        # incident slots in the greedy order restricted to c. chain step j,
+        # chiplet c -> genome slot / (slot, endpoint) distance index.
+        chain_slot = np.zeros((n - 1, n), np.int64)
+        chain_eslot = np.zeros((n - 1, n), np.int64)
+        inv_map = np.zeros(2 * G, np.int64)
+        cnt = np.zeros(n, np.int64)
+        for g in self.order:
+            for endpoint, c in ((0, pu[g]), (1, pv[g])):
+                j = cnt[c]
+                cnt[c] += 1
+                chain_slot[j, c] = g
+                chain_eslot[j, c] = g + endpoint * G
+                inv_map[endpoint * G + g] = j * n + c
+        assert (cnt == n - 1).all()
+        pair_id = np.full((n, n), G, np.int64)
+        pair_id[pu, pv] = np.arange(G)
+        pair_id[pv, pu] = np.arange(G)
+
+        from ..traffic import make_traffic
+        traffic = make_traffic(space.traffic_pattern, n, seed=space.seed)
+
+        rep = NamedSharding(mesh, P())
+        put = lambda x, dt: jax.device_put(jnp.asarray(x, dt), rep)
+        self._pair_u = put(pu, jnp.int32)
+        self._pair_v = put(pv, jnp.int32)
+        self._pair_id = put(pair_id, jnp.int32)
+        self._chain_slot = put(chain_slot, jnp.int32)
+        self._chain_eslot = put(chain_eslot, jnp.int32)
+        self._inv_map = put(inv_map, jnp.int32)
+        self._col = put(col_of, jnp.float32)
+        self._row = put(row_of, jnp.float32)
+        self._side = put(side, jnp.float32)
+        self._phyx = put(phyx, jnp.float32)
+        self._phyy = put(phyy, jnp.float32)
+        self._cphyx = put(cphyx, jnp.float32)
+        self._cphyy = put(cphyy, jnp.float32)
+        self._bw = put(bw, jnp.float32)
+        self._traffic = put(traffic, jnp.float32)
+        self._consts = put([1.0, pkg.link_latency_const, pkg.link_latency_per_mm,
+                            2.0 * make_chiplet(1).phy_latency,
+                            make_chiplet(1).internal_latency], jnp.float32)
+        self._euclid = pkg.link_routing == "euclidean"
+        self.max_hops = max(n - 1, 1)
+
+    def evaluate(self, genomes: np.ndarray) -> GenomeEvalResult:
+        """One fused jitted call for a whole (repaired) population."""
+        genomes = np.asarray(genomes, np.int64)
+        Pn = len(genomes)
+        deg = self.space.degrees(genomes)
+        if deg.max(initial=0) > self.k_phys:
+            raise ValueError(
+                f"genome exceeds the repaired degree bound "
+                f"({int(deg.max())} > {self.k_phys}); repair genomes before "
+                f"evaluate_genomes")
+        ndev = int(np.prod(list(self.mesh.shape.values())))
+        bp = bucket_population(Pn, ndev)
+        padded = genomes
+        if bp != Pn:
+            padded = np.concatenate(
+                [genomes, np.repeat(genomes[-1:], bp - Pn, axis=0)], axis=0)
+        bits = jax.device_put(jnp.asarray(padded % 2, jnp.int32),
+                              NamedSharding(self.mesh, P("data")))
+        lat, thr, len_sum = _adjacency_eval(
+            bits, self._pair_u, self._pair_v, self._pair_id,
+            self._chain_slot, self._chain_eslot, self._inv_map, self._col,
+            self._row, self._side, self._phyx, self._phyy, self._cphyx,
+            self._cphyy, self._bw, self._traffic, self._consts, n=self.n,
+            k_phys=self.k_phys, euclid=self._euclid,
+            max_hops=self.max_hops)
+        reports = self._report_arrays(genomes, deg,
+                                      np.asarray(len_sum)[:Pn])
+        return GenomeEvalResult(latency=np.asarray(lat)[:Pn],
+                                throughput=np.asarray(thr)[:Pn],
+                                reports=reports)
+
+    def _report_arrays(self, genomes, deg, len_sums) -> ReportArrays:
+        """Constraint columns [P] in host float64, exact against
+        ``core.reports`` (the per-mm link-power term uses the device's f32
+        length sums; it is zero under default packaging)."""
+        pkg = self.space.packaging
+        n = self.n
+        radix = np.clip(deg.max(axis=1), 1, self.k_phys)
+        n_links = (np.asarray(genomes, np.int64) % 2).sum(axis=1)
+        power = (n * self._chip_power[radix]
+                 + pkg.link_power_const * n_links
+                 + pkg.link_power_per_mm * np.asarray(len_sums, np.float64))
+        return ReportArrays(
+            total_chiplet_area=n * self._chip_area[radix],
+            interposer_area=self._ia[radix],
+            power=power,
+            cost=self._cost[radix])
+
+
+# ---------------------------------------------------------------------------
+# ParametricSpace: structure-table gather
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_steps", "max_hops"))
+def _parametric_eval(next_hop, step_cost, node_weight, adj_bw, traffic,
+                     *, n_steps: int, max_hops: int):
+    _note_compile(("parametric",) + tuple(next_hop.shape)
+                  + (n_steps, max_hops))
+    from .engine import _eval_one
+    return jax.vmap(_eval_one, in_axes=(0, 0, 0, 0, 0, None, None))(
+        next_hop, step_cost, node_weight, adj_bw, traffic, n_steps, max_hops)
+
+
+class ParametricPipeline:
+    """Structure-table device path for ``opt.space.ParametricSpace``: the
+    finite set of decodable structures is built lazily on the host (through
+    the shared structure cache, so sweeps and optimizers reuse each other's
+    builds) and stacked; each generation is an int-indexed gather plus one
+    jitted proxy call."""
+
+    def __init__(self, space, mesh: jax.sharding.Mesh):
+        self.space = space
+        self.mesh = mesh
+        self.n = space.max_nodes
+        self.n_steps = num_doubling_steps(self.n)
+        # the shape-stable safety bound; flows converge at the real routed
+        # diameter regardless, so a tighter bound is pure wall-clock tuning
+        self.max_hops = max(self.n - 1, 1)
+        self._sid: dict[tuple, int] = {}
+        self._next_hop: list[np.ndarray] = []
+        self._step_cost: list[np.ndarray] = []
+        self._node_weight: list[np.ndarray] = []
+        self._adj_bw: list[np.ndarray] = []
+        self._traffic: list[np.ndarray] = []
+        self._reports: list[tuple] = []
+        self._stacked = None
+
+    def _point_for(self, key: tuple):
+        from .sweep import DesignPoint
+        ti, ci, ri, beff = key
+        sp = self.space
+        return DesignPoint(
+            index=0, topology=sp.topologies[ti],
+            n_chiplets=sp.chiplet_counts[ci],
+            traffic_pattern=sp.traffic_pattern, routing=sp.routings[ri],
+            seed=sp.seed, shg_bits=beff, packaging=sp.packaging,
+            technology=sp.technology)
+
+    def _key_of(self, genome: np.ndarray) -> tuple:
+        from ..topologies.grid import grid_dims
+        sp = self.space
+        ti, ci, ri, bi = (int(x) for x in genome)
+        beff = 0
+        if sp.topologies[ti] == "shg":
+            r, c = grid_dims(sp.chiplet_counts[ci])
+            beff = int(sp.shg_bits_choices[bi]) % 2 ** (r + c - 4)
+        return (ti, ci, ri, beff)
+
+    def _ensure(self, keys) -> None:
+        from ..core.reports import report_arrays
+        from ..core.structure_cache import GLOBAL_STRUCTURE_CACHE
+        from .batch import _structures_for
+
+        missing = [k for k in dict.fromkeys(keys) if k not in self._sid]
+        if not missing:
+            return
+        n = self.n
+        points = [self._point_for(k) for k in missing]
+        entries = _structures_for(points, validate=False,
+                                  cache=GLOBAL_STRUCTURE_CACHE,
+                                  keep_designs=True)
+        designs = []
+        for key, pt in zip(missing, points):
+            entry = entries[pt.structure_key()]
+            arrays = entry.arrays
+            k = arrays.next_hop.shape[0]
+            nc = arrays.n_chiplets
+            nh = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, n))
+            nh[:k, :k] = arrays.next_hop
+            sc = np.zeros((n, n), np.float32)
+            sc[:k, :k] = arrays.step_cost
+            nw = np.zeros(n, np.float32)
+            nw[:k] = arrays.node_weight
+            bwm = np.zeros((n, n), np.float32)
+            bwm[:k, :k] = arrays.adj_bw
+            tr = np.zeros((n, n), np.float32)
+            tr[:nc, :nc] = pt.traffic()
+            self._sid[key] = len(self._next_hop)
+            self._next_hop.append(nh)
+            self._step_cost.append(sc)
+            self._node_weight.append(nw)
+            self._adj_bw.append(bwm)
+            self._traffic.append(tr)
+            design = entry.extra.get("design")
+            designs.append(design if design is not None else pt.build())
+        rep = report_arrays(designs)
+        for i in range(len(missing)):
+            self._reports.append((rep.total_chiplet_area[i],
+                                  rep.interposer_area[i],
+                                  rep.power[i], rep.cost[i]))
+        self._stacked = None
+
+    def evaluate(self, genomes: np.ndarray) -> GenomeEvalResult:
+        genomes = self.space.repair(np.asarray(genomes, np.int64))
+        keys = [self._key_of(g) for g in genomes]
+        self._ensure(keys)
+        sids = np.asarray([self._sid[k] for k in keys], np.int64)
+        if self._stacked is None:
+            self._stacked = (np.stack(self._next_hop),
+                             np.stack(self._step_cost),
+                             np.stack(self._node_weight),
+                             np.stack(self._adj_bw),
+                             np.stack(self._traffic))
+        Pn = len(genomes)
+        ndev = int(np.prod(list(self.mesh.shape.values())))
+        bp = bucket_population(Pn, ndev)
+        gsids = sids
+        if bp != Pn:
+            gsids = np.concatenate([sids, np.repeat(sids[-1:], bp - Pn)])
+        sharding = NamedSharding(self.mesh, P("data"))
+        args = [jax.device_put(t[gsids], sharding) for t in self._stacked]
+        lat, thr = _parametric_eval(*args, n_steps=self.n_steps,
+                                    max_hops=self.max_hops)
+        cols = np.asarray([self._reports[s] for s in sids], np.float64)
+        reports = ReportArrays(total_chiplet_area=cols[:, 0],
+                               interposer_area=cols[:, 1],
+                               power=cols[:, 2], cost=cols[:, 3])
+        return GenomeEvalResult(latency=np.asarray(lat)[:Pn],
+                                throughput=np.asarray(thr)[:Pn],
+                                reports=reports)
+
+
+def make_pipeline(space, mesh: jax.sharding.Mesh):
+    """Pipeline for a search space, or None when only the host path applies
+    (e.g. adjacency spaces routed with the RNG-streamed updown_random)."""
+    from ..opt.space import AdjacencySpace, ParametricSpace
+
+    if isinstance(space, AdjacencySpace):
+        if space.routing != "dijkstra_lowest_id":
+            return None
+        return AdjacencyPipeline(space, mesh)
+    if isinstance(space, ParametricSpace):
+        return ParametricPipeline(space, mesh)
+    return None

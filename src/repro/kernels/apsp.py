@@ -11,10 +11,18 @@ zero intermediate HBM traffic.
 The inner product is the same VPU broadcast-add-min loop as minplus.py.
 ops.apsp falls back to iterated minplus_matmul for matrices beyond the VMEM
 budget.
+
+Backend selection (``ops.apsp``) is dispatched through ``default_backend``:
+on TPU the kernel compiles for hardware; on CPU/GPU the Pallas interpreter
+would execute the kernel body in Python per grid step, so the default there
+is a pure-XLA min-plus doubling instead. ``REPRO_APSP_BACKEND`` overrides
+(``pallas`` | ``pallas_interpret`` | ``xla``); the legacy
+``REPRO_PALLAS_INTERPRET=0`` still forces compiled Pallas everywhere.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +33,27 @@ from .ref import BIG
 
 # [n, n] f32 scratch must fit comfortably in ~16 MiB VMEM with headroom.
 MAX_FUSED_N = 1024
+
+APSP_BACKENDS = ("pallas", "pallas_interpret", "xla")
+
+
+def default_backend() -> str:
+    """Pick the APSP execution backend for the current runtime.
+
+    Priority: ``REPRO_APSP_BACKEND`` env var, then compiled Pallas on TPU
+    (or anywhere when ``REPRO_PALLAS_INTERPRET=0``), else the XLA fallback.
+    """
+    env = os.environ.get("REPRO_APSP_BACKEND")
+    if env:
+        if env not in APSP_BACKENDS:
+            raise ValueError(f"REPRO_APSP_BACKEND={env!r}; "
+                             f"options: {APSP_BACKENDS}")
+        return env
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "0":
+        return "pallas"
+    return "xla"
 
 
 def _apsp_kernel(d_ref, o_ref, acc_ref):
@@ -45,6 +74,20 @@ def _apsp_kernel(d_ref, o_ref, acc_ref):
     @pl.when(it == pl.num_programs(1) - 1)
     def _flush():
         o_ref[0] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters",))
+def apsp_xla(d: jax.Array, n_iters: int) -> jax.Array:
+    """Pure-XLA batched min-plus squaring (same semantics as the fused
+    kernel, no lane padding): the CPU/GPU fallback behind ``ops.apsp``.
+
+    d: [B, n, n] step costs with BIG = no edge and a zeroed diagonal.
+    """
+    def body(_, m):
+        return jnp.minimum(m, jnp.min(m[:, :, :, None] + m[:, None, :, :],
+                                      axis=2))
+
+    return jax.lax.fori_loop(0, n_iters, body, d)
 
 
 @functools.partial(jax.jit, static_argnames=("n_iters", "interpret"))

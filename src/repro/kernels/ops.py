@@ -85,13 +85,31 @@ def flow_accumulate(flow: jax.Array, cur: jax.Array, nxt: jax.Array,
     return out[0] if squeeze else out
 
 
-@functools.partial(jax.jit, static_argnames=("n_iters",))
-def apsp(d: jax.Array, n_iters: int | None = None) -> jax.Array:
-    """All-pairs path costs via fused min-plus squaring. d: [n, n] or
-    [B, n, n] step costs (+inf/BIG = no edge; diagonal forced to 0).
-    Falls back to iterated minplus_matmul beyond the VMEM budget."""
+def apsp(d: jax.Array, n_iters: int | None = None,
+         backend: str | None = None) -> jax.Array:
+    """All-pairs path costs via min-plus squaring behind one backend-aware
+    entry. d: [n, n] or [B, n, n] step costs (+inf/BIG = no edge; diagonal
+    forced to 0).
+
+    ``backend`` is one of ``apsp.APSP_BACKENDS``; ``None`` auto-selects via
+    ``apsp.default_backend()`` — the fused Pallas kernel compiled for
+    hardware on TPU, a pure-XLA doubling on CPU/GPU (where the Pallas
+    interpreter would run the kernel body in Python). The Pallas path falls
+    back to iterated minplus_matmul beyond the VMEM budget. The env-driven
+    default is resolved *outside* the jit boundary, so flipping
+    ``REPRO_APSP_BACKEND`` mid-process takes effect on the next call
+    instead of being frozen into the jit cache."""
+    from .apsp import default_backend
+
+    if backend is None:
+        backend = default_backend()
+    return _apsp(d, n_iters, backend)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "backend"))
+def _apsp(d: jax.Array, n_iters: int | None, backend: str) -> jax.Array:
     import math
-    from .apsp import MAX_FUSED_N, apsp_pallas
+    from .apsp import MAX_FUSED_N, apsp_pallas, apsp_xla
 
     squeeze = d.ndim == 2
     if squeeze:
@@ -103,12 +121,15 @@ def apsp(d: jax.Array, n_iters: int | None = None) -> jax.Array:
     eye = jnp.where(jnp.eye(n, dtype=bool), 0.0, BIG).astype(jnp.float32)
     d = jnp.minimum(d.astype(jnp.float32), eye[None])
     n_lane = _round_up(n, 128)
-    if n_lane <= MAX_FUSED_N:
+    if backend == "xla":
+        out = apsp_xla(d, n_iters)
+    elif n_lane <= MAX_FUSED_N:
         dp = jnp.full((B, n_lane, n_lane), BIG, jnp.float32)
         dp = dp.at[:, :n, :n].set(d)
         eye_p = jnp.where(jnp.eye(n_lane, dtype=bool), 0.0, BIG)
         dp = jnp.minimum(dp, eye_p[None].astype(jnp.float32))
-        out = apsp_pallas(dp, n_iters, interpret=_interpret())[:, :n, :n]
+        out = apsp_pallas(dp, n_iters,
+                          interpret=backend == "pallas_interpret")[:, :n, :n]
     else:
         def body(_, m):
             return jnp.minimum(minplus_matmul(m, m), BIG)

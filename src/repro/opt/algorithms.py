@@ -101,18 +101,31 @@ def _pop_from_state(state) -> EvaluatedPopulation | None:
 class PopulationEvaluator:
     """genomes -> proxies + constraint masks, counting evaluations.
 
-    Reports are memoized by ``DesignPoint.structure_key()`` (they do not
-    depend on traffic), so across generations only never-seen structures pay
-    the geometry walk."""
+    By default populations go through the engine's fused **device path**
+    (``DseEngine.evaluate_genomes``): decode, geometry, routing tables, and
+    proxies run as one jitted program per (bucketed population, node count)
+    shape, and no ``DesignPoint`` is ever materialized — the optimizer inner
+    loop never touches per-design Python. The classic host path
+    (``evaluate_points`` through the structure cache) remains for spaces the
+    device cannot reproduce (updown_random-routed adjacency spaces), for
+    ``validate=True`` runs, and for explicit ``device_path=False`` callers;
+    its reports are memoized by ``DesignPoint.structure_key()``."""
 
     def __init__(self, space: SearchSpace, engine: DseEngine | None = None,
-                 budgets: Budgets | None = None, validate: bool = False):
+                 budgets: Budgets | None = None, validate: bool = False,
+                 device_path: bool | None = None):
         self.space = space
         self.engine = engine if engine is not None else DseEngine()
         self.budgets = budgets or Budgets()
         self.validate = validate
+        self.device_path = device_path
         self.n_evals = 0
         self._report_cache: dict = {}
+
+    def _use_device_path(self) -> bool:
+        if self.device_path is not None:
+            return self.device_path
+        return not self.validate and self.engine.supports_genomes(self.space)
 
     def _reports_for(self, points) -> ReportArrays:
         missing, missing_keys = [], set()
@@ -143,14 +156,19 @@ class PopulationEvaluator:
 
     def __call__(self, genomes: np.ndarray) -> EvaluatedPopulation:
         genomes = np.asarray(genomes, np.int64)
-        points = self.space.decode(genomes, start_index=self.n_evals)
-        self.n_evals += len(points)
-        res = self.engine.evaluate_points(
-            points, validate=self.validate, n_pad=self.space.max_nodes,
-            round_hops=True, keep_designs=True)
+        if self._use_device_path():
+            res = self.engine.evaluate_genomes(self.space, genomes)
+            self.n_evals += len(genomes)
+            reports = res.reports
+        else:
+            points = self.space.decode(genomes, start_index=self.n_evals)
+            self.n_evals += len(points)
+            res = self.engine.evaluate_points(
+                points, validate=self.validate, n_pad=self.space.max_nodes,
+                round_hops=True, keep_designs=True)
+            reports = self._reports_for(points)
         lat = np.asarray(res.latency, np.float64)
         thr = np.asarray(res.throughput, np.float64)
-        reports = self._reports_for(points)
         feasible = (self.budgets.mask(reports)
                     & np.isfinite(lat) & np.isfinite(thr))
         return EvaluatedPopulation(genomes=genomes, latency=lat,

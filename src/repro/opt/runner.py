@@ -145,6 +145,10 @@ def main(argv=None) -> int:
     p.add_argument("--max-total-area", type=float, default=None)
     p.add_argument("--max-power", type=float, default=None)
     p.add_argument("--max-cost", type=float, default=None)
+    p.add_argument("--host-path", action="store_true",
+                   help="force the classic host evaluation path "
+                        "(decode -> DesignPoint -> structure cache) instead "
+                        "of the fused device genome pipeline")
     p.add_argument("--checkpoint", type=str, default=None,
                    help="resume point, written after every generation")
     p.add_argument("--out", type=str, default=None,
@@ -165,7 +169,9 @@ def main(argv=None) -> int:
     budgets = Budgets(max_interposer_area=args.max_interposer_area,
                       max_total_area=args.max_total_area,
                       max_power=args.max_power, max_cost=args.max_cost)
-    evaluator = PopulationEvaluator(space, budgets=budgets)
+    evaluator = PopulationEvaluator(
+        space, budgets=budgets,
+        device_path=False if args.host_path else None)
     size_kw = ({"batch_size": args.pop_size} if args.algo == "random"
                else {"n_chains": args.pop_size} if args.algo == "sa"
                else {"pop_size": args.pop_size})

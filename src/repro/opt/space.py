@@ -172,6 +172,10 @@ class AdjacencySpace(SearchSpace):
         self.genome_length = len(self.pair_u)
         self.cardinalities = np.full(self.genome_length, 2, np.int64)
         self.max_nodes = n
+        # Incidence matrix [G, n]: degrees of a population are one matmul.
+        self._incidence = np.zeros((self.genome_length, n), np.int64)
+        self._incidence[np.arange(self.genome_length), self.pair_u] = 1
+        self._incidence[np.arange(self.genome_length), self.pair_v] = 1
         if self.init_density is None:
             self.init_density = min(1.0, 0.5 * self.max_degree / max(n - 1, 1))
 
@@ -180,11 +184,119 @@ class AdjacencySpace(SearchSpace):
                 < self.init_density).astype(np.int64)
         return self.repair(bits)
 
+    def degrees(self, genomes: np.ndarray) -> np.ndarray:
+        """Vertex degrees [P, n] of a population of bit genomes."""
+        bits = np.asarray(genomes, np.int64) % 2
+        return bits @ self._incidence
+
     def repair(self, genomes: np.ndarray) -> np.ndarray:
-        genomes = np.asarray(genomes, np.int64) % 2
-        return np.stack([self._repair_one(g) for g in genomes])
+        """Vectorized over the whole population: the degree-cap pass is one
+        descending scan over gene columns ([P] updates per column), the
+        connectivity pass replicates ``_repair_one``'s union-find root
+        labeling with pointer-doubling gathers and merges every genome's
+        components in lockstep. Bit-identical to mapping ``_repair_one`` over
+        the rows (asserted in tests/test_device_path.py)."""
+        bits = np.asarray(genomes, np.int64) % 2
+        P, G = bits.shape
+        if P == 0:
+            return bits
+        n, maxd = self.n_chiplets, self.max_degree
+        pu, pv = self.pair_u, self.pair_v
+        bits = bits.copy()
+        deg = self.degrees(bits)
+
+        # 1. degree cap, dropping from the highest pair index down. Dropping
+        # only ever *decrements* degrees, so a vertex not over the cap at the
+        # start never goes over later: the scan can skip every column whose
+        # endpoints start under the cap in all genomes (steady-state
+        # optimizer populations are mostly valid already).
+        over = deg > maxd
+        if over.any():
+            cand = (bits.astype(bool) &
+                    (over[:, pu] | over[:, pv])).any(axis=0)
+            over_any = True
+            for g in np.nonzero(cand)[0][::-1]:
+                if not over_any:
+                    break
+                drop = (bits[:, g] == 1) & ((deg[:, pu[g]] > maxd) |
+                                            (deg[:, pv[g]] > maxd))
+                if not drop.any():
+                    continue
+                bits[drop, g] = 0
+                deg[drop, pu[g]] -= 1
+                deg[drop, pv[g]] -= 1
+                over_any = bool((deg > maxd).any())
+
+        # 2. connectivity — only for genomes that need it. A vectorized
+        # min-label propagation flags disconnected rows; already-connected
+        # genomes (the steady-state majority after variation) skip the
+        # union-find scan entirely.
+        adj = np.zeros((P, n, n), bool)
+        adj[:, pu, pv] = bits.astype(bool)
+        adj |= adj.transpose(0, 2, 1)
+        labels = np.tile(np.arange(n), (P, 1))
+        while True:
+            nbr = np.where(adj, labels[:, None, :], n).min(axis=2)
+            new = np.minimum(labels, nbr)
+            if np.array_equal(new, labels):
+                break
+            labels = new
+        bad = np.nonzero(labels.max(axis=1) > 0)[0]
+        if len(bad):
+            bits[bad] = self._connect_batch(bits[bad], deg[bad])
+        return bits
+
+    def _connect_batch(self, bits: np.ndarray, deg: np.ndarray) -> np.ndarray:
+        """Connectivity repair for a (sub)population of degree-capped
+        genomes, replicating the union-find root labels of ``_repair_one``:
+        surviving genes are processed in ascending order, and the invariant
+        "parent is fully path-compressed before each union" makes one
+        pointer-doubling gather per gene sufficient. Components are then
+        unioned in lockstep, each genome joining its two lowest-rooted
+        components at their minimum-degree (lowest-index) chiplets — the
+        same deterministic rule as the sequential pass."""
+        P, _ = bits.shape
+        n = self.n_chiplets
+        pu, pv = self.pair_u, self.pair_v
+        rows = np.arange(P)
+        parent = np.tile(np.arange(n), (P, 1))
+        for g in np.nonzero(bits.any(axis=0))[0]:
+            parent = parent[rows[:, None], parent]
+            ru = parent[rows, pu[g]]
+            rv = parent[rows, pv[g]]
+            m = (bits[:, g] == 1) & (ru != rv)
+            parent[rows[m], ru[m]] = rv[m]
+        roots = parent[rows[:, None], parent]
+
+        score_idx = np.arange(n)[None, :]
+        big = np.int64(n * n + n)
+        while True:
+            present = np.zeros((P, n), bool)
+            present[rows[:, None], roots] = True
+            todo = present.sum(axis=1) > 1
+            if not todo.any():
+                break
+            first = present.argmax(axis=1)
+            p2 = present.copy()
+            p2[rows, first] = False
+            second = p2.argmax(axis=1)
+            score = deg * n + score_idx     # orders by (degree, index)
+            a = np.where(roots == first[:, None], score, big).argmin(axis=1)
+            b = np.where(roots == second[:, None], score, big).argmin(axis=1)
+            u = np.minimum(a, b)
+            v = np.maximum(a, b)
+            g = u * (2 * n - u - 1) // 2 + (v - u - 1)
+            t = rows[todo]
+            bits[t, g[todo]] = 1
+            deg[t, u[todo]] += 1
+            deg[t, v[todo]] += 1
+            roots = np.where(todo[:, None] & (roots == second[:, None]),
+                             first[:, None], roots)
+        return bits
 
     def _repair_one(self, bits: np.ndarray) -> np.ndarray:
+        """Sequential single-genome reference for ``repair`` (the oracle the
+        vectorized path is tested against)."""
         n, maxd = self.n_chiplets, self.max_degree
         bits = bits.copy()
         deg = np.zeros(n, np.int64)

@@ -1,0 +1,281 @@
+"""Batched on-device routing-table construction (the device half of the
+genome→metrics pipeline, ISSUE 4 tentpole part b).
+
+``routing/tables.py`` builds next-hop tables on the host in numpy — fine for
+sweep preparation, but the optimizer's steady-state loop evaluates whole
+*populations* of free-form topologies per generation, and a host round-trip
+per genome dominates wall clock. This module constructs the tables as jitted
+batched array programs:
+
+* ``distances_batch`` — population-batched relay-constrained all-pairs path
+  costs via min-plus path doubling. With no relay constraint it dispatches
+  through ``kernels.ops.apsp`` (fused Pallas kernel on TPU, XLA fallback on
+  CPU); with one it runs the same masked doubling as
+  ``tables._relay_masked_distances``.
+* ``lowest_id_next_hops_batch`` — the batched lowest-ID argmin next-hop
+  selection, reproducing ``dijkstra_lowest_id``'s tie-breaking exactly
+  (same ``TIE_TOL``, same first-minimum scan order; exact for integer-valued
+  metrics like the default "hops", asserted against the per-destination
+  Dijkstra oracle in tests/test_device_path.py).
+* ``updown_candidates_batch`` — the up*/down* phase-automaton relaxation for
+  whole batches, returning the per-(u, d) legal-candidate masks. The seeded
+  uniform choice among candidates stays on the host
+  (``updown_random_table_via_device``) so the RNG stream — and therefore the
+  tables — are bit-identical to ``updown_random_table``.
+
+All distances here are float32: for the integer-valued "hops" metric every
+comparison is exact, so tie-breaking matches the float64 host path bit for
+bit. BIG stands in for +inf inside the min-plus algebra (as everywhere in
+``kernels``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.ops import apsp
+from ..kernels.ref import BIG
+
+
+def _edge_big(cost: jax.Array) -> jax.Array:
+    """Map +inf/garbage non-edges to BIG; self-edges (the diagonal) count as
+    non-edges for next-hop selection."""
+    n = cost.shape[-1]
+    d = jnp.minimum(jnp.where(jnp.isfinite(cost), cost, BIG), BIG)
+    return jnp.where(jnp.eye(n, dtype=bool)[None], BIG, d)
+
+
+def _clamp_big(cost: jax.Array) -> jax.Array:
+    """Map +inf/garbage non-edges to BIG and zero the diagonal (the min-plus
+    identity element, for distance computations)."""
+    n = cost.shape[-1]
+    d = jnp.minimum(jnp.where(jnp.isfinite(cost), cost, BIG), BIG)
+    eye = jnp.where(jnp.eye(n, dtype=bool), 0.0, BIG).astype(d.dtype)
+    return jnp.minimum(d, eye[None])
+
+
+def _minplus(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Batched (min, +) product: out[b, u, d] = min_w a[b, u, w] + b[b, w, d]."""
+    return jnp.min(a[:, :, :, None] + b[:, None, :, :], axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters",))
+def _relay_masked_distances_batch(cost: jax.Array, relay: jax.Array,
+                                  n_iters: int) -> jax.Array:
+    """Batched twin of ``tables._relay_masked_distances``: min-plus path
+    doubling with the split vertex masked to relays (the transit
+    constraint). Fixed iteration count — the host variant's early fixpoint
+    exit does not change the result."""
+    d = _clamp_big(cost)
+    relay_col = relay[:, None, :]
+
+    def body(_, d):
+        left = jnp.where(relay_col, d, BIG)
+        return jnp.minimum(d, jnp.minimum(_minplus(left, d), BIG))
+
+    return jax.lax.fori_loop(0, n_iters, body, d)
+
+
+def distances_batch(cost: jax.Array, relay: jax.Array | None = None,
+                    n_iters: int | None = None) -> jax.Array:
+    """Relay-constrained all-pairs path costs [B, n, n] for a batch of
+    step-cost matrices (BIG/+inf = no edge). ``relay=None`` means every
+    vertex may be transited — the common optimizer case — and routes through
+    the backend-dispatched fused APSP kernel."""
+    n = cost.shape[-1]
+    if n_iters is None:
+        n_iters = max(1, int(np.ceil(np.log2(max(n - 1, 2)))) + 1)
+    if relay is None:
+        out = apsp(cost, n_iters)
+        return jnp.minimum(jnp.where(jnp.isfinite(out), out, BIG), BIG)
+    return _relay_masked_distances_batch(cost, relay, n_iters)
+
+
+@jax.jit
+def lowest_id_next_hops_batch(cost: jax.Array, dist: jax.Array,
+                              relay: jax.Array) -> jax.Array:
+    """Batched next-hop selection with the reference's tie-breaking: for
+    every (u, d) pick the lowest-ID legal neighbor v minimizing
+    cost[u, v] + dist[v, d] (ties within TIE_TOL go to the lowest ID).
+
+    cost:  [B, n, n] with BIG non-edges (the diagonal must be BIG too — a
+    vertex is not its own neighbor); dist: [B, n, n]; relay: [B, n] bool.
+    Returns int32 [B, n, n] next-hop tables (next_hop[u, d] = u marks
+    "no route", next_hop[d, d] = d).
+    """
+    n = cost.shape[-1]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    edge = cost < BIG * 0.5
+    # legal[b, u, v, d] = edge(u, v) and (relay[v] or v == d)
+    legal = edge[:, :, :, None] & (relay[:, None, :, None] |
+                                   (ids[:, None] == ids[None, :])[None, None])
+    scores = jnp.where(legal, cost[:, :, :, None] + dist[:, None, :, :], BIG)
+    best = jnp.min(scores, axis=2)
+    # The host compares score < best + TIE_TOL in float64; TIE_TOL (1e-12)
+    # underflows float32 addition, and for exact (integer-valued) metrics
+    # the rule is equivalent to score <= best — which IS exact in f32.
+    pick = jnp.argmax(scores <= best[:, :, None, :], axis=2).astype(jnp.int32)
+    take = (dist < BIG * 0.5) & (ids[:, None] != ids[None, :])[None]
+    return jnp.where(take, pick, ids[:, None][None])
+
+
+def next_hop_lowest_id_batch(cost, relay=None) -> np.ndarray:
+    """Host-facing convenience: batched ``dijkstra_lowest_id`` tables from
+    stacked step-cost matrices [B, n, n] (+inf = no edge). ``relay`` is a
+    [B, n] bool mask (None = all vertices relay)."""
+    cost = _edge_big(jnp.asarray(cost, jnp.float32))
+    dist = distances_batch(cost, relay)
+    if relay is None:
+        relay = jnp.ones(cost.shape[:2], bool)
+    return np.asarray(lowest_id_next_hops_batch(cost, dist,
+                                                jnp.asarray(relay, bool)))
+
+
+@jax.jit
+def hops_next_hop_batch(adj: jax.Array) -> jax.Array:
+    """Specialized batched ``dijkstra_lowest_id`` tables for the fused
+    genome pipeline: hops metric, every vertex a relay (the free-form
+    optimizer case). adj: [B, n, n] bool. Produces tables identical to
+    ``next_hop_lowest_id_batch`` (asserted in tests) but much cheaper:
+
+    * hop distances by BFS frontier propagation — a while_loop of batched
+      0/1 *matmuls* (runs to the batch diameter, not a static bound);
+    * the lowest-ID argmin in ONE broadcast min-reduction via the exact
+      integer encoding score[v, d] = dist[v, d] * (n+1) + v: minimizing the
+      score over u's neighbors minimizes the hop distance first and the
+      neighbor ID second, and every value stays exactly representable in
+      f32 (< 2^24).
+    """
+    B, n, _ = adj.shape
+    a = adj.astype(jnp.float32)
+    eye = jnp.eye(n, dtype=jnp.float32)[None]
+    ids = jnp.arange(n, dtype=jnp.float32)
+    dist0 = jnp.where(eye > 0, 0.0, jnp.where(adj, 1.0, BIG))
+    reach0 = jnp.minimum(eye + a, 1.0)
+
+    def cond(state):
+        k, changed, _, _ = state
+        return changed & (k < n)
+
+    def body(state):
+        k, _, dist, reach = state
+        nr = jnp.minimum(reach + jnp.matmul(reach, a), 1.0)
+        newly = (nr > 0) & (dist >= BIG * 0.5)
+        return (k + 1, jnp.any(newly),
+                jnp.where(newly, k.astype(jnp.float32), dist), nr)
+
+    _, _, dist, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(2), jnp.bool_(True), dist0, reach0))
+
+    K = jnp.float32(n + 1)
+    score = jnp.where(dist < BIG * 0.5, dist * K + ids[:, None], BIG)
+    edge0 = jnp.where(adj, 0.0, BIG)
+    out = jnp.min(edge0[:, :, :, None] + score[:, None, :, :], axis=2)
+    v = out - K * jnp.floor(out / K)
+    take = (dist < BIG * 0.5) & ~(jnp.eye(n, dtype=bool)[None])
+    u_ids = jnp.arange(n, dtype=jnp.int32)[:, None]
+    return jnp.where(take, v.astype(jnp.int32), u_ids[None])
+
+
+# ---------------------------------------------------------------------------
+# up*/down* — batched phase-automaton relaxation, host RNG selection
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _updown_relax_batch(cost: jax.Array, relay: jax.Array, lvl: jax.Array
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched twin of ``tables._updown_distances``: two coupled dense
+    Bellman–Ford phases iterated to the fixpoint (a while_loop, so the whole
+    batch stops as soon as every member has converged)."""
+    B, n, _ = cost.shape
+    ids = jnp.arange(n)
+    edge = cost < BIG * 0.5
+    up = edge & ((lvl[:, None, :] < lvl[:, :, None]) |
+                 ((lvl[:, None, :] == lvl[:, :, None]) &
+                  (ids[None, :] < ids[:, None])[None]))
+    cost_down = jnp.where(edge & ~up, cost, BIG)
+    cost_up = jnp.where(up, cost, BIG)
+    eye = jnp.where(jnp.eye(n, dtype=bool), 0.0, BIG).astype(cost.dtype)
+    dist0 = jnp.broadcast_to(eye, cost.shape)
+    dist1 = jnp.full_like(cost, BIG)
+    # can_transit[b, w, d] = relay[w] or w == d (endpoints are always legal)
+    can_transit = relay[:, :, None] | jnp.eye(n, dtype=bool)[None]
+
+    def cond(state):
+        i, changed, _, _ = state
+        return changed & (i < 2 * n)
+
+    def body(state):
+        i, _, dist0, dist1 = state
+        e0 = jnp.where(can_transit, dist0, BIG)
+        emin = jnp.minimum(e0, jnp.where(can_transit, dist1, BIG))
+        new0 = jnp.minimum(dist0, jnp.minimum(_minplus(cost_down, e0), BIG))
+        new1 = jnp.minimum(dist1, jnp.minimum(_minplus(cost_up, emin), BIG))
+        changed = jnp.any(new0 != dist0) | jnp.any(new1 != dist1)
+        return i + 1, changed, new0, new1
+
+    _, _, dist0, dist1 = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), jnp.bool_(True), dist0, dist1))
+    return dist0, dist1, up
+
+
+@jax.jit
+def updown_candidates_batch(cost: jax.Array, relay: jax.Array,
+                            lvl: jax.Array
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Per-(u, d) legal next-hop candidate masks [B, n, n, n] (axis 2 = the
+    candidate v) plus the reachability distances [B, n, n], for batches of
+    graphs under up*/down* routing. The masks feed the host-side seeded
+    choice in ``updown_random_table_via_device``."""
+    n = cost.shape[-1]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    cost = _edge_big(cost)
+    dist0, dist1, up = _updown_relax_batch(cost, relay, lvl)
+    dmin = jnp.minimum(dist0, dist1)
+    edge = cost < BIG * 0.5
+    # Stepping u -> v 'up' may continue in either phase; 'down' locks the
+    # all-down suffix (phase 0).
+    rest = jnp.where(up[:, :, :, None], dmin[:, None, :, :],
+                     dist0[:, None, :, :])
+    legal = edge[:, :, :, None] & (relay[:, None, :, None] |
+                                   (ids[:, None] == ids[None, :])[None, None])
+    scores = jnp.where(legal, cost[:, :, :, None] + rest, BIG)
+    best = jnp.min(scores, axis=2)
+    # <= best == the host's < best + TIE_TOL for exact metrics (see
+    # lowest_id_next_hops_batch).
+    cand = scores <= best[:, :, None, :]
+    return cand, dmin
+
+
+def updown_random_table_via_device(g, metric: str = "hops", seed: int = 0,
+                                   root: int | None = None) -> np.ndarray:
+    """``updown_random_table`` with the O(n^3) phase relaxation on the
+    device: the candidate masks come from ``updown_candidates_batch``, the
+    seeded uniform choice stays on the host in the reference's (d, u)
+    iteration order — identical RNG stream, identical tables (asserted in
+    tests/test_device_path.py)."""
+    from .tables import _bfs_levels, _edge_costs
+
+    n = g.n
+    rng = np.random.default_rng(seed)
+    cost = _edge_costs(g, metric)
+    if root is None:
+        root = int(np.argmax(g.degree()))
+    lvl = _bfs_levels(g, root)
+    cand, dmin = updown_candidates_batch(
+        jnp.asarray(cost, jnp.float32)[None],
+        jnp.asarray(g.relay, bool)[None],
+        jnp.asarray(lvl, jnp.int32)[None])
+    cand = np.asarray(cand[0])
+    reachable = np.asarray(dmin[0]) < BIG * 0.5
+    next_hop = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, n))
+    for d in range(n):
+        for u in range(n):
+            if u == d or not reachable[u, d]:
+                continue
+            cands = np.nonzero(cand[u, :, d])[0]
+            next_hop[u, d] = int(rng.choice(cands))
+    return next_hop

@@ -114,14 +114,24 @@ def hex_placement(n: int, footprint: float, spacing: float = 1.0
     return out
 
 
+# Relative tolerance for PHY-distance ties: symmetric layouts produce many
+# geometrically identical candidates whose float64 distances differ only in
+# association-order rounding noise; comparing with a tolerance makes the
+# tie-break (lowest PHY index) a property of the geometry, not of the
+# summation order — which is what lets the device pipeline
+# (dse/genomes.py) reproduce the assignment exactly in float32.
+PHY_TIE_TOL = 1e-9
+
+
 def _assign_phys(positions: list[tuple[float, float]], edges: list[Edge],
                  phys: list[Phy], footprint: float) -> dict[tuple[int, int], int]:
     """Greedy nearest-PHY assignment: for each link endpoint, pick the unused
-    PHY of that chiplet closest to the neighbor's center. Returns
+    PHY of that chiplet closest to the neighbor's center (distance ties
+    within PHY_TIE_TOL go to the lowest PHY index). Returns
     (chiplet, edge_index) -> phy index."""
     used: dict[int, set[int]] = {}
     assign: dict[tuple[int, int], int] = {}
-    order = sorted(range(len(edges)), key=lambda li: _edge_len(positions, edges[li]))
+    order = _robust_edge_order(positions, edges)
     for li in order:
         u, v = edges[li]
         for (a, b) in ((u, v), (v, u)):
@@ -134,7 +144,7 @@ def _assign_phys(positions: list[tuple[float, float]], edges: list[Edge],
                     continue
                 px, py = positions[a][0] + phy.x, positions[a][1] + phy.y
                 d = abs(px - target[0]) + abs(py - target[1])
-                if d < best_d:
+                if best_pi is None or d < best_d - PHY_TIE_TOL * max(best_d, 1.0):
                     best_d, best_pi = d, pi
             if best_pi is None:
                 raise ValueError(
@@ -147,6 +157,27 @@ def _assign_phys(positions: list[tuple[float, float]], edges: list[Edge],
 def _edge_len(positions, e: Edge) -> float:
     (ax, ay), (bx, by) = positions[e[0]], positions[e[1]]
     return abs(ax - bx) + abs(ay - by)
+
+
+def _robust_edge_order(positions, edges: list[Edge]) -> list[int]:
+    """Edge processing order for the greedy PHY assignment: ascending length,
+    with lengths equal within PHY_TIE_TOL grouped and ordered by edge index.
+    Like the PHY tie-break, this makes the order a property of the geometry
+    rather than of float64 summation noise (regular placements produce many
+    abstractly equal edge lengths)."""
+    lens = [_edge_len(positions, e) for e in edges]
+    order = sorted(range(len(edges)), key=lambda li: (lens[li], li))
+    robust: list[int] = []
+    group: list[int] = []
+    prev = None
+    for li in order:
+        if prev is not None and lens[li] - prev > PHY_TIE_TOL * max(prev, 1.0):
+            robust.extend(sorted(group))
+            group = []
+        group.append(li)
+        prev = lens[li]
+    robust.extend(sorted(group))
+    return robust
 
 
 def make_design(topology: str, n_chiplets: int,

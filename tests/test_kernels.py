@@ -196,3 +196,57 @@ def test_apsp_disconnected_stays_inf():
     assert np.isinf(out[0, 2]) and np.isinf(out[1, 3])
     assert out[0, 1] == pytest.approx(1.0)
     assert out[2, 3] == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# apsp backend dispatch (compiled Pallas on TPU, interpret/XLA on CPU)
+# ---------------------------------------------------------------------------
+
+def _floyd_warshall(adj: np.ndarray) -> np.ndarray:
+    fw = np.where(np.isfinite(adj), adj, np.inf)
+    np.fill_diagonal(fw, 0.0)
+    n = adj.shape[0]
+    for k in range(n):
+        fw = np.minimum(fw, fw[:, k:k + 1] + fw[k:k + 1, :])
+    return fw
+
+
+def _random_weighted_graph(n, rng):
+    adj = np.full((n, n), np.inf)
+    perm = rng.permutation(n)
+    for i in range(1, n):
+        j = perm[rng.integers(0, i)]
+        w = rng.uniform(0.5, 5.0)
+        adj[perm[i], j] = adj[j, perm[i]] = w
+    return adj
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+def test_apsp_backends_agree_with_floyd_warshall(backend):
+    from repro.kernels.ops import apsp
+
+    rng = np.random.default_rng(11)
+    adj = _random_weighted_graph(24, rng)
+    got = np.asarray(apsp(jnp.asarray(adj, jnp.float32), backend=backend))
+    np.testing.assert_allclose(got, _floyd_warshall(adj).astype(np.float32),
+                               rtol=1e-4)
+
+
+def test_apsp_default_backend_dispatch(monkeypatch):
+    """On non-TPU runtimes the default must be the XLA fallback (interpret
+    mode would run the kernel body in Python); env overrides win."""
+    import jax
+    from repro.kernels import apsp as apsp_mod
+
+    monkeypatch.delenv("REPRO_APSP_BACKEND", raising=False)
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    expected = "pallas" if jax.default_backend() == "tpu" else "xla"
+    assert apsp_mod.default_backend() == expected
+    monkeypatch.setenv("REPRO_APSP_BACKEND", "pallas_interpret")
+    assert apsp_mod.default_backend() == "pallas_interpret"
+    monkeypatch.setenv("REPRO_APSP_BACKEND", "bogus")
+    with pytest.raises(ValueError, match="REPRO_APSP_BACKEND"):
+        apsp_mod.default_backend()
+    monkeypatch.delenv("REPRO_APSP_BACKEND")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert apsp_mod.default_backend() == "pallas"

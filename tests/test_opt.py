@@ -354,14 +354,32 @@ def test_checkpoint_is_json_and_atomic(tmp_path):
 
 
 def test_structure_cache_hits_across_generations():
-    """Re-visited genomes (elitist survivors re-evaluated, SA rejections)
-    must hit the process-wide structure cache instead of rebuilding."""
+    """On the host path, re-visited genomes (elitist survivors re-evaluated,
+    SA rejections) must hit the process-wide structure cache instead of
+    rebuilding."""
     from repro.core.structure_cache import GLOBAL_STRUCTURE_CACHE
     space = AdjacencySpace(n_chiplets=10, max_degree=4)
-    ev = PopulationEvaluator(space)
+    ev = PopulationEvaluator(space, device_path=False)
     genomes = space.sample(np.random.default_rng(9), 6)
     ev(genomes)
     before = GLOBAL_STRUCTURE_CACHE.stats()
     ev(genomes)     # identical population again: all structures cached
     after = GLOBAL_STRUCTURE_CACHE.stats()
     assert after["hits"] >= before["hits"] + 6
+
+
+def test_device_path_bypasses_structure_cache():
+    """The fused genome pipeline never materializes DesignPoints, so the
+    structure cache must stay untouched — per-genome host work is exactly
+    what the device path removes."""
+    from repro.core.structure_cache import GLOBAL_STRUCTURE_CACHE
+    space = AdjacencySpace(n_chiplets=10, max_degree=4)
+    ev = PopulationEvaluator(space)
+    assert ev._use_device_path()
+    genomes = space.sample(np.random.default_rng(9), 6)
+    ev(genomes)
+    before = GLOBAL_STRUCTURE_CACHE.stats()
+    ev(genomes)
+    after = GLOBAL_STRUCTURE_CACHE.stats()
+    assert after["hits"] == before["hits"]
+    assert after["misses"] == before["misses"]
