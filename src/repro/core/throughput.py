@@ -31,6 +31,16 @@ import jax
 import jax.numpy as jnp
 
 
+def _dest_major_load0(next_hop: jax.Array, traffic: jax.Array) -> jax.Array:
+    """Initial dest-major load L0[d, u] from a (possibly router-padded)
+    traffic matrix: traffic[s, d] starts residing at s, destined for d."""
+    n = next_hop.shape[0]
+    n_c = traffic.shape[0]
+    t = jnp.zeros((n, n), dtype=jnp.float32).at[:n_c, :n_c].set(
+        traffic.astype(jnp.float32))
+    return t.T
+
+
 @functools.partial(jax.jit, static_argnames=("max_hops", "use_kernel",
                                               "adaptive"))
 def edge_flows(next_hop: jax.Array, traffic: jax.Array,
@@ -42,62 +52,56 @@ def edge_flows(next_hop: jax.Array, traffic: jax.Array,
 
     traffic is [n_chiplets, n_chiplets]; routers never source traffic.
 
+    The default path dispatches through the shared load-propagation
+    primitive ``kernels.ops.load_propagate`` (fused Pallas kernel on TPU,
+    scatter-free XLA loop elsewhere — see ``edge_flows_load`` for the
+    formulation). ``use_kernel=True`` instead runs the per-route pair walk
+    with the scatter-as-matmul ``flow_accumulate`` Pallas kernel — the
+    alternative TPU story for very large n, kept as an independent
+    implementation (and test oracle).
+
     ``adaptive=True`` replaces the fixed-length scan with a while_loop that
     stops once every route has reached its destination (``max_hops`` stays
     the safety bound). Same flows; the trip count becomes the actual routed
-    diameter instead of the static bound — the right trade for the fused
-    genome pipeline, where the bound must be shape-stable (n-1) but real
-    diameters are small. Under vmap the loop runs until the *batch* maximum
-    diameter.
+    diameter instead of the static bound. Under vmap the loop runs until
+    the *batch* maximum diameter. Unreachable pairs (next_hop self-loops)
+    never deliver, so both variants accumulate them on the diagonal for
+    exactly ``max_hops`` hops (zero-bandwidth self-edges then drive the
+    proxy to 0).
     """
     n = next_hop.shape[0]
-    n_c = traffic.shape[0]
     if max_hops is None:
         max_hops = n - 1
-    # Pad traffic to [n, n] (router rows/cols zero).
+    if not use_kernel:
+        from ..kernels.ops import load_propagate
+        _, flow = load_propagate(next_hop, _dest_major_load0(next_hop,
+                                                             traffic),
+                                 max_hops=max_hops, adaptive=adaptive)
+        return flow
+
+    from ..kernels.load_prop import hop_loop
+    from ..kernels.ops import flow_accumulate
+
+    n_c = traffic.shape[0]
     t = jnp.zeros((n, n), dtype=jnp.float32).at[:n_c, :n_c].set(
         traffic.astype(jnp.float32))
     amount = t.ravel()                                   # [n*n]
     dest = jnp.tile(jnp.arange(n, dtype=next_hop.dtype), (n,))   # [n*n]
     cur0 = jnp.repeat(jnp.arange(n, dtype=next_hop.dtype), n)    # [n*n]
 
-    if use_kernel:
-        from ..kernels.ops import flow_accumulate
+    def step(state):
+        cur, flow = state
+        nxt = next_hop[cur, dest]
+        active = (cur != dest) & (amount > 0)
+        contrib = jnp.where(active, amount, 0.0)
+        flow = flow_accumulate(flow, cur, nxt, contrib)
+        return jnp.where(active, nxt, cur), flow
 
-        def step(cur, flow):
-            nxt = next_hop[cur, dest]
-            active = (cur != dest) & (amount > 0)
-            contrib = jnp.where(active, amount, 0.0)
-            flow = flow_accumulate(flow, cur, nxt, contrib)
-            return jnp.where(active, nxt, cur), flow
-    else:
-        def step(cur, flow):
-            nxt = next_hop[cur, dest]
-            active = (cur != dest) & (amount > 0)
-            contrib = jnp.where(active, amount, 0.0)
-            flat = cur.astype(jnp.int32) * n + nxt.astype(jnp.int32)
-            flow = flow.ravel().at[flat].add(contrib).reshape(n, n)
-            return jnp.where(active, nxt, cur), flow
+    def still_active(state):
+        return jnp.any((state[0] != dest) & (amount > 0))
 
     flow0 = jnp.zeros((n, n), dtype=jnp.float32)
-    if adaptive:
-        def cond(state):
-            i, cur, _ = state
-            return (i < max_hops) & jnp.any((cur != dest) & (amount > 0))
-
-        def body(state):
-            i, cur, flow = state
-            cur, flow = step(cur, flow)
-            return i + 1, cur, flow
-
-        _, _, flow = jax.lax.while_loop(cond, body,
-                                        (jnp.int32(0), cur0, flow0))
-        return flow
-
-    def body(carry, _):
-        return step(*carry), None
-
-    (_, flow), _ = jax.lax.scan(body, (cur0, flow0), None, length=max_hops)
+    _, flow = hop_loop(step, (cur0, flow0), max_hops, adaptive, still_active)
     return flow
 
 
@@ -105,65 +109,33 @@ def edge_flows(next_hop: jax.Array, traffic: jax.Array,
 def edge_flows_load(next_hop: jax.Array, traffic: jax.Array,
                     max_hops: int | None = None,
                     adaptive: bool = True) -> jax.Array:
-    """``edge_flows`` reformulated as per-destination load propagation —
-    scatter-free, for backends where XLA scatter-add is a scalar loop (CPU).
+    """``edge_flows`` as per-destination load propagation — scatter-free,
+    for backends where XLA scatter-add is a scalar loop (CPU).
 
-    State is the load matrix L[u, d] = traffic currently residing at u and
+    State is the load matrix L[d, u] = traffic currently residing at u and
     destined for d. The routing table is static across hops, so its one-hot
-    tensor OH[u, d, v] = [next_hop[u, d] = v and u != d] is built once;
-    each hop is one small dot contraction propagating the load, the summed
-    per-hop loads W = Σ_j L_j are accumulated as a cheap [n, n] add, and
-    the edge flows come from ONE final contraction
+    tensor OH[d, u, v] = [next_hop[u, d] = v] is built once; each hop is
+    one contraction propagating the load, the summed per-hop loads
+    W = Σ_j L_j are accumulated as a cheap [n, n] add, and the edge flows
+    come from ONE final contraction
 
-        flow[u, v] = Σ_d OH[u, d, v] · W[u, d]
+        flow[u, v] = Σ_d OH[d, u, v] · W[d, u]
 
     (every unit of load at u toward d crosses edge (u, next_hop[u, d])
-    exactly once per hop). Delivered traffic (u == d) leaves the system;
+    exactly once per hop). Delivered traffic (v == d) leaves the system;
     unreachable pairs (next_hop[u, d] = u) accumulate on the diagonal
-    exactly like the walk in ``edge_flows`` (zero-bandwidth self-edges
-    drive the proxy to 0). Same flows as ``edge_flows`` up to f32
-    summation order (asserted in tests/test_device_path.py); the fused
-    genome pipeline (``dse.genomes._eval_proxies``) inlines this
-    formulation to extract the traffic-weighted latency from the same load
-    tensor.
+    exactly like the walk in ``edge_flows``. This is now a thin alias for
+    the shared primitive ``kernels.ops.load_propagate`` (one implementation
+    of the fixed-length and adaptive variants, Pallas-fused on TPU); the
+    fused genome pipeline (``dse.genomes._eval_proxies``) calls the same
+    primitive and additionally extracts the traffic-weighted latency from
+    the W tensor.
     """
-    n = next_hop.shape[0]
-    n_c = traffic.shape[0]
-    if max_hops is None:
-        max_hops = n - 1
-    ids = jnp.arange(n, dtype=next_hop.dtype)
-    oh = ((next_hop[:, :, None] == ids[None, None, :]) &
-          (ids[:, None, None] != ids[None, :, None])).astype(jnp.float32)
-    offdiag = ~jnp.eye(n, dtype=bool)
-    load0 = jnp.zeros((n, n), dtype=jnp.float32).at[:n_c, :n_c].set(
-        traffic.astype(jnp.float32))
-    load0 = jnp.where(offdiag, load0, 0.0)
+    from ..kernels.ops import load_propagate
 
-    def step(load, total):
-        total = total + load
-        load = jnp.einsum("udv,ud->vd", oh, load)
-        return jnp.where(offdiag, load, 0.0), total
-
-    if adaptive:
-        def cond(state):
-            i, load, _ = state
-            return (i < max_hops) & jnp.any(load > 0)
-
-        def body(state):
-            i, load, total = state
-            load, total = step(load, total)
-            return i + 1, load, total
-
-        _, _, total = jax.lax.while_loop(
-            cond, body, (jnp.int32(0), load0, jnp.zeros((n, n), jnp.float32)))
-    else:
-        def body(carry, _):
-            return step(*carry), None
-
-        (_, total), _ = jax.lax.scan(
-            body, (load0, jnp.zeros((n, n), jnp.float32)), None,
-            length=max_hops)
-    return jnp.einsum("udv,ud->uv", oh, total)
+    _, flow = load_propagate(next_hop, _dest_major_load0(next_hop, traffic),
+                             max_hops=max_hops, adaptive=adaptive)
+    return flow
 
 
 @jax.jit

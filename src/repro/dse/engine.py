@@ -58,7 +58,11 @@ def _eval_one(next_hop, step_cost, node_weight, adj_bw, traffic,
               n_steps: int, max_hops: int):
     plat = path_cost_doubling(next_hop, step_cost, node_weight, n_steps)
     lat = latency_proxy(plat, traffic)
-    thr = throughput_proxy(next_hop, adj_bw, traffic, max_hops=max_hops)
+    # adaptive: the flow loop stops at the routed diameter instead of the
+    # shape-stable bound (same flows — converged loads propagate zeros), so
+    # padding node counts up to a shared jit bucket costs no hop steps
+    thr = throughput_proxy(next_hop, adj_bw, traffic, max_hops=max_hops,
+                           adaptive=True)
     return lat, thr
 
 
@@ -114,17 +118,26 @@ class DseEngine:
     def evaluate_genomes(self, space, genomes):
         """Fused device path from a genome batch to metrics (no DesignPoint
         materialization): decode, geometry, routing tables, and proxies run
-        in one jitted program per (bucketed population, node-count) shape —
-        the optimizer inner loop (see repro.dse.genomes). Genomes must be
-        valid (``space.repair`` output). Raises ValueError for spaces whose
-        structures the device cannot reproduce (use ``evaluate_points``)."""
+        in one jitted, population-sharded program per (bucketed population,
+        node-count) shape — the optimizer inner loop (see
+        repro.dse.genomes). Genomes must be valid (``space.repair``
+        output). Raises ValueError for spaces whose structures the device
+        cannot reproduce (use ``evaluate_points``)."""
+        return self.evaluate_genomes_async(space, genomes).result()
+
+    def evaluate_genomes_async(self, space, genomes):
+        """``evaluate_genomes`` without blocking on the device: dispatches
+        the fused sharded program and returns a ``PendingGenomeEval`` whose
+        ``result()`` materializes metrics + reports. The async optimizer
+        driver (``opt.runner.AsyncStepper``) overlaps archive updates and
+        checkpoint writes with the in-flight call."""
         pipeline = self._genome_pipeline(space)
         if pipeline is None:
             raise ValueError(
                 f"no device genome path for {type(space).__name__} "
                 f"(routing {getattr(space, 'routing', None)!r}); "
                 f"use evaluate_points")
-        return pipeline.evaluate(genomes)
+        return pipeline.evaluate_async(genomes)
 
     def _pad_chunk(self, batch: DesignBatch) -> tuple[DesignBatch, int]:
         """Pad the chunk's design axis to a device-count multiple (elastic)."""

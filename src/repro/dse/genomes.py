@@ -25,12 +25,25 @@ These pipelines remove the host from the loop:
   (including the RNG-streamed ``updown_random``) is supported because the
   tables come from the host builder.
 
+Both pipelines shard the population axis across every device of the engine
+mesh via ``shard_map`` (ISSUE 5): the fused program runs per shard with all
+lookup tables replicated and zero cross-device communication, so the same
+code spans 1 CPU device or a full accelerator mesh, and per-shard adaptive
+loops stop at each shard's routed diameter. The proxies' hot loop
+dispatches through the shared ``kernels.ops.load_propagate`` primitive
+(fused Pallas kernel on TPU, adaptive XLA loop elsewhere;
+``REPRO_LOAD_PROP_BACKEND`` overrides). ``evaluate_async`` dispatches
+without blocking — the async optimizer driver (``opt.runner.AsyncStepper``)
+overlaps archive/checkpoint work with the in-flight call.
+
 Both pipelines are jit-cache-stable: the population axis is padded to
-power-of-two buckets (×device-count multiples) and every static argument is
-derived from the space, so generation after generation reuses one compiled
-program per (bucketed P, n) shape. ``COMPILE_COUNTS`` records a trace-time
-probe per shape key; tests assert exactly one compilation across a whole
-run.
+power-of-two buckets (×device-count multiples), ``ParametricPipeline``
+node counts pad to shared power-of-two buckets (``node_bucket`` — spaces
+over heterogeneous chiplet counts reuse one compiled program), and every
+static argument is derived from the space, so generation after generation
+reuses one compiled program per (bucketed P, n) shape. ``COMPILE_COUNTS``
+records a trace-time probe per shape key; tests assert exactly one
+compilation across a whole run.
 
 Reports (area/power/cost for the constraint masks) stay on the host in
 float64 — they are O(P) scalar gathers from per-radix/per-structure tables,
@@ -49,8 +62,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core.latency import num_doubling_steps
 from ..core.reports import ReportArrays
+from ..kernels.ops import load_propagate
 from ..kernels.ref import BIG
 from ..routing.device import hops_next_hop_batch
+from ..utils.jaxcompat import shard_map
 
 # Trace-time compile probe: key -> number of jit traces. One generation after
 # another must reuse the same compiled program, so each key stays at 1 for a
@@ -76,6 +91,32 @@ def bucket_population(size: int, multiple: int = 1) -> int:
     return b
 
 
+def node_bucket(n: int) -> int:
+    """Pad node counts to power-of-two buckets (>= 8): pipelines over
+    heterogeneous-``n`` spaces then share one compiled program per bucket
+    instead of compiling per exact node count (padding rows are self-looped
+    routers with zero traffic — exact no-ops for every proxy)."""
+    return 1 << max(3, int(n - 1).bit_length())
+
+
+class PendingGenomeEval:
+    """Handle for an in-flight (dispatched, not yet materialized) genome
+    evaluation: the device computes while the host keeps working (archive
+    updates, checkpoint writes — see ``opt.runner.AsyncStepper``).
+    ``result()`` blocks on the device, builds the host-side reports, and is
+    idempotent."""
+
+    def __init__(self, finisher):
+        self._finisher = finisher
+        self._result: GenomeEvalResult | None = None
+
+    def result(self) -> GenomeEvalResult:
+        if self._finisher is not None:
+            self._result = self._finisher()
+            self._finisher = None
+        return self._result
+
+
 @dataclass
 class GenomeEvalResult:
     """Metrics for one genome population (see DseEngine.evaluate_genomes)."""
@@ -90,70 +131,48 @@ class GenomeEvalResult:
 
 def _eval_proxies(next_hop, step_cost, node_weight, adj_bw, traffic,
                   max_hops: int):
-    """Both proxies from ONE load-propagation loop (see
-    ``throughput.edge_flows_load``): the accumulated per-vertex load
-    W[u, d] gives the edge flows via a single contraction with the next-hop
-    one-hot, and — because a unit of traffic pays step_cost(u, nh[u, d])
-    each time it leaves u — the traffic-weighted total path cost is
+    """Both proxies from ONE load-propagation pass through the shared
+    primitive ``kernels.ops.load_propagate`` (Pallas-fused on TPU, adaptive
+    XLA loop elsewhere): the accumulated per-destination load W[d, u] gives
+    the edge flows via the primitive's final contraction, and — because a
+    unit of traffic pays step_cost(u, nh[u, d]) each time it leaves u — the
+    traffic-weighted total path cost is
 
-        Σ_{u,d} W[u, d] · step_cost[u, nh[u, d]] + Σ_d (Σ_s T[s, d]) · nw[d]
+        Σ_{u,d} W[d, u] · step_cost[u, nh[u, d]] + Σ_d (Σ_s T[s, d]) · nw[d]
 
     which replaces the whole path-doubling pass. Exact for connected
     (repaired) designs, where every routed pair terminates; ``max_hops`` is
-    the shape-stable safety bound (n-1), the while_loop stops at the
-    batch's actual routed diameter. Matches the reference proxies to f32
-    summation order (asserted against the host path in tests).
+    the shape-stable safety bound (n-1), the adaptive loop stops at the
+    batch's actual routed diameter (per *shard* under ``shard_map``).
+    Matches the reference proxies to f32 summation order (asserted against
+    the host path in tests).
     """
-    from ..core.throughput import undirected_flows
-
-    n = next_hop.shape[-1]
-    ids = jnp.arange(n, dtype=next_hop.dtype)
-    offdiag = ~jnp.eye(n, dtype=bool)
-    t_total = jnp.sum(traffic)
-    dest_weight = jnp.sum(jnp.sum(traffic, axis=0) * node_weight)
-
-    def one(nh, sc, bw):
-        # One-hot laid out [d, u, v] and load [d, u]: the destination axis is
-        # the leading batch dim of every contraction, so the loop body is a
-        # plain batched matvec with no per-iteration relayout.
-        ohd = ((nh.T[:, :, None] == ids[None, None, :]) &
-               offdiag[:, :, None]).astype(jnp.float32)        # [d, u, v]
-        load0 = jnp.where(offdiag, traffic.astype(jnp.float32).T, 0.0)
-
-        def cond(state):
-            i, load, _ = state
-            return (i < max_hops) & jnp.any(load > 0)
-
-        def body(state):
-            i, load, total = state
-            total = total + load
-            load = jnp.where(offdiag,
-                             jnp.einsum("duv,du->dv", ohd, load), 0.0)
-            return i + 1, load, total
-
-        _, _, total = jax.lax.while_loop(
-            cond, body,
-            (jnp.int32(0), load0, jnp.zeros((n, n), jnp.float32)))
-        flow = jnp.einsum("duv,du->uv", ohd, total)
-        f = undirected_flows(flow)
-        ratio = jnp.where(f > 0, bw / jnp.maximum(f, 1e-30), jnp.inf)
-        thr = (jnp.min(ratio) * t_total).astype(jnp.float32)
-        sc_next = jnp.take_along_axis(sc, nh, axis=1)          # [u, d]
-        lat = ((jnp.sum(total * sc_next.T) + dest_weight)
-               / t_total).astype(jnp.float32)
-        return lat, thr
-
-    return jax.vmap(one)(next_hop, step_cost, adj_bw)
+    Pn, n, _ = next_hop.shape
+    t32 = traffic.astype(jnp.float32)
+    t_total = jnp.sum(t32)
+    dest_weight = jnp.sum(jnp.sum(t32, axis=0) * node_weight)
+    load0 = jnp.broadcast_to(t32.T[None], (Pn, n, n))
+    total, flow = load_propagate(next_hop, load0, max_hops=max_hops,
+                                 adaptive=True)
+    f = flow + flow.swapaxes(-1, -2)
+    ratio = jnp.where(f > 0, adj_bw / jnp.maximum(f, 1e-30), jnp.inf)
+    thr = (jnp.min(ratio, axis=(1, 2)) * t_total).astype(jnp.float32)
+    sc_next = jnp.take_along_axis(step_cost, next_hop, axis=2)   # [P, u, d]
+    lat = ((jnp.sum(total * sc_next.swapaxes(-1, -2), axis=(1, 2))
+            + dest_weight) / t_total).astype(jnp.float32)
+    return lat, thr
 
 
-@functools.partial(jax.jit, static_argnames=("n", "k_phys", "euclid",
-                                             "max_hops"))
 def _adjacency_eval(bits, pair_u, pair_v, pair_id, chain_slot, chain_eslot,
-                    inv_map, col, row, side_t, phyx_t, phyy_t,
+                    inv_j, inv_c, col, row, side_t, phyx_t, phyy_t,
                     cphyx_t, cphyy_t, bw_t, traffic, consts, *, n: int,
                     k_phys: int, euclid: bool, max_hops: int):
     """Fused device path: repaired bit genomes [P, G] -> per-design latency,
-    throughput, and summed link length.
+    throughput, and summed link length. Wrapped per mesh by
+    ``_adjacency_eval_fn`` in ``shard_map`` over the population axis — each
+    device runs this body on its own population shard (all tables
+    replicated), so the whole pipeline scales across ``jax.devices()`` with
+    zero cross-device communication.
 
     pair_u/pair_v: [G] pair endpoints; pair_id: [n, n] static map from a
     vertex pair to its genome slot (G on the diagonal), which turns every
@@ -161,12 +180,15 @@ def _adjacency_eval(bits, pair_u, pair_v, pair_id, chain_slot, chain_eslot,
 
     The greedy PHY scan's used-set is per-chiplet, so the host's sequential
     pass decomposes into n *independent* chains — chiplet c walks its n-1
-    incident slots in the greedy order restricted to c. chain_slot/
+    incident slots in the greedy order restricted to c. Only SET bits
+    occupy a PHY, so each chain has at most k_phys real steps: the scan
+    runs over k_phys *compacted* steps (per-design set-slots-first
+    reordering of the static schedule) instead of all n-1. chain_slot/
     chain_eslot: [n-1, n] static schedules (step j, chiplet c) -> genome
     slot / (slot, endpoint) index into the precomputed distance tensor;
-    inv_map: [2G] gather positions of each (slot, endpoint) pick in the
-    scan output. side_t/phyx_t/phyy_t/bw_t: per-radix lookup tables (host
-    f64 → f32). consts: [spacing, link_const, link_per_mm, phy_lat2,
+    inv_j/inv_c: [2G] static (chain step, chiplet) coordinates of each
+    (slot, endpoint). side_t/phyx_t/phyy_t/bw_t: per-radix lookup tables
+    (host f64 → f32). consts: [spacing, link_const, link_per_mm, phy_lat2,
     internal].
     """
     Pn, G = bits.shape
@@ -208,31 +230,60 @@ def _adjacency_eval(bits, pair_u, pair_v, pair_id, chain_slot, chain_eslot,
                              col[pair_v] - col[pair_u]])        # [2G]
     drow2 = jnp.concatenate([row[pair_u] - row[pair_v],
                              row[pair_v] - row[pair_u]])
-    d_all = (jnp.abs(dcol2[None, :, None] * pitch[:, None, None]
-                     + coffx[:, None, :]) +
-             jnp.abs(drow2[None, :, None] * pitch[:, None, None]
-                     + coffy[:, None, :]))                      # [P, 2G, K]
+
+    def cand_dist(es):
+        """Candidate distances [P, n, K] for one compact step's endpoint
+        slots — computed on demand from the factored grid offsets (the
+        full [P, 2G, K] tensor is never materialized; the compacted scan
+        touches at most k_phys·n of its 2G rows)."""
+        dc = dcol2[es]                                          # [P, n]
+        dr = drow2[es]
+        return (jnp.abs(dc[:, :, None] * pitch[:, None, None] +
+                        coffx[:, None, :]) +
+                jnp.abs(dr[:, :, None] * pitch[:, None, None] +
+                        coffy[:, None, :]))
+
+    # Chain compaction: only set bits occupy a PHY, so at most k_phys of a
+    # chiplet's n-1 chain steps do anything. Route every (design, chiplet)
+    # chain's t-th SET slot to compact step t (relative greedy order
+    # preserved — unset slots never touch the used-set) and scan just
+    # k_phys steps. The (t-th set slot -> chain step) map is one one-hot
+    # contraction over the rank tensor; steps beyond a chiplet's degree are
+    # gated off, and picks of unset slots are arbitrary — masked out of
+    # every consumer below (lat/bw/length gate on the genome bit).
+    cs_bits = bits_pad[:, chain_slot]                       # [P, n-1, n]
+    csb = cs_bits.astype(jnp.int32)
+    rank = jnp.cumsum(csb, axis=1) - csb     # set slots before step j
+    tio = jnp.arange(k_phys, dtype=jnp.int32)
+    sel = (cs_bits[:, None] &
+           (rank[:, None] == tio[None, :, None, None]))     # [P, k, n-1, n]
+    eslots = jnp.sum(jnp.where(sel, chain_eslot.astype(jnp.int32)[None, None],
+                               0), axis=2)                  # [P, k, n]
+    valid = tio[None, :, None] < deg[:, None, :]            # [P, k, n]
 
     def step(used, xs):
-        sl, es = xs                     # [n]: chiplet c's step-j slot
-        bitcol = bits_pad[:, sl]                                # [P, n]
-        d = d_all[:, es, :]                                     # [P, n, K]
+        es, ok = xs                     # [P, n]: chiplet c's compact step
+        d = cand_dist(es)                                       # [P, n, K]
         free = phy_valid[:, None, :] & ~used
         d = jnp.where(free, d, BIG)
         dm = jnp.min(d, axis=2)
         near = d <= (dm + tie_tol * jnp.maximum(dm, 1.0))[:, :, None]
         pick = jnp.argmax(free & near, axis=2).astype(jnp.int32)  # [P, n]
         used = used | ((phy_ids[None, None, :] == pick[:, :, None]) &
-                       bitcol[:, :, None])
+                       ok[:, :, None])
         return used, pick
 
     used0 = jnp.zeros((Pn, n, k_phys), bool)
-    _, picks = jax.lax.scan(step, used0, (chain_slot, chain_eslot))
-    # [n-1, P, n] -> per (pair, endpoint) picks [P, G], via the static
-    # inverse gather map.
-    picks_flat = jnp.moveaxis(picks, 0, 1).reshape(Pn, -1)
-    pick_u = picks_flat[:, inv_map[:G]]
-    pick_v = picks_flat[:, inv_map[G:]]
+    _, picks = jax.lax.scan(step, used0, (jnp.moveaxis(eslots, 1, 0),
+                                          jnp.moveaxis(valid, 1, 0)))
+    # [k, P, n] -> per (pair, endpoint) picks [P, 2G]: a set slot's compact
+    # step is its rank at its static (chain step, chiplet) coordinates.
+    picks_c = jnp.moveaxis(picks, 0, 1)                     # [P, k, n]
+    t_ge = jnp.minimum(rank[:, inv_j, inv_c], k_phys - 1)   # [P, 2G]
+    picks_ge = jnp.take_along_axis(picks_c[:, :, inv_c],
+                                   t_ge[:, None, :], axis=1)[:, 0, :]
+    pick_u = picks_ge[:, :G]
+    pick_v = picks_ge[:, G:]
 
     # --- link geometry -> latencies, bandwidths (pair order) ---
     posx_u = col[pair_u][None, :] * pitch[:, None]              # [P, G]
@@ -270,6 +321,26 @@ def _adjacency_eval(bits, pair_u, pair_v, pair_id, chain_slot, chain_eslot,
                                  traffic, max_hops)
     len_sum = jnp.sum(jnp.where(bitsb, length, 0.0), axis=1)
     return lat_m, thr_m, len_sum
+
+
+@functools.lru_cache(maxsize=None)
+def _adjacency_eval_fn(mesh, n: int, k_phys: int, euclid: bool,
+                       max_hops: int, donate: bool):
+    """Jitted, population-sharded adjacency eval for one (mesh, statics)
+    combination. Cached at module level (meshes over the same devices
+    compare equal), so every pipeline with the same geometry shares ONE
+    compiled program; ``donate`` hands the bits buffer to XLA for reuse
+    (skipped on backends without donation support)."""
+    impl = functools.partial(_adjacency_eval, n=n, k_phys=k_phys,
+                             euclid=euclid, max_hops=max_hops)
+    f = shard_map(impl, mesh=mesh, in_specs=(P("data"),) + (P(),) * 17,
+                  out_specs=(P("data"),) * 3, check_rep=False)
+    return jax.jit(f, donate_argnums=(0,) if donate else ())
+
+
+def _donate_ok() -> bool:
+    """Buffer donation is a no-op warning on CPU; enable it elsewhere."""
+    return jax.default_backend() != "cpu"
 
 
 class AdjacencyPipeline:
@@ -351,7 +422,8 @@ class AdjacencyPipeline:
         # chiplet c -> genome slot / (slot, endpoint) distance index.
         chain_slot = np.zeros((n - 1, n), np.int64)
         chain_eslot = np.zeros((n - 1, n), np.int64)
-        inv_map = np.zeros(2 * G, np.int64)
+        inv_j = np.zeros(2 * G, np.int64)
+        inv_c = np.zeros(2 * G, np.int64)
         cnt = np.zeros(n, np.int64)
         for g in self.order:
             for endpoint, c in ((0, pu[g]), (1, pv[g])):
@@ -359,7 +431,8 @@ class AdjacencyPipeline:
                 cnt[c] += 1
                 chain_slot[j, c] = g
                 chain_eslot[j, c] = g + endpoint * G
-                inv_map[endpoint * G + g] = j * n + c
+                inv_j[endpoint * G + g] = j
+                inv_c[endpoint * G + g] = c
         assert (cnt == n - 1).all()
         pair_id = np.full((n, n), G, np.int64)
         pair_id[pu, pv] = np.arange(G)
@@ -375,7 +448,8 @@ class AdjacencyPipeline:
         self._pair_id = put(pair_id, jnp.int32)
         self._chain_slot = put(chain_slot, jnp.int32)
         self._chain_eslot = put(chain_eslot, jnp.int32)
-        self._inv_map = put(inv_map, jnp.int32)
+        self._inv_j = put(inv_j, jnp.int32)
+        self._inv_c = put(inv_c, jnp.int32)
         self._col = put(col_of, jnp.float32)
         self._row = put(row_of, jnp.float32)
         self._side = put(side, jnp.float32)
@@ -390,9 +464,14 @@ class AdjacencyPipeline:
                             make_chiplet(1).internal_latency], jnp.float32)
         self._euclid = pkg.link_routing == "euclidean"
         self.max_hops = max(n - 1, 1)
+        self._eval = _adjacency_eval_fn(mesh, self.n, self.k_phys,
+                                        self._euclid, self.max_hops,
+                                        _donate_ok())
 
-    def evaluate(self, genomes: np.ndarray) -> GenomeEvalResult:
-        """One fused jitted call for a whole (repaired) population."""
+    def evaluate_async(self, genomes: np.ndarray) -> PendingGenomeEval:
+        """Dispatch one fused, population-sharded call for a whole
+        (repaired) population and return without blocking on the device;
+        ``result()`` materializes metrics + host reports."""
         genomes = np.asarray(genomes, np.int64)
         Pn = len(genomes)
         deg = self.space.degrees(genomes)
@@ -409,18 +488,24 @@ class AdjacencyPipeline:
                 [genomes, np.repeat(genomes[-1:], bp - Pn, axis=0)], axis=0)
         bits = jax.device_put(jnp.asarray(padded % 2, jnp.int32),
                               NamedSharding(self.mesh, P("data")))
-        lat, thr, len_sum = _adjacency_eval(
+        lat, thr, len_sum = self._eval(
             bits, self._pair_u, self._pair_v, self._pair_id,
-            self._chain_slot, self._chain_eslot, self._inv_map, self._col,
-            self._row, self._side, self._phyx, self._phyy, self._cphyx,
-            self._cphyy, self._bw, self._traffic, self._consts, n=self.n,
-            k_phys=self.k_phys, euclid=self._euclid,
-            max_hops=self.max_hops)
-        reports = self._report_arrays(genomes, deg,
-                                      np.asarray(len_sum)[:Pn])
-        return GenomeEvalResult(latency=np.asarray(lat)[:Pn],
-                                throughput=np.asarray(thr)[:Pn],
-                                reports=reports)
+            self._chain_slot, self._chain_eslot, self._inv_j, self._inv_c,
+            self._col, self._row, self._side, self._phyx, self._phyy,
+            self._cphyx, self._cphyy, self._bw, self._traffic, self._consts)
+
+        def finish() -> GenomeEvalResult:
+            reports = self._report_arrays(genomes, deg,
+                                          np.asarray(len_sum)[:Pn])
+            return GenomeEvalResult(latency=np.asarray(lat)[:Pn],
+                                    throughput=np.asarray(thr)[:Pn],
+                                    reports=reports)
+
+        return PendingGenomeEval(finish)
+
+    def evaluate(self, genomes: np.ndarray) -> GenomeEvalResult:
+        """One fused jitted call for a whole (repaired) population."""
+        return self.evaluate_async(genomes).result()
 
     def _report_arrays(self, genomes, deg, len_sums) -> ReportArrays:
         """Constraint columns [P] in host float64, exact against
@@ -444,7 +529,6 @@ class AdjacencyPipeline:
 # ParametricSpace: structure-table gather
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("n_steps", "max_hops"))
 def _parametric_eval(next_hop, step_cost, node_weight, adj_bw, traffic,
                      *, n_steps: int, max_hops: int):
     _note_compile(("parametric",) + tuple(next_hop.shape)
@@ -454,21 +538,39 @@ def _parametric_eval(next_hop, step_cost, node_weight, adj_bw, traffic,
         next_hop, step_cost, node_weight, adj_bw, traffic, n_steps, max_hops)
 
 
+@functools.lru_cache(maxsize=None)
+def _parametric_eval_fn(mesh, n_steps: int, max_hops: int):
+    """Jitted, population-sharded parametric eval per (mesh, statics) —
+    module-cached, so every pipeline whose node count rounds to the same
+    ``node_bucket`` shares ONE compiled program."""
+    impl = functools.partial(_parametric_eval, n_steps=n_steps,
+                             max_hops=max_hops)
+    f = shard_map(impl, mesh=mesh, in_specs=(P("data"),) * 5,
+                  out_specs=(P("data"),) * 2, check_rep=False)
+    return jax.jit(f)
+
+
 class ParametricPipeline:
     """Structure-table device path for ``opt.space.ParametricSpace``: the
     finite set of decodable structures is built lazily on the host (through
     the shared structure cache, so sweeps and optimizers reuse each other's
     builds) and stacked; each generation is an int-indexed gather plus one
-    jitted proxy call."""
+    jitted proxy call, sharded over the population axis."""
 
     def __init__(self, space, mesh: jax.sharding.Mesh):
         self.space = space
         self.mesh = mesh
-        self.n = space.max_nodes
+        # Heterogeneous-n sub-batches all pad to one power-of-two node
+        # bucket: spaces with different max node counts reuse the same
+        # compiled program instead of fragmenting the jit cache per exact n
+        # (asserted with the COMPILE_COUNTS probe in tests).
+        self.n = node_bucket(space.max_nodes)
         self.n_steps = num_doubling_steps(self.n)
         # the shape-stable safety bound; flows converge at the real routed
-        # diameter regardless, so a tighter bound is pure wall-clock tuning
+        # diameter regardless (the throughput loop is adaptive), so the
+        # bucket-derived bound costs nothing
         self.max_hops = max(self.n - 1, 1)
+        self._eval = _parametric_eval_fn(mesh, self.n_steps, self.max_hops)
         self._sid: dict[tuple, int] = {}
         self._next_hop: list[np.ndarray] = []
         self._step_cost: list[np.ndarray] = []
@@ -543,7 +645,9 @@ class ParametricPipeline:
                                   rep.power[i], rep.cost[i]))
         self._stacked = None
 
-    def evaluate(self, genomes: np.ndarray) -> GenomeEvalResult:
+    def evaluate_async(self, genomes: np.ndarray) -> PendingGenomeEval:
+        """Dispatch one sharded proxy call for the population (structures
+        built/gathered on the host first) without blocking on the device."""
         genomes = self.space.repair(np.asarray(genomes, np.int64))
         keys = [self._key_of(g) for g in genomes]
         self._ensure(keys)
@@ -562,15 +666,21 @@ class ParametricPipeline:
             gsids = np.concatenate([sids, np.repeat(sids[-1:], bp - Pn)])
         sharding = NamedSharding(self.mesh, P("data"))
         args = [jax.device_put(t[gsids], sharding) for t in self._stacked]
-        lat, thr = _parametric_eval(*args, n_steps=self.n_steps,
-                                    max_hops=self.max_hops)
-        cols = np.asarray([self._reports[s] for s in sids], np.float64)
-        reports = ReportArrays(total_chiplet_area=cols[:, 0],
-                               interposer_area=cols[:, 1],
-                               power=cols[:, 2], cost=cols[:, 3])
-        return GenomeEvalResult(latency=np.asarray(lat)[:Pn],
-                                throughput=np.asarray(thr)[:Pn],
-                                reports=reports)
+        lat, thr = self._eval(*args)
+
+        def finish() -> GenomeEvalResult:
+            cols = np.asarray([self._reports[s] for s in sids], np.float64)
+            reports = ReportArrays(total_chiplet_area=cols[:, 0],
+                                   interposer_area=cols[:, 1],
+                                   power=cols[:, 2], cost=cols[:, 3])
+            return GenomeEvalResult(latency=np.asarray(lat)[:Pn],
+                                    throughput=np.asarray(thr)[:Pn],
+                                    reports=reports)
+
+        return PendingGenomeEval(finish)
+
+    def evaluate(self, genomes: np.ndarray) -> GenomeEvalResult:
+        return self.evaluate_async(genomes).result()
 
 
 def make_pipeline(space, mesh: jax.sharding.Mesh):

@@ -2,13 +2,16 @@
 
 * minplus     — tiled (min,+) matrix product (APSP step of the latency proxy)
 * flow_accum  — scatter-as-matmul edge-flow accumulation (throughput proxy)
+* apsp        — fused all-pairs min-plus squaring (whole matrix in VMEM)
+* load_prop   — fused per-destination load propagation (both proxies' hot
+                loop; one-hots regenerated from iota, never materialized)
 
-Each kernel ships with a pure-jnp oracle in ref.py and a jit'd public wrapper
-in ops.py. Kernels are validated in interpret mode on CPU and target TPU
-VMEM/BlockSpec tiling.
+Each kernel ships with a pure-jnp/XLA fallback and a jit'd backend-aware
+public wrapper in ops.py. Kernels are validated in interpret mode on CPU and
+target TPU VMEM/BlockSpec tiling.
 """
-from .ops import minplus_matmul, flow_accumulate
+from .ops import minplus_matmul, flow_accumulate, load_propagate
 from .ref import minplus_ref, flow_accumulate_ref
 
-__all__ = ["minplus_matmul", "flow_accumulate", "minplus_ref",
-           "flow_accumulate_ref"]
+__all__ = ["minplus_matmul", "flow_accumulate", "load_propagate",
+           "minplus_ref", "flow_accumulate_ref"]

@@ -1,0 +1,192 @@
+"""Pallas TPU kernel: fused per-destination load propagation (ISSUE 5).
+
+The scatter-free load-propagation loop is the proxy engine's hot loop: the
+state L[d, u] (traffic residing at u, destined for d) is propagated one hop
+per step through the static routing table, the per-hop loads are summed into
+W = Σ_j L_j, and both proxies fall out of W — edge flows via one contraction
+with the next-hop one-hot, traffic-weighted latency via the per-hop step
+costs. Three call sites used to carry near-identical copies of this loop
+(``core/throughput.edge_flows``, ``edge_flows_load``,
+``dse/genomes._eval_proxies``); they all dispatch through
+``kernels.ops.load_propagate`` now.
+
+Done as XLA ops each hop materializes the [n, n, n] one-hot in HBM and runs
+a batch of small gemvs per step. For the DSE regime (n ≤ a few hundred) the
+whole per-design state is a handful of [n, n] tiles, so the entire
+propagation fuses into ONE pallas_call per design: next-hop table and load
+live in VMEM/registers, the one-hot comparisons are regenerated from iota
+on the fly (never materialized), and the final flow contraction happens in
+the same kernel — zero intermediate HBM traffic.
+
+The kernel runs the shape-stable safety bound ``max_hops`` of fixed
+iterations (converged designs propagate zeros — exact no-ops); the XLA
+fallback instead supports an adaptive while_loop that stops at the batch's
+actual routed diameter, which is the right trade where each hop is a
+separate HBM round-trip anyway.
+
+Backend selection mirrors ``kernels.apsp``: compiled Pallas on TPU, the
+pure-XLA loop on CPU/GPU (where the Pallas interpreter would run the kernel
+body in Python). ``REPRO_LOAD_PROP_BACKEND`` overrides (``pallas`` |
+``pallas_interpret`` | ``xla``); the legacy ``REPRO_PALLAS_INTERPRET=0``
+still forces compiled Pallas everywhere.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LOAD_PROP_BACKENDS = ("pallas", "pallas_interpret", "xla")
+
+
+def default_backend() -> str:
+    """Pick the load-propagation backend for the current runtime.
+
+    Priority: ``REPRO_LOAD_PROP_BACKEND`` env var, then compiled Pallas on
+    TPU (or anywhere when ``REPRO_PALLAS_INTERPRET=0``), else the XLA
+    fallback.
+    """
+    env = os.environ.get("REPRO_LOAD_PROP_BACKEND")
+    if env:
+        if env not in LOAD_PROP_BACKENDS:
+            raise ValueError(f"REPRO_LOAD_PROP_BACKEND={env!r}; "
+                             f"options: {LOAD_PROP_BACKENDS}")
+        return env
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "0":
+        return "pallas"
+    return "xla"
+
+
+def hop_loop(step, carry, max_hops: int, adaptive: bool, active):
+    """The one fixed-length/adaptive hop-iteration scaffold every
+    propagation loop in the package uses.
+
+    ``step``: carry -> carry (one hop). ``active``: carry -> bool scalar;
+    with ``adaptive`` the loop stops as soon as it goes False (``max_hops``
+    stays the safety bound), otherwise it runs exactly ``max_hops`` steps
+    (same result when extra steps are no-ops — e.g. converged loads
+    propagate zeros)."""
+    if adaptive:
+        def cond(state):
+            i, c = state
+            return (i < max_hops) & active(c)
+
+        def body(state):
+            i, c = state
+            return i + 1, step(c)
+
+        return jax.lax.while_loop(cond, body, (jnp.int32(0), carry))[1]
+
+    def body(c, _):
+        return step(c), None
+
+    return jax.lax.scan(body, carry, None, length=max_hops)[0]
+
+
+def load_prop_xla(next_hop: jax.Array, load0: jax.Array, max_hops: int,
+                  adaptive: bool) -> tuple[jax.Array, jax.Array]:
+    """Pure-XLA batched load propagation: the CPU/GPU fallback behind
+    ``ops.load_propagate``.
+
+    next_hop: [B, n, n] int (src-major: next_hop[u, d]); load0: [B, n, n]
+    f32 dest-major (load0[d, u], diagonal zero). Returns (W, flow): the
+    accumulated dest-major load W[d, u] = Σ_j L_j[d, u] and the directed
+    edge flows flow[u, v] = Σ_d [next_hop[u, d] = v] · W[d, u].
+
+    The one-hot oh[d, u, v] = [next_hop[u, d] = v] is built ONCE (the table
+    is static across hops); each hop is one batched contraction, with
+    delivered load (v = d) masked off after every step.
+    """
+    B, n, _ = next_hop.shape
+    ids = jnp.arange(n, dtype=next_hop.dtype)
+    offdiag = ~jnp.eye(n, dtype=bool)
+    nhT = next_hop.swapaxes(-1, -2)                             # [B, d, u]
+    oh = (nhT[:, :, :, None] == ids).astype(jnp.float32)        # [B, d, u, v]
+    load0 = jnp.where(offdiag, load0, 0.0)
+
+    def step(state):
+        load, total = state
+        total = total + load
+        load = jnp.where(offdiag,
+                         jnp.einsum("bduv,bdu->bdv", oh, load), 0.0)
+        return load, total
+
+    def still_active(state):
+        return jnp.any(state[0] > 0)
+
+    _, total = hop_loop(step, (load0, jnp.zeros_like(load0)), max_hops,
+                        adaptive, still_active)
+    flow = jnp.einsum("bduv,bdu->buv", oh, total)
+    return total, flow
+
+
+def _load_prop_kernel(max_hops: int, nht_ref, l0_ref, w_ref, f_ref):
+    """One design per grid step: the whole propagation plus the flow
+    contraction, with every one-hot regenerated from iota comparisons
+    inside VMEM (the [n, n, n] tensor never exists)."""
+    n = l0_ref.shape[-1]
+    nhT = nht_ref[0]                                            # [d, u]
+    viota = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    diota = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    offdiag = viota != diota
+    load0 = jnp.where(offdiag, l0_ref[0], 0.0)
+
+    def propagate(load):
+        # new[d, v] = Σ_u [nhT[d, u] = v] · load[d, u] — the scatter over v
+        # as a broadcast-compare-add sweep over source columns (the same
+        # dynamic-column idiom as the fused APSP kernel).
+        def body(u, acc):
+            idx = nhT[:, u]                                     # [d]
+            lu = load[:, u]                                     # [d]
+            return acc + jnp.where(viota == idx[:, None],
+                                   lu[:, None], 0.0)
+
+        return jax.lax.fori_loop(0, n, body,
+                                 jnp.zeros((n, n), jnp.float32))
+
+    def hop(_, state):
+        load, total = state
+        total = total + load
+        return jnp.where(offdiag, propagate(load), 0.0), total
+
+    _, total = jax.lax.fori_loop(
+        0, max_hops, hop, (load0, jnp.zeros((n, n), jnp.float32)))
+    w_ref[0] = total
+
+    # flow[u, v] = Σ_d [nhT[d, u] = v] · W[d, u]
+    def f_body(u, acc):
+        mask = viota == nhT[:, u][:, None]                      # [d, v]
+        row = jnp.sum(jnp.where(mask, total[:, u][:, None], 0.0),
+                      axis=0)                                   # [v]
+        return acc + jnp.where(diota == u, row[None, :], 0.0)
+
+    f_ref[0] = jax.lax.fori_loop(0, n, f_body,
+                                 jnp.zeros((n, n), jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops", "interpret"))
+def load_prop_pallas(next_hop: jax.Array, load0: jax.Array, max_hops: int,
+                     *, interpret: bool = True
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Batched fused load propagation. next_hop: [B, n, n] int32 src-major
+    (padding rows/cols must be self-loops); load0: [B, n, n] f32 dest-major
+    with zero padding. Returns (W dest-major, directed flow)."""
+    B, n, _ = next_hop.shape
+    nhT = next_hop.swapaxes(-1, -2).astype(jnp.int32)
+    kernel = functools.partial(_load_prop_kernel, max_hops)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, n, n), lambda b: (b, 0, 0)),
+                  pl.BlockSpec((1, n, n), lambda b: (b, 0, 0))],
+        out_specs=[pl.BlockSpec((1, n, n), lambda b: (b, 0, 0)),
+                   pl.BlockSpec((1, n, n), lambda b: (b, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, n, n), jnp.float32),
+                   jax.ShapeDtypeStruct((B, n, n), jnp.float32)],
+        interpret=interpret,
+    )(nhT, load0.astype(jnp.float32))

@@ -85,6 +85,76 @@ def flow_accumulate(flow: jax.Array, cur: jax.Array, nxt: jax.Array,
     return out[0] if squeeze else out
 
 
+def load_propagate(next_hop: jax.Array, load0: jax.Array,
+                   max_hops: int | None = None, adaptive: bool = True,
+                   backend: str | None = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Accumulated per-destination load + directed edge flows behind one
+    backend-aware entry (the shared primitive of ``edge_flows``,
+    ``edge_flows_load`` and the fused genome pipeline's proxies).
+
+    next_hop: [n, n] or [B, n, n] routing table (src-major: next_hop[u, d]
+    is u's next hop toward d; unreachable pairs self-loop). load0: matching
+    dest-major initial load (load0[d, u] = traffic residing at u destined
+    for d; the diagonal is masked off defensively). Returns
+
+        W[d, u]    = Σ_j L_j[d, u]  (per-hop loads summed — every unit of
+                     traffic counted once per hop departure from u), and
+        flow[u, v] = Σ_d [next_hop[u, d] = v] · W[d, u]  (directed edge
+                     flows; traffic-weighted latency is Σ W · step_cost of
+                     the chosen hop, see ``dse.genomes._eval_proxies``).
+
+    ``backend`` is one of ``load_prop.LOAD_PROP_BACKENDS``; ``None``
+    auto-selects via ``load_prop.default_backend()`` — the fused Pallas
+    kernel on TPU, the pure-XLA loop on CPU/GPU. ``adaptive`` (XLA backend
+    only) swaps the fixed-length scan for a while_loop that stops at the
+    batch's routed diameter; the fused kernel always runs the shape-stable
+    ``max_hops`` bound (extra steps propagate zeros — exact no-ops), which
+    costs nothing once the state lives in VMEM. The env-driven default is
+    resolved outside this function's own jit boundary, so direct callers
+    pick up a flipped ``REPRO_LOAD_PROP_BACKEND`` on their next call —
+    but *jitted* callers (``edge_flows``, the genome pipelines) resolve it
+    at their trace time and keep the backend baked into their compiled
+    programs; set the variable before first use.
+    """
+    from .load_prop import default_backend
+
+    if backend is None:
+        backend = default_backend()
+    return _load_propagate(next_hop, load0, max_hops, adaptive, backend)
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops", "adaptive",
+                                             "backend"))
+def _load_propagate(next_hop: jax.Array, load0: jax.Array,
+                    max_hops: int | None, adaptive: bool, backend: str
+                    ) -> tuple[jax.Array, jax.Array]:
+    from .load_prop import load_prop_pallas, load_prop_xla
+
+    squeeze = next_hop.ndim == 2
+    if squeeze:
+        next_hop, load0 = next_hop[None], load0[None]
+    B, n, _ = next_hop.shape
+    if max_hops is None:
+        max_hops = max(n - 1, 1)
+    if backend == "xla":
+        w, flow = load_prop_xla(next_hop, load0.astype(jnp.float32),
+                                max_hops, adaptive)
+    else:
+        n_lane = _round_up(n, 128)
+        nh_p = jnp.tile(jnp.arange(n_lane, dtype=jnp.int32)[:, None],
+                        (B, 1, n_lane))
+        nh_p = nh_p.at[:, :n, :n].set(next_hop.astype(jnp.int32))
+        l0_p = jnp.zeros((B, n_lane, n_lane), jnp.float32)
+        l0_p = l0_p.at[:, :n, :n].set(load0.astype(jnp.float32))
+        w, flow = load_prop_pallas(nh_p, l0_p, max_hops,
+                                   interpret=backend == "pallas_interpret")
+        w, flow = w[:, :n, :n], flow[:, :n, :n]
+    if squeeze:
+        return w[0], flow[0]
+    return w, flow
+
+
 def apsp(d: jax.Array, n_iters: int | None = None,
          backend: str | None = None) -> jax.Array:
     """All-pairs path costs via min-plus squaring behind one backend-aware
@@ -138,5 +208,5 @@ def _apsp(d: jax.Array, n_iters: int | None, backend: str) -> jax.Array:
     return out[0] if squeeze else out
 
 
-__all__ = ["minplus_matmul", "flow_accumulate", "apsp", "minplus_ref",
-           "flow_accumulate_ref", "BIG"]
+__all__ = ["minplus_matmul", "flow_accumulate", "apsp", "load_propagate",
+           "minplus_ref", "flow_accumulate_ref", "BIG"]

@@ -25,9 +25,9 @@ _LAZY = {
     "SimulatedAnnealing": "algorithms", "RandomSearch": "algorithms",
     "ALGORITHMS": "algorithms", "nondominated_ranks": "algorithms",
     "crowding_distance": "algorithms",
-    "OptRunner": "runner", "OptResult": "runner", "make_space": "runner",
-    "make_optimizer": "runner", "save_checkpoint": "runner",
-    "load_checkpoint": "runner",
+    "OptRunner": "runner", "OptResult": "runner", "AsyncStepper": "runner",
+    "make_space": "runner", "make_optimizer": "runner",
+    "save_checkpoint": "runner", "load_checkpoint": "runner",
 }
 
 __all__ = [

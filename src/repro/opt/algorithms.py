@@ -21,7 +21,8 @@ import numpy as np
 from ..core.reports import ReportArrays, report_arrays
 from ..core.structure_cache import GLOBAL_STRUCTURE_CACHE
 from ..dse.engine import DseEngine
-from .archive import ParetoArchive, staircase_front
+from ..dse.genomes import PendingGenomeEval
+from .archive import ParetoArchive
 from .operators import mutate_genes, tournament_select, uniform_crossover
 from .space import SearchSpace
 
@@ -154,19 +155,31 @@ class PopulationEvaluator:
                             interposer_area=cols[:, 1],
                             power=cols[:, 2], cost=cols[:, 3])
 
-    def __call__(self, genomes: np.ndarray) -> EvaluatedPopulation:
+    def dispatch(self, genomes: np.ndarray) -> "PendingPopulationEval":
+        """Start evaluating a population without blocking on the device.
+
+        On the device path the fused sharded program is dispatched and the
+        host returns immediately; ``PendingPopulationEval.result()``
+        materializes metrics, reports, and the constraint mask. The host
+        path has no asynchrony to exploit — it evaluates eagerly and wraps
+        the finished result, so callers can pipeline uniformly.
+        Evaluations are counted at dispatch time."""
         genomes = np.asarray(genomes, np.int64)
         if self._use_device_path():
-            res = self.engine.evaluate_genomes(self.space, genomes)
+            pending = self.engine.evaluate_genomes_async(self.space, genomes)
             self.n_evals += len(genomes)
-            reports = res.reports
-        else:
-            points = self.space.decode(genomes, start_index=self.n_evals)
-            self.n_evals += len(points)
-            res = self.engine.evaluate_points(
-                points, validate=self.validate, n_pad=self.space.max_nodes,
-                round_hops=True, keep_designs=True)
-            reports = self._reports_for(points)
+            return PendingPopulationEval(
+                lambda: self._finalize(genomes, pending.result(), None))
+        points = self.space.decode(genomes, start_index=self.n_evals)
+        self.n_evals += len(points)
+        res = self.engine.evaluate_points(
+            points, validate=self.validate, n_pad=self.space.max_nodes,
+            round_hops=True, keep_designs=True)
+        return PendingPopulationEval(
+            lambda: self._finalize(genomes, res, points))
+
+    def _finalize(self, genomes, res, points) -> EvaluatedPopulation:
+        reports = res.reports if points is None else self._reports_for(points)
         lat = np.asarray(res.latency, np.float64)
         thr = np.asarray(res.throughput, np.float64)
         feasible = (self.budgets.mask(reports)
@@ -174,6 +187,15 @@ class PopulationEvaluator:
         return EvaluatedPopulation(genomes=genomes, latency=lat,
                                    throughput=thr, feasible=feasible,
                                    reports=reports)
+
+    def __call__(self, genomes: np.ndarray) -> EvaluatedPopulation:
+        return self.dispatch(genomes).result()
+
+
+class PendingPopulationEval(PendingGenomeEval):
+    """In-flight population evaluation (the same memoized-finisher contract
+    as ``PendingGenomeEval``); ``result()`` blocks on the device, builds
+    the constraint mask, and is idempotent."""
 
 
 # ---------------------------------------------------------------------------
@@ -183,7 +205,15 @@ class PopulationEvaluator:
 def nondominated_ranks(latency: np.ndarray, throughput: np.ndarray,
                        feasible: np.ndarray) -> np.ndarray:
     """Constraint-dominated non-dominated sorting: rank 0 is the first front;
-    every infeasible point ranks after every feasible one."""
+    every infeasible point ranks after every feasible one.
+
+    Vectorized front peeling — one Python iteration per *front* (the
+    staircase scan is a cumulative max over the sort order, the duplicate
+    fold one broadcast comparison), so the merged-population sort stays off
+    the optimizer's critical path. Output is identical to the original
+    per-point scan (same staircase with tol=0, duplicates of a front member
+    join its rank, an all--inf-throughput remainder closes out together).
+    """
     P = len(latency)
     ranks = np.full(P, P, np.int64)
     lat = np.where(np.isfinite(latency), latency, np.inf)
@@ -192,8 +222,15 @@ def nondominated_ranks(latency: np.ndarray, throughput: np.ndarray,
     rank = 0
     while remaining.any():
         idx = np.nonzero(remaining)[0]
-        front = staircase_front(lat, thr, idx, tol=0.0)
-        if len(front) == 0:
+        order = idx[np.lexsort((-thr[idx], lat[idx]))]
+        t = thr[order]
+        # staircase with tol=0: keep strictly rising throughput. A skipped
+        # point never exceeds the running best, so the cumulative max over
+        # ALL previous equals the best over kept ones — the scan is exact.
+        prev_best = np.maximum.accumulate(
+            np.concatenate(([-np.inf], t[:-1])))
+        keep = t > prev_best
+        if not keep.any():
             # every remaining point has -inf throughput: no staircase, and
             # they are mutually incomparable here — close them out together
             ranks[idx] = rank
@@ -202,10 +239,9 @@ def nondominated_ranks(latency: np.ndarray, throughput: np.ndarray,
             continue
         # duplicates of a front member are non-dominated too: keep any point
         # equal in both objectives to a front member in the same rank
-        eq = np.zeros(len(idx), bool)
-        f_lat, f_thr = lat[front], thr[front]
-        for j, i in enumerate(idx):
-            eq[j] = bool(np.any((f_lat == lat[i]) & (f_thr == thr[i])))
+        f_lat, f_thr = lat[order[keep]], thr[order[keep]]
+        eq = np.any((lat[idx][:, None] == f_lat[None, :]) &
+                    (thr[idx][:, None] == f_thr[None, :]), axis=1)
         members = idx[eq]
         ranks[members] = rank
         remaining[members] = False
@@ -276,13 +312,30 @@ class OptimizerBase:
         self.generation = 0
 
     # -- checkpointing ------------------------------------------------------
-    def state(self) -> dict:
+    def state(self, meta: dict | None = None) -> dict:
+        """Serializable optimizer state. ``meta`` (from ``snapshot_meta``)
+        substitutes the RNG/eval-count/generation triple captured at an
+        earlier moment — the async driver snapshots it right after a
+        generation completes, then builds the checkpoint while the next
+        generation's device call is in flight (the archive and population
+        are only mutated by the deferred ingest that runs first, so the
+        resulting checkpoint is bit-identical to the synchronous one)."""
+        if meta is None:
+            meta = self.snapshot_meta()
         return {"algo": self.algo, "seed": self.seed,
-                "generation": self.generation,
-                "rng": _rng_state(self.rng),
-                "n_evals": self.evaluator.n_evals,
+                "generation": meta["generation"],
+                "rng": meta["rng"],
+                "n_evals": meta["n_evals"],
                 "archive": self.archive.to_dicts(),
                 **self._extra_state()}
+
+    def snapshot_meta(self) -> dict:
+        """The cheap, mutation-prone part of the state (RNG stream, eval
+        count, generation) — captured before the next generation's RNG
+        draws happen."""
+        return {"generation": self.generation,
+                "rng": _rng_state(self.rng),
+                "n_evals": self.evaluator.n_evals}
 
     def load_state(self, state: dict) -> None:
         if state.get("algo") != self.algo:
@@ -310,8 +363,25 @@ class OptimizerBase:
                      "total_chiplet_area": ev.reports.total_chiplet_area,
                      "power": ev.reports.power, "cost": ev.reports.cost})
 
-    def step(self) -> None:
+    def begin_step(self) -> np.ndarray:
+        """Produce the next population to evaluate. Every RNG draw that
+        precedes the evaluation happens here, in the same order as
+        ``step`` — the sync and async drivers therefore consume one
+        identical RNG stream."""
         raise NotImplementedError
+
+    def finish_step(self, ev: EvaluatedPopulation,
+                    ingest: bool = True) -> None:
+        """Fold an evaluated population back in (selection/acceptance —
+        including any post-evaluation RNG draws) and advance the
+        generation counter. With ``ingest=False`` the archive update is the
+        caller's responsibility (the async driver defers it into the window
+        where the next generation's device call is in flight; the archive
+        feeds no selection decision, so ordering it later is exact)."""
+        raise NotImplementedError
+
+    def step(self) -> None:
+        self.finish_step(self.evaluator(self.begin_step()))
 
 
 class EvolutionarySearch(OptimizerBase):
@@ -343,13 +413,9 @@ class EvolutionarySearch(OptimizerBase):
         self.crossover_prob = state["crossover_prob"]
         self.pop = _pop_from_state(state.get("pop"))
 
-    def step(self) -> None:
+    def begin_step(self) -> np.ndarray:
         if self.pop is None:
-            genomes = self.space.sample(self.rng, self.pop_size)
-            self.pop = self.evaluator(genomes)
-            self._ingest(self.pop)
-            self.generation += 1
-            return
+            return self.space.sample(self.rng, self.pop_size)
         pop = self.pop
         ranks = nondominated_ranks(pop.latency, pop.throughput, pop.feasible)
         crowd = crowding_distance(pop.latency, pop.throughput, ranks)
@@ -359,14 +425,23 @@ class EvolutionarySearch(OptimizerBase):
         cross = self.rng.random(self.pop_size) < self.crossover_prob
         children = np.where(cross[:, None],
                             uniform_crossover(pa, pb, self.rng), pa)
-        children = self.space.repair(
+        return self.space.repair(
             mutate_genes(children, self.space.cardinalities,
                          self.mutation_rate, self.rng))
-        child_ev = self.evaluator(children)
-        self._ingest(child_ev)
+
+    def finish_step(self, ev: EvaluatedPopulation,
+                    ingest: bool = True) -> None:
+        if self.pop is None:
+            self.pop = ev
+            if ingest:
+                self._ingest(ev)
+            self.generation += 1
+            return
+        if ingest:
+            self._ingest(ev)
         # (mu + lambda) environmental selection over parents + children
         merged = _pop_apply(lambda a, b: np.concatenate([a, b]),
-                            pop, child_ev)
+                            self.pop, ev)
         m_ranks = nondominated_ranks(merged.latency, merged.throughput,
                                      merged.feasible)
         m_crowd = crowding_distance(merged.latency, merged.throughput, m_ranks)
@@ -423,25 +498,31 @@ class SimulatedAnnealing(OptimizerBase):
         self.energies = (None if state["energies"] is None
                          else np.asarray(state["energies"], np.float64))
 
-    def step(self) -> None:
+    def begin_step(self) -> np.ndarray:
         if self.chains is None:
             self.chains = self.space.sample(self.rng, self.n_chains)
-            ev = self.evaluator(self.chains)
+            return self.chains
+        self._proposals = self.space.repair(
+            mutate_genes(self.chains, self.space.cardinalities,
+                         self.mutation_rate, self.rng))
+        return self._proposals
+
+    def finish_step(self, ev: EvaluatedPopulation,
+                    ingest: bool = True) -> None:
+        if ingest:
             self._ingest(ev)
+        if self.energies is None:
             self.energies = self._energy(ev)
             self.generation += 1
             return
-        proposals = self.space.repair(
-            mutate_genes(self.chains, self.space.cardinalities,
-                         self.mutation_rate, self.rng))
-        ev = self.evaluator(proposals)
-        self._ingest(ev)
+        # the accept gate draws AFTER the evaluation — still one shared RNG
+        # stream, because finish_step always runs before the next begin_step
         energy = self._energy(ev)
         d = energy - self.energies
         temp = max(self.temperature, 1e-12)
         accept = (d < 0) | (self.rng.random(self.n_chains)
                             < np.exp(-np.clip(d, 0, 700) / temp))
-        self.chains = np.where(accept[:, None], proposals, self.chains)
+        self.chains = np.where(accept[:, None], self._proposals, self.chains)
         self.energies = np.where(accept, energy, self.energies)
         self.generation += 1
 
@@ -462,9 +543,13 @@ class RandomSearch(OptimizerBase):
     def _load_extra_state(self, state: dict) -> None:
         self.batch_size = state["batch_size"]
 
-    def step(self) -> None:
-        ev = self.evaluator(self.space.sample(self.rng, self.batch_size))
-        self._ingest(ev)
+    def begin_step(self) -> np.ndarray:
+        return self.space.sample(self.rng, self.batch_size)
+
+    def finish_step(self, ev: EvaluatedPopulation,
+                    ingest: bool = True) -> None:
+        if ingest:
+            self._ingest(ev)
         self.generation += 1
 
 

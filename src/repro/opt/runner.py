@@ -50,12 +50,81 @@ class OptResult:
         return rows
 
 
-def save_checkpoint(path: str, optimizer: OptimizerBase) -> None:
-    """Atomic write so a kill mid-dump never corrupts the resume point."""
+def save_checkpoint(path: str, optimizer: OptimizerBase,
+                    meta: dict | None = None) -> None:
+    """Atomic write so a kill mid-dump never corrupts the resume point.
+    ``meta`` substitutes a snapshot of the RNG/eval-count/generation triple
+    captured earlier (the async driver's deferred checkpointing)."""
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
-        json.dump(optimizer.state(), f)
+        json.dump(optimizer.state(meta), f)
     os.replace(tmp, path)
+
+
+class AsyncStepper:
+    """Double-buffered generation pipeline over ``OptimizerBase``'s
+    begin/finish split (the async driver of ISSUE 5).
+
+    Each ``step()`` completes exactly one generation, but in pipelined
+    order: first the *previous* generation's deferred work (archive ingest,
+    hypervolume, checkpoint write) runs while the current generation's
+    device call — dispatched at the end of the previous ``step()`` with
+    ``PopulationEvaluator.dispatch`` — is still in flight; only then does
+    the driver block on the device, fold the results in, and dispatch the
+    next generation. The RNG stream, archive contents, per-generation
+    checkpoints, and eval counts are bit-identical to synchronous stepping
+    (asserted in tests/test_opt.py): every RNG draw happens in the same
+    order, the deferred ingest feeds no selection decision, and checkpoints
+    are built from a state snapshot taken before the next generation's
+    draws.
+
+    ``on_generation(optimizer, meta, ev)`` runs inside the overlap window,
+    after the deferred ingest — the place for checkpoint writes and
+    progress reporting.
+    """
+
+    def __init__(self, optimizer: OptimizerBase, generations: int,
+                 on_generation=None):
+        self.optimizer = optimizer
+        self.generations = generations
+        self.on_generation = on_generation
+        self._pending = None
+        self._deferred = None
+
+    def _flush_deferred(self) -> None:
+        if self._deferred is None:
+            return
+        ev, meta = self._deferred
+        self._deferred = None
+        self.optimizer._ingest(ev)
+        if self.on_generation is not None:
+            self.on_generation(self.optimizer, meta, ev)
+
+    def step(self) -> bool:
+        """Complete one generation; returns False once the target count is
+        reached (after flushing the last generation's deferred work)."""
+        opt = self.optimizer
+        # Deferred work of generation g-1 executes while generation g's
+        # dispatched evaluation runs on the device.
+        self._flush_deferred()
+        if opt.generation >= self.generations:
+            return False
+        if self._pending is None:
+            self._pending = opt.evaluator.dispatch(opt.begin_step())
+        ev = self._pending.result()
+        self._pending = None
+        opt.finish_step(ev, ingest=False)
+        meta = opt.snapshot_meta()
+        if opt.generation < self.generations:
+            # dispatch generation g+1 before generation g's bookkeeping:
+            # the device computes through the entire deferred window
+            self._pending = opt.evaluator.dispatch(opt.begin_step())
+        self._deferred = (ev, meta)
+        return True
+
+    def run(self) -> None:
+        while self.step():
+            pass
 
 
 def load_checkpoint(path: str) -> dict:
@@ -65,39 +134,60 @@ def load_checkpoint(path: str) -> dict:
 
 class OptRunner:
     """Drives an optimizer for N generations with per-generation
-    checkpointing and optional hypervolume tracking."""
+    checkpointing and optional hypervolume tracking.
+
+    ``async_pipeline=True`` swaps the stepping loop for the double-buffered
+    ``AsyncStepper``: generation g+1's device evaluation is dispatched
+    before generation g's archive ingest, hypervolume bookkeeping, and
+    checkpoint write, which then overlap the in-flight device call. The RNG
+    stream, archive, and every per-generation checkpoint stay bit-identical
+    to the synchronous loop, so the two modes are freely interchangeable
+    (even across a resume)."""
 
     def __init__(self, optimizer: OptimizerBase,
                  checkpoint_path: str | None = None,
                  ref_latency: float | None = None,
-                 ref_throughput: float = 0.0):
+                 ref_throughput: float = 0.0,
+                 async_pipeline: bool = False):
         self.optimizer = optimizer
         self.checkpoint_path = checkpoint_path
         self.ref_latency = ref_latency
         self.ref_throughput = ref_throughput
+        self.async_pipeline = async_pipeline
         if checkpoint_path and os.path.exists(checkpoint_path):
             self.optimizer.load_state(load_checkpoint(checkpoint_path))
+
+    def _after_generation(self, opt, meta, history, generations,
+                          progress) -> None:
+        if self.checkpoint_path:
+            save_checkpoint(self.checkpoint_path, opt, meta)
+        hv = None
+        if self.ref_latency is not None:
+            hv = opt.archive.hypervolume(self.ref_latency,
+                                         self.ref_throughput)
+            history.append(hv)
+        if progress:
+            msg = (f"[opt] gen {meta['generation']}/{generations} "
+                   f"evals={meta['n_evals']} "
+                   f"archive={len(opt.archive)}")
+            if hv is not None:
+                msg += f" hv={hv:.4g}"
+            print(msg)
 
     def run(self, generations: int, progress: bool = False) -> OptResult:
         opt = self.optimizer
         history = []
         history_start = opt.generation
-        while opt.generation < generations:
-            opt.step()
-            if self.checkpoint_path:
-                save_checkpoint(self.checkpoint_path, opt)
-            hv = None
-            if self.ref_latency is not None:
-                hv = opt.archive.hypervolume(self.ref_latency,
-                                             self.ref_throughput)
-                history.append(hv)
-            if progress:
-                msg = (f"[opt] gen {opt.generation}/{generations} "
-                       f"evals={opt.evaluator.n_evals} "
-                       f"archive={len(opt.archive)}")
-                if hv is not None:
-                    msg += f" hv={hv:.4g}"
-                print(msg)
+        if self.async_pipeline:
+            AsyncStepper(
+                opt, generations,
+                on_generation=lambda o, meta, ev: self._after_generation(
+                    o, meta, history, generations, progress)).run()
+        else:
+            while opt.generation < generations:
+                opt.step()
+                self._after_generation(opt, opt.snapshot_meta(), history,
+                                       generations, progress)
         return OptResult(archive=opt.archive, n_evals=opt.evaluator.n_evals,
                          generations=opt.generation, history=history,
                          history_start=history_start)
@@ -149,6 +239,11 @@ def main(argv=None) -> int:
                    help="force the classic host evaluation path "
                         "(decode -> DesignPoint -> structure cache) instead "
                         "of the fused device genome pipeline")
+    p.add_argument("--async", dest="async_pipeline", action="store_true",
+                   help="double-buffered generation pipeline: dispatch the "
+                        "next generation's device call before archiving / "
+                        "checkpointing the current one (bit-identical "
+                        "results, lower wall-clock)")
     p.add_argument("--checkpoint", type=str, default=None,
                    help="resume point, written after every generation")
     p.add_argument("--out", type=str, default=None,
@@ -177,7 +272,8 @@ def main(argv=None) -> int:
                else {"pop_size": args.pop_size})
     optimizer = make_optimizer(args.algo, space, evaluator, seed=args.seed,
                                **size_kw)
-    runner = OptRunner(optimizer, checkpoint_path=args.checkpoint)
+    runner = OptRunner(optimizer, checkpoint_path=args.checkpoint,
+                       async_pipeline=args.async_pipeline)
     result = runner.run(args.generations, progress=not args.quiet)
 
     rows = result.to_rows(space)

@@ -172,8 +172,10 @@ class AdjacencySpace(SearchSpace):
         self.genome_length = len(self.pair_u)
         self.cardinalities = np.full(self.genome_length, 2, np.int64)
         self.max_nodes = n
-        # Incidence matrix [G, n]: degrees of a population are one matmul.
-        self._incidence = np.zeros((self.genome_length, n), np.int64)
+        # Incidence matrix [G, n]: degrees of a population are one matmul
+        # (kept in float32 — a BLAS sgemm beats the int64 path ~20x, and
+        # degree counts ≤ n-1 are exactly representable).
+        self._incidence = np.zeros((self.genome_length, n), np.float32)
         self._incidence[np.arange(self.genome_length), self.pair_u] = 1
         self._incidence[np.arange(self.genome_length), self.pair_v] = 1
         if self.init_density is None:
@@ -187,7 +189,7 @@ class AdjacencySpace(SearchSpace):
     def degrees(self, genomes: np.ndarray) -> np.ndarray:
         """Vertex degrees [P, n] of a population of bit genomes."""
         bits = np.asarray(genomes, np.int64) % 2
-        return bits @ self._incidence
+        return (bits.astype(np.float32) @ self._incidence).astype(np.int64)
 
     def repair(self, genomes: np.ndarray) -> np.ndarray:
         """Vectorized over the whole population: the degree-cap pass is one
@@ -206,45 +208,94 @@ class AdjacencySpace(SearchSpace):
         deg = self.degrees(bits)
 
         # 1. degree cap, dropping from the highest pair index down. Dropping
-        # only ever *decrements* degrees, so a vertex not over the cap at the
-        # start never goes over later: the scan can skip every column whose
-        # endpoints start under the cap in all genomes (steady-state
-        # optimizer populations are mostly valid already).
+        # only ever *decrements* degrees, so a vertex not over the cap at
+        # the start never goes over later. The scan is loop-carried (each
+        # drop changes the degrees later columns see), so it runs as a
+        # jitted lax.fori_loop over columns — integer ops, bit-identical to
+        # the Python scan, and off the optimizer's critical path even when
+        # crossover floods the population with over-cap children.
         over = deg > maxd
         if over.any():
-            cand = (bits.astype(bool) &
-                    (over[:, pu] | over[:, pv])).any(axis=0)
-            over_any = True
-            for g in np.nonzero(cand)[0][::-1]:
-                if not over_any:
-                    break
-                drop = (bits[:, g] == 1) & ((deg[:, pu[g]] > maxd) |
-                                            (deg[:, pv[g]] > maxd))
-                if not drop.any():
-                    continue
-                bits[drop, g] = 0
-                deg[drop, pu[g]] -= 1
-                deg[drop, pv[g]] -= 1
-                over_any = bool((deg > maxd).any())
+            # Degrees only ever decrease, so the scan can touch exactly the
+            # columns that are set somewhere AND incident to an initially
+            # over-cap vertex. The candidate list (descending, padded to a
+            # power-of-two bucket with a no-op sentinel so the jit cache
+            # stays small) drives the compiled loop.
+            from ..dse.genomes import node_bucket
 
-        # 2. connectivity — only for genomes that need it. A vectorized
-        # min-label propagation flags disconnected rows; already-connected
-        # genomes (the steady-state majority after variation) skip the
-        # union-find scan entirely.
-        adj = np.zeros((P, n, n), bool)
-        adj[:, pu, pv] = bits.astype(bool)
-        adj |= adj.transpose(0, 2, 1)
-        labels = np.tile(np.arange(n), (P, 1))
+            cand = ((bits == 1) &
+                    (over[:, pu] | over[:, pv])).any(axis=0)
+            idx = np.nonzero(cand)[0][::-1].astype(np.int32)
+            bucket = node_bucket(len(idx))
+            idx = np.concatenate(
+                [idx, np.full(bucket - len(idx), G, np.int32)])
+            bt = np.concatenate(
+                [np.ascontiguousarray(bits.T, np.int32),
+                 np.zeros((1, P), np.int32)])        # sentinel row g = G
+            b2, d2 = self._degree_cap_fn()(
+                bt, np.ascontiguousarray(deg.T, np.int32),
+                np.asarray(idx, np.int32))
+            bits = np.asarray(b2, np.int64)[:G].T.copy()
+            deg = np.asarray(d2, np.int64).T.copy()
+
+        # 2. connectivity — only for genomes that need it. Connected ⟺
+        # every vertex reachable from vertex 0, so the flag is a batched
+        # BFS frontier expansion from 0 (one small f32 vec-mat product per
+        # hop) instead of a full [P, n, n] min-label propagation;
+        # already-connected genomes (the steady-state majority after
+        # variation) skip the union-find scan entirely.
+        adjf = np.zeros((P, n, n), np.float32)
+        adjf[:, pu, pv] = bits.astype(np.float32)
+        adjf += adjf.transpose(0, 2, 1)
+        reach = np.zeros((P, n), np.float32)
+        reach[:, 0] = 1.0
         while True:
-            nbr = np.where(adj, labels[:, None, :], n).min(axis=2)
-            new = np.minimum(labels, nbr)
-            if np.array_equal(new, labels):
+            new = reach + np.einsum("pu,puv->pv", reach, adjf)
+            new = np.minimum(new, 1.0)
+            if np.array_equal(new, reach):
                 break
-            labels = new
-        bad = np.nonzero(labels.max(axis=1) > 0)[0]
+            reach = new
+        bad = np.nonzero(reach.min(axis=1) == 0)[0]
         if len(bad):
             bits[bad] = self._connect_batch(bits[bad], deg[bad])
         return bits
+
+    def _degree_cap_fn(self):
+        """Jit-compiled descending degree-cap scan (built lazily, cached on
+        the space): one XLA loop step per *candidate* column, with [P]-wide
+        integer updates. The drop predicate makes sentinel/settled columns
+        no-ops, so the packed scan is bit-identical to the full sequential
+        reference."""
+        fn = getattr(self, "_cap_fn", None)
+        if fn is None:
+            import jax
+            import jax.numpy as jnp
+
+            # endpoint tables extended with a sentinel entry for g = G
+            pu = jnp.asarray(np.concatenate([self.pair_u, [0]]), jnp.int32)
+            pv = jnp.asarray(np.concatenate([self.pair_v, [0]]), jnp.int32)
+            maxd = self.max_degree
+
+            @jax.jit
+            def cap(bits_t, deg_t, idx):
+                # gene-major layout [G+1, P] / [n, P]: each column update
+                # is one contiguous row (a cheap dynamic-slice store)
+                def body(i, state):
+                    b, d = state
+                    g = idx[i]
+                    u, v = pu[g], pv[g]
+                    drop = ((b[g] == 1) & ((d[u] > maxd) | (d[v] > maxd))
+                            ).astype(jnp.int32)
+                    b = b.at[g].add(-drop)
+                    d = d.at[u].add(-drop)
+                    d = d.at[v].add(-drop)
+                    return b, d
+
+                return jax.lax.fori_loop(0, idx.shape[0], body,
+                                         (bits_t, deg_t))
+
+            fn = self._cap_fn = cap
+        return fn
 
     def _connect_batch(self, bits: np.ndarray, deg: np.ndarray) -> np.ndarray:
         """Connectivity repair for a (sub)population of degree-capped

@@ -328,3 +328,38 @@ def test_population_bucketing_is_stable():
     assert bucket_population(17) == 32
     assert bucket_population(24) == 32
     assert bucket_population(10, multiple=3) == 18
+
+
+def test_node_bucketing_is_stable():
+    from repro.dse.genomes import node_bucket
+    assert node_bucket(2) == 8
+    assert node_bucket(8) == 8
+    assert node_bucket(9) == 16
+    assert node_bucket(12) == 16
+    assert node_bucket(16) == 16
+    assert node_bucket(17) == 32
+    assert node_bucket(64) == 64
+
+
+def test_parametric_spaces_share_one_compile_across_node_counts():
+    """Satellite (ISSUE 5): heterogeneous-n parametric spaces pad to a
+    shared node bucket — evaluating spaces with different max node counts
+    must reuse ONE compiled program instead of compiling per exact n."""
+    import jax
+    from repro.dse.genomes import COMPILE_COUNTS, reset_compile_counts
+
+    jax.clear_caches()
+    reset_compile_counts()
+    engine = DseEngine()
+    rng = np.random.default_rng(0)
+    # max_nodes 9 and 12 -> both bucket to n=16
+    for counts in ((9,), (9, 12)):
+        space = ParametricSpace(topologies=("mesh", "torus"),
+                                chiplet_counts=counts)
+        genomes = space.repair(rng.integers(0, 4, (8, 4)))
+        res = engine.evaluate_genomes(space, genomes)
+        assert np.isfinite(res.latency).all()
+    parametric_keys = {k: v for k, v in COMPILE_COUNTS.items()
+                       if k[0] == "parametric"}
+    assert len(parametric_keys) == 1, parametric_keys
+    assert all(v == 1 for v in parametric_keys.values()), parametric_keys

@@ -1,0 +1,137 @@
+"""The shared load-propagation primitive (ISSUE 5): Pallas kernel vs XLA
+fallback vs the independent pair-walk oracle, backend dispatch, and the
+hop-loop scaffolding shared by the fixed-length and adaptive variants."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.load_prop import LOAD_PROP_BACKENDS, default_backend
+from repro.kernels.ops import load_propagate
+
+
+def _random_table(n: int, rng: np.random.Generator):
+    """Connected random graph -> (next_hop table, traffic) pair."""
+    from repro.routing.device import hops_next_hop_batch
+
+    adj = np.zeros((n, n), bool)
+    perm = rng.permutation(n)
+    for i in range(1, n):
+        j = perm[rng.integers(0, i)]
+        adj[perm[i], j] = adj[j, perm[i]] = True
+    for _ in range(2 * n):
+        u, v = rng.integers(0, n, 2)
+        if u != v:
+            adj[u, v] = adj[v, u] = True
+    nh = np.asarray(hops_next_hop_batch(jnp.asarray(adj[None])))[0]
+    t = rng.random((n, n)).astype(np.float32)
+    np.fill_diagonal(t, 0.0)
+    return nh, t
+
+
+def _load0(nh: np.ndarray, t: np.ndarray) -> np.ndarray:
+    l0 = t.T.copy()
+    np.fill_diagonal(l0, 0.0)
+    return l0.astype(np.float32)
+
+
+def test_xla_flow_matches_pair_walk_oracle():
+    """The primitive's flow must equal the independent scatter pair walk."""
+    from repro.core.throughput import edge_flows
+
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        n = int(rng.integers(5, 16))
+        nh, t = _random_table(n, rng)
+        _, flow = load_propagate(jnp.asarray(nh), jnp.asarray(_load0(nh, t)),
+                                 backend="xla")
+        walk = np.asarray(edge_flows(jnp.asarray(nh), jnp.asarray(t),
+                                     use_kernel=True))
+        np.testing.assert_allclose(np.asarray(flow), walk,
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("adaptive", [True, False])
+def test_pallas_interpret_matches_xla(adaptive):
+    rng = np.random.default_rng(1)
+    for trial in range(2):
+        n = int(rng.integers(5, 12))
+        nh, t = _random_table(n, rng)
+        l0 = jnp.asarray(_load0(nh, t))
+        w_x, f_x = load_propagate(jnp.asarray(nh), l0, backend="xla",
+                                  adaptive=adaptive)
+        w_p, f_p = load_propagate(jnp.asarray(nh), l0,
+                                  backend="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(w_p), np.asarray(w_x),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(f_p), np.asarray(f_x),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_pallas_interpret_matches_xla_batched_and_unreachable():
+    """Batched inputs, including a disconnected design whose unreachable
+    pairs accumulate diagonal load for the full hop bound."""
+    rng = np.random.default_rng(2)
+    n = 8
+    nh1, t1 = _random_table(n, rng)
+    nh2 = np.tile(np.arange(n, dtype=nh1.dtype)[:, None], (1, n))  # isolated
+    t2 = rng.random((n, n)).astype(np.float32)
+    np.fill_diagonal(t2, 0.0)
+    nhs = jnp.asarray(np.stack([nh1, nh2]))
+    l0s = jnp.asarray(np.stack([_load0(nh1, t1), _load0(nh2, t2)]))
+    w_x, f_x = load_propagate(nhs, l0s, backend="xla")
+    w_p, f_p = load_propagate(nhs, l0s, backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(w_p), np.asarray(w_x),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(f_p), np.asarray(f_x),
+                               rtol=1e-5, atol=1e-6)
+    # the isolated design's traffic never drains: every unit pays max_hops
+    # self-hops, and the flow sits on the diagonal
+    diag = np.diag(np.asarray(f_p)[1])
+    np.testing.assert_allclose(diag, t2.sum(axis=1) * (n - 1), rtol=1e-5)
+
+
+def test_adaptive_equals_fixed_on_connected_designs():
+    rng = np.random.default_rng(3)
+    n = 12
+    nh, t = _random_table(n, rng)
+    l0 = jnp.asarray(_load0(nh, t))
+    w_a, f_a = load_propagate(jnp.asarray(nh), l0, adaptive=True,
+                              backend="xla")
+    w_f, f_f = load_propagate(jnp.asarray(nh), l0, adaptive=False,
+                              backend="xla")
+    np.testing.assert_array_equal(np.asarray(w_a), np.asarray(w_f))
+    np.testing.assert_array_equal(np.asarray(f_a), np.asarray(f_f))
+
+
+def test_default_backend_dispatch(monkeypatch):
+    monkeypatch.delenv("REPRO_LOAD_PROP_BACKEND", raising=False)
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    expected = "pallas" if jax.default_backend() == "tpu" else "xla"
+    assert default_backend() == expected
+    monkeypatch.setenv("REPRO_LOAD_PROP_BACKEND", "pallas_interpret")
+    assert default_backend() == "pallas_interpret"
+    monkeypatch.setenv("REPRO_LOAD_PROP_BACKEND", "bogus")
+    with pytest.raises(ValueError, match="REPRO_LOAD_PROP_BACKEND"):
+        default_backend()
+    monkeypatch.delenv("REPRO_LOAD_PROP_BACKEND")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert default_backend() == "pallas"
+    assert set(LOAD_PROP_BACKENDS) == {"pallas", "pallas_interpret", "xla"}
+
+
+def test_edge_flows_default_path_uses_primitive():
+    """edge_flows (default) and edge_flows_load are the same primitive now;
+    both must still match the scatter pair walk."""
+    from repro.core.throughput import edge_flows, edge_flows_load
+
+    rng = np.random.default_rng(4)
+    n = 10
+    nh, t = _random_table(n, rng)
+    f_def = np.asarray(edge_flows(jnp.asarray(nh), jnp.asarray(t)))
+    f_load = np.asarray(edge_flows_load(jnp.asarray(nh), jnp.asarray(t)))
+    f_walk = np.asarray(edge_flows(jnp.asarray(nh), jnp.asarray(t),
+                                   use_kernel=True))
+    np.testing.assert_allclose(f_def, f_walk, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(f_load, f_walk, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,140 @@
+"""Sharded genome evaluation (ISSUE 5): population/shard padding must never
+perturb real-row metrics, and the shard_map path must reproduce the
+single-device path on a forced multi-device CPU.
+
+The multi-device half runs in a subprocess: ``XLA_FLAGS=
+--xla_force_host_platform_device_count=4`` must be set before jax
+initializes, which cannot happen inside an already-imported test process.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.dse import DseEngine
+from repro.opt import AdjacencySpace, ParametricSpace
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# padding rows never perturb real rows (single device, varying buckets)
+# ---------------------------------------------------------------------------
+
+def _eval_rows(engine, space, genomes):
+    res = engine.evaluate_genomes(space, genomes)
+    return np.stack([res.latency, res.throughput])
+
+
+def test_population_bucket_padding_is_inert():
+    """Evaluating a prefix of a population (different pad bucket) must give
+    the same metrics for the shared rows."""
+    space = AdjacencySpace(n_chiplets=12, max_degree=4)
+    engine = DseEngine()
+    genomes = space.sample(np.random.default_rng(0), 17)   # bucket 32
+    full = _eval_rows(engine, space, genomes)
+    for k in (1, 7, 8, 9, 16):                             # buckets 8..16
+        part = _eval_rows(engine, space, genomes[:k])
+        np.testing.assert_allclose(part, full[:, :k], rtol=1e-6, atol=1e-7)
+
+
+def test_shard_multiple_bucket_padding_is_inert():
+    """bucket_population with a device-count multiple only adds padding
+    rows; metrics of real rows must not move."""
+    from repro.dse.genomes import bucket_population
+
+    space = AdjacencySpace(n_chiplets=10, max_degree=4)
+    engine = DseEngine()
+    genomes = space.sample(np.random.default_rng(1), 6)
+    base = _eval_rows(engine, space, genomes)
+    # emulate shard-boundary padding by explicitly repeating the last row
+    # out to larger (device-multiple) buckets, as the pipeline does
+    for mult in (3, 4, 5):
+        bp = bucket_population(len(genomes), mult)
+        assert bp % mult == 0
+        padded = np.concatenate(
+            [genomes, np.repeat(genomes[-1:], bp - len(genomes), axis=0)])
+        got = _eval_rows(engine, space, padded)
+        np.testing.assert_allclose(got[:, :len(genomes)], base,
+                                   rtol=1e-6, atol=1e-7)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(0, 10_000), st.integers(1, 13))
+    def test_padding_property_prefix_eval_is_stable(seed, k):
+        """Property (satellite): across random populations and prefix
+        lengths (crossing the 8/16 bucket boundaries), population-bucket
+        padding rows never perturb real-row metrics."""
+        space = AdjacencySpace(n_chiplets=9, max_degree=3)
+        engine = DseEngine()
+        genomes = space.sample(np.random.default_rng(seed), 13)
+        full = _eval_rows(engine, space, genomes)
+        part = _eval_rows(engine, space, genomes[:k])
+        np.testing.assert_allclose(part, full[:, :k], rtol=1e-6, atol=1e-7)
+except ImportError:  # pragma: no cover - hypothesis is a test extra
+    pass
+
+
+# ---------------------------------------------------------------------------
+# forced multi-device: sharded == single-device (subprocess)
+# ---------------------------------------------------------------------------
+
+_WORKER = r"""
+import json, os
+import numpy as np
+import jax
+from repro.dse import DseEngine
+from repro.opt import AdjacencySpace, ParametricSpace
+from repro.utils.jaxcompat import make_auto_mesh
+
+assert len(jax.devices()) == 4, jax.devices()
+out = {}
+
+space = AdjacencySpace(n_chiplets=12, max_degree=4)
+genomes = space.sample(np.random.default_rng(0), 10)
+multi = DseEngine()                                   # 4-device mesh
+single = DseEngine(mesh=make_auto_mesh((1,), ("data",),
+                                       devices=jax.devices()[:1]))
+assert multi.n_devices == 4 and single.n_devices == 1
+r_m = multi.evaluate_genomes(space, genomes)
+r_s = single.evaluate_genomes(space, genomes)
+out["adj_lat"] = float(np.max(np.abs(r_m.latency - r_s.latency)
+                              / np.maximum(np.abs(r_s.latency), 1e-9)))
+out["adj_thr"] = float(np.max(np.abs(r_m.throughput - r_s.throughput)
+                              / np.maximum(np.abs(r_s.throughput), 1e-9)))
+
+pspace = ParametricSpace(topologies=("mesh", "torus"), chiplet_counts=(9, 16))
+pg = pspace.repair(np.random.default_rng(1).integers(0, 8, (10, 4)))
+p_m = multi.evaluate_genomes(pspace, pg)
+p_s = single.evaluate_genomes(pspace, pg)
+out["par_lat"] = float(np.max(np.abs(p_m.latency - p_s.latency)
+                              / np.maximum(np.abs(p_s.latency), 1e-9)))
+out["par_thr"] = float(np.max(np.abs(p_m.throughput - p_s.throughput)
+                              / np.maximum(np.abs(p_s.throughput), 1e-9)))
+print("RESULT " + json.dumps(out))
+"""
+
+
+def test_forced_four_device_matches_single_device():
+    """shard_map over 4 forced host devices must reproduce the 1-device
+    results <= 1e-5 (adjacency + parametric pipelines)."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=4").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [REPO_SRC] + env.get("PYTHONPATH", "").split(os.pathsep))
+    proc = subprocess.run([sys.executable, "-c", _WORKER], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    diffs = json.loads(line[len("RESULT "):])
+    for key, val in diffs.items():
+        assert val <= 1e-5, (key, val, diffs)

@@ -341,6 +341,63 @@ def test_resume_reproduces_uninterrupted_run(tmp_path):
     assert r_full.n_evals == r_res.n_evals
 
 
+@pytest.mark.parametrize("cls", [EvolutionarySearch, SimulatedAnnealing,
+                                 RandomSearch])
+def test_async_pipeline_is_bit_identical_to_sync(cls, tmp_path):
+    """ISSUE 5 acceptance: the double-buffered async driver must keep the
+    RNG stream, every per-generation checkpoint, and the final archive
+    bit-identical to synchronous stepping — for every algorithm."""
+    import json
+    gens = 5
+    ckpts = {}
+    for mode in ("sync", "async"):
+        ckpt = str(tmp_path / f"{mode}.json")
+        per_gen = []
+        _, opt = _make_optimizer(cls, seed=5, size=8, n=10)
+        runner = OptRunner(opt, checkpoint_path=ckpt, ref_latency=300.0,
+                           async_pipeline=mode == "async")
+        # capture every generation's checkpoint, not just the last
+        orig = runner._after_generation
+
+        def capture(o, meta, history, generations, progress,
+                    _orig=orig, _per_gen=per_gen, _ckpt=ckpt):
+            _orig(o, meta, history, generations, progress)
+            with open(_ckpt) as f:
+                _per_gen.append(json.load(f))
+
+        runner._after_generation = capture
+        result = runner.run(gens)
+        ckpts[mode] = (per_gen, result.history, opt.state(),
+                       result.n_evals)
+    sync, asyn = ckpts["sync"], ckpts["async"]
+    assert len(sync[0]) == len(asyn[0]) == gens
+    for g, (a, b) in enumerate(zip(sync[0], asyn[0])):
+        assert a == b, f"checkpoint for generation {g + 1} diverged"
+    assert sync[1] == asyn[1]          # hypervolume history
+    assert sync[2] == asyn[2]          # final optimizer state
+    assert sync[3] == asyn[3]          # eval counts
+
+
+def test_async_and_sync_resume_interchangeably(tmp_path):
+    """A checkpoint written by the async driver must resume under the sync
+    driver (and vice versa) to the exact uninterrupted trajectory."""
+    gens = 6
+    _, full = _make_optimizer(EvolutionarySearch, seed=6, size=8, n=10)
+    r_full = OptRunner(full).run(gens)
+
+    ckpt = str(tmp_path / "cross.json")
+    _, part = _make_optimizer(EvolutionarySearch, seed=6, size=8, n=10)
+    OptRunner(part, checkpoint_path=ckpt, async_pipeline=True).run(3)
+    _, fresh = _make_optimizer(EvolutionarySearch, seed=6, size=8, n=10)
+    r_res = OptRunner(fresh, checkpoint_path=ckpt,
+                      async_pipeline=False).run(gens)
+
+    a = [(e.latency, e.throughput, e.payload) for e in r_full.archive.front()]
+    b = [(e.latency, e.throughput, e.payload) for e in r_res.archive.front()]
+    assert a == b
+    assert r_full.n_evals == r_res.n_evals
+
+
 def test_checkpoint_is_json_and_atomic(tmp_path):
     import json
     ckpt = str(tmp_path / "opt.json")
