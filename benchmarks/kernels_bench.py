@@ -4,15 +4,110 @@ On CPU the interpreter is expected to LOSE to XLA-compiled jnp — the numbers
 here document interpreter overhead, not TPU performance; the TPU story is
 the VMEM/BlockSpec structure (see kernels/*.py docstrings and EXPERIMENTS.md
 §Perf for the roofline-level analysis).
+
+Large-n tier (ISSUE 6): ``large_n_rows`` times the dense vs destination-
+blocked load-propagation and APSP paths per n (``REPRO_BENCH_LARGE_N_NS``
+overrides the sizes), recording per-row peak host RSS (cumulative within
+the process — run sizes ascending) and the analytic transient footprint of
+each path (what the dense form would ask of device memory vs what the
+blocked form streams).
 """
 from __future__ import annotations
+
+import os
+import resource
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.kernels import minplus_matmul, minplus_ref, flow_accumulate, flow_accumulate_ref
+from repro.kernels.load_prop import pick_tile
+from repro.kernels.ops import apsp, load_propagate
 
 from .common import emit, time_fn, RESULTS_DIR
+
+LARGE_N_DENSE_MAX = 256   # dense [n, n, n] transients past this are pointless
+
+
+def _peak_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _mesh_next_hop(rows: int, cols: int) -> np.ndarray:
+    """Row-major mesh XY next-hop table (correct column first, then row):
+    a deterministic diameter-(rows+cols-2) routing at any n = rows·cols."""
+    n = rows * cols
+    u = np.arange(n)
+    r, c = u // cols, u % cols
+    rd, cd = (np.arange(n) // cols)[None, :], (np.arange(n) % cols)[None, :]
+    nh = np.where(cd > c[:, None], u[:, None] + 1,
+                  np.where(cd < c[:, None], u[:, None] - 1,
+                           np.where(rd > r[:, None], u[:, None] + cols,
+                                    np.where(rd < r[:, None],
+                                             u[:, None] - cols,
+                                             u[:, None]))))
+    return nh.astype(np.int32)
+
+
+def large_n_rows() -> list[dict]:
+    """Dense vs blocked per n on a mesh routing: the scaling table the
+    large-n tier exists for. Dense rows stop at LARGE_N_DENSE_MAX."""
+    ns = [int(x) for x in os.environ.get(
+        "REPRO_BENCH_LARGE_N_NS", "64,144,256,576").split(",")]
+    rows = []
+    rng = np.random.default_rng(7)
+    for n in ns:
+        side = int(round(np.sqrt(n)))
+        assert side * side == n, f"large-n sizes must be squares, got {n}"
+        nh = jnp.asarray(_mesh_next_hop(side, side))
+        t = rng.random((n, n)).astype(np.float32)
+        np.fill_diagonal(t, 0.0)
+        l0 = jnp.asarray(t.T.copy())
+        adj = np.zeros((n, n), bool)
+        right = np.arange(n)[np.arange(n) % side != side - 1]
+        adj[right, right + 1] = True
+        down = np.arange(n - side)
+        adj[down, down + side] = True
+        adj |= adj.T
+        d = jnp.asarray(np.where(adj, 1.0, np.inf).astype(np.float32))
+        tile = pick_tile(n, 1)
+        iters = 3 if n <= 144 else 1
+
+        def lp(backend):
+            w, f = load_propagate(nh, l0, backend=backend, adaptive=False)
+            w.block_until_ready()
+
+        def ap(backend):
+            apsp(d, backend=backend).block_until_ready()
+
+        t_lpb = time_fn(lambda: lp("xla_blocked"), warmup=1, iters=iters)
+        t_apb = time_fn(lambda: ap("xla_blocked"), warmup=1, iters=iters)
+        t_lpd = t_apd = None
+        if n <= LARGE_N_DENSE_MAX:
+            t_lpd = time_fn(lambda: lp("xla"), warmup=1, iters=iters)
+            t_apd = time_fn(lambda: ap("xla"), warmup=1, iters=iters)
+        row = {
+            "kernel": "large_n", "n": n, "tile": tile,
+            "load_prop_dense_ms": round(t_lpd * 1e3, 2) if t_lpd else "",
+            "load_prop_blocked_ms": round(t_lpb * 1e3, 2),
+            "apsp_dense_ms": round(t_apd * 1e3, 2) if t_apd else "",
+            "apsp_blocked_ms": round(t_apb * 1e3, 2),
+            # dense one-hot / min-plus transient vs the blocked slab
+            "dense_transient_mb": round(n ** 3 * 4 / 2**20, 1),
+            "blocked_transient_mb": round(tile * n * n * 4 / 2**20, 1),
+            "peak_rss_mb": round(_peak_rss_mb(), 1),
+        }
+        rows.append(row)
+        print(f"[kern] large_n n={n} tile={tile}: "
+              f"load_prop dense={row['load_prop_dense_ms'] or 'skip'}ms "
+              f"blocked={row['load_prop_blocked_ms']}ms | "
+              f"apsp dense={row['apsp_dense_ms'] or 'skip'}ms "
+              f"blocked={row['apsp_blocked_ms']}ms | "
+              f"transient {row['dense_transient_mb']}MB -> "
+              f"{row['blocked_transient_mb']}MB, "
+              f"rss {row['peak_rss_mb']}MB")
+    emit(rows, path=f"{RESULTS_DIR}/kernels_large_n.csv")
+    return rows
 
 
 def main() -> list[dict]:
@@ -43,6 +138,7 @@ def main() -> list[dict]:
         print(f"[kern] flow_accum n={n} P={p}: ref={t_ref*1e6:.0f}us "
               f"pallas(interp)={t_pal*1e6:.0f}us")
     emit(rows, path=f"{RESULTS_DIR}/kernels.csv")
+    rows += large_n_rows()
     return rows
 
 

@@ -26,11 +26,21 @@ driving — steady-state generation time and evals/s per cell, with the best
 cell recorded as the headline ``steady_state_record`` next to the previous
 committed number.
 
+Large-n record (ISSUE 6): a per-n table (default n ∈ {64, 144, 256, 576})
+of steady-state evals/s, peak host RSS and the analytic device-state
+footprint for the free-form space at hundreds of chiplets — the regime
+where the tiled kernels, blocked routing scans and int16 tables engage.
+Each n runs in its own subprocess so the RSS column is attributable.
+``--largen-only`` runs just this table (the CI large-n smoke job);
+``--largen-update`` merges a fresh table into the committed record without
+touching its other fields.
+
 Emits BENCH_opt.json at the repo root (the perf-trajectory record);
 ``--smoke`` runs a tiny configuration for CI (pass ``--out`` to keep the
 committed record intact). ``--check`` exits non-zero if the measured
 steady-state rate regresses more than 2x below the committed record — the
-CI smoke gate.
+CI smoke gate; with a large-n table present it also gates each measured n
+against the committed per-n record.
 """
 from __future__ import annotations
 
@@ -242,6 +252,94 @@ def run_scaling(device_counts, pops, gens: int, chiplets: int) -> dict:
     return results
 
 
+LARGEN_NS = "64,144,256,576"
+
+
+def est_device_state_mb(n: int, pop: int) -> float:
+    """Analytic essential-table footprint of one evaluated population at n
+    chiplets: the int16 next-hop table plus four f32 [P, nb, nb] panes
+    (step cost, distances, accumulated load, edge flow) at the padded
+    bucket sizes — the state the large-n tier actually keeps resident (no
+    [P, n, n, n] selection tensors, no [P, k, n-1, n] one-hots). On TPU
+    this is the HBM the pipeline's tables would occupy."""
+    from repro.dse.genomes import bucket_population, node_bucket
+    nb, pb = node_bucket(n), bucket_population(pop)
+    return round(pb * nb * nb * (2 + 4 * 4) / 2**20, 1)
+
+
+def largen_cell(n: int, pop: int, gens: int) -> dict:
+    """One row of the large-n scaling table (meant to run in a fresh
+    subprocess so peak RSS is attributable to this n alone): a short
+    device-path NSGA-II run on the free-form space at n chiplets, with the
+    blocked/tiled tier engaging automatically above the promotion
+    thresholds."""
+    import resource
+    space = AdjacencySpace(n_chiplets=n, max_degree=8)
+    opt, total_s, steady, best = run_opt_timed_generations(
+        space, gens, pop, device_path=True)
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    return {
+        "chiplets": n,
+        "genome_bits": space.genome_length,
+        "steady_state_s_per_gen": round(steady, 4),
+        "steady_state_evals_per_s": round(pop / steady, 2),
+        "best_evals_per_s": round(pop / best, 2),
+        "total_s": round(total_s, 2),
+        "peak_rss_mb": round(rss_mb, 1),
+        "est_device_state_mb": est_device_state_mb(n, pop),
+        "hypervolume": round(opt.archive.hypervolume(REF_LATENCY), 2),
+    }
+
+
+def run_largen(ns, pop: int, gens: int) -> dict:
+    """Per-n large-n table (the ISSUE 6 deliverable): each n runs in a
+    fresh subprocess so the peak-RSS column is a clean per-n measurement
+    and no jit cache or structure cache carries over between sizes."""
+    out = {"pop_size": pop, "generations": gens}
+    for n in ns:
+        cfg = json.dumps({"n": n, "pop": pop, "gens": gens})
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__),
+             "--largen-worker", cfg],
+            env=dict(os.environ), capture_output=True, text=True,
+            timeout=3600)
+        if proc.returncode != 0:
+            raise RuntimeError(f"large-n worker (n={n}) failed:\n"
+                               f"{proc.stderr[-4000:]}")
+        line = [ln for ln in proc.stdout.splitlines()
+                if ln.startswith("LARGEN ")][-1]
+        row = json.loads(line[len("LARGEN "):])
+        out[str(n)] = row
+        print(f"large-n n={n}: {row['steady_state_evals_per_s']} evals/s "
+              f"steady ({row['steady_state_s_per_gen']}s/gen), "
+              f"peak RSS {row['peak_rss_mb']}MB, "
+              f"est device state {row['est_device_state_mb']}MB")
+    return out
+
+
+def check_largen(measured: dict, committed: dict | None) -> bool:
+    """Per-n regression gate: every measured n that exists in the committed
+    ``large_n`` table must stay within 2x of its recorded steady-state
+    rate (ns absent from the committed record pass trivially)."""
+    ok = True
+    comm = (committed or {}).get("large_n") or {}
+    for key, row in measured.items():
+        if not isinstance(row, dict):
+            continue
+        ref = (comm.get(key) or {}).get("steady_state_evals_per_s")
+        if not ref:
+            continue
+        got = row["steady_state_evals_per_s"]
+        if got < ref / 2.0:
+            print(f"REGRESSION: large-n n={key} {got} evals/s is more than "
+                  f"2x below the committed record ({ref})")
+            ok = False
+        else:
+            print(f"large-n gate OK at n={key}: {got} evals/s >= "
+                  f"{ref / 2.0} (committed {ref} / 2)")
+    return ok
+
+
 def _scaling_rows(scaling: dict):
     """Flatten the {devices: {pop: {mode: row}}} table into
     (devices, pop, mode, row) cells."""
@@ -315,6 +413,23 @@ def main(argv=None):
                    help="population sizes for the scaling table")
     p.add_argument("--scaling-worker", type=str, default=None,
                    help=argparse.SUPPRESS)
+    p.add_argument("--largen-ns", type=str, default=LARGEN_NS,
+                   help="comma-separated chiplet counts for the large-n "
+                        "table (each runs in a fresh subprocess)")
+    p.add_argument("--largen-pop", type=int, default=8,
+                   help="population size for the large-n table")
+    p.add_argument("--largen-gens", type=int, default=3,
+                   help="generations per large-n cell")
+    p.add_argument("--largen-only", action="store_true",
+                   help="run only the large-n table (the CI large-n smoke "
+                        "job; combine with --check to gate per-n evals/s "
+                        "against the committed record)")
+    p.add_argument("--largen-update", action="store_true",
+                   help="run only the large-n table and merge it into the "
+                        "committed BENCH_opt.json, leaving every other "
+                        "field of the record untouched")
+    p.add_argument("--largen-worker", type=str, default=None,
+                   help=argparse.SUPPRESS)
     args = p.parse_args(argv)
 
     if args.scaling_worker is not None:
@@ -323,10 +438,47 @@ def main(argv=None):
         print("SCALING " + json.dumps(out))
         return
 
+    if args.largen_worker is not None:
+        cfg = json.loads(args.largen_worker)
+        print("LARGEN " + json.dumps(
+            largen_cell(cfg["n"], cfg["pop"], cfg["gens"])))
+        return
+
     committed = None
     if os.path.exists(OUT_PATH):
         with open(OUT_PATH) as f:
             committed = json.load(f)
+
+    if args.largen_only or args.largen_update:
+        ns = [int(x) for x in args.largen_ns.split(",")]
+        gens = 2 if args.smoke else args.largen_gens
+        large_n = run_largen(ns, args.largen_pop, gens)
+        if args.largen_update:
+            record = dict(committed or {})
+            record["large_n"] = large_n
+            record["large_n_timestamp"] = time.strftime(
+                "%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+            with open(OUT_PATH, "w") as f:
+                json.dump(record, f, indent=2)
+                f.write("\n")
+            print(f"large-n table merged into {OUT_PATH}")
+        else:
+            out_path = args.out
+            if args.smoke and os.path.abspath(out_path) == OUT_PATH:
+                out_path = os.path.join(os.path.dirname(OUT_PATH),
+                                        "BENCH_opt_smoke.json")
+            with open(out_path, "w") as f:
+                json.dump({"benchmark": "opt_convergence_large_n",
+                           "smoke": bool(args.smoke),
+                           "large_n": large_n,
+                           "timestamp": time.strftime(
+                               "%Y-%m-%dT%H:%M:%SZ", time.gmtime())},
+                          f, indent=2)
+                f.write("\n")
+            print(f"large-n table -> {out_path}")
+        if args.check and not check_largen(large_n, committed):
+            return 1
+        return 0
 
     if args.smoke and os.path.abspath(args.out) == OUT_PATH:
         # never clobber the committed full-run record with a smoke run
@@ -460,6 +612,13 @@ def main(argv=None):
           f"device {cost_fn_big['device']['evals_per_s']} evals/s "
           f"-> {cost_fn_big['speedup']}x")
 
+    # -- large-n scaling table (ISSUE 6): hundreds-of-chiplet designs
+    # through the tiled/blocked tier, one subprocess per n for clean RSS --
+    large_n = None
+    if not args.smoke:
+        large_n = run_largen([int(x) for x in args.largen_ns.split(",")],
+                             args.largen_pop, args.largen_gens)
+
     record = {
         "benchmark": "opt_convergence",
         "smoke": bool(args.smoke),
@@ -507,6 +666,8 @@ def main(argv=None):
         "cost_function": cost_fn,
         "cost_function_batch_pop": big_pop,
         "cost_function_batch": cost_fn_big,
+        "large_n": large_n if large_n is not None
+        else (committed or {}).get("large_n"),
         # legacy field: the default path is now the device pipeline
         "adjacency_evals_per_s": sides["device"]["evals_per_s"],
         "adjacency_hypervolume": sides["device"]["hypervolume"],
@@ -527,6 +688,9 @@ def main(argv=None):
             return 1
         print(f"regression gate OK: {got} evals/s >= {floor} "
               f"(committed {committed_steady} / 2)")
+    if args.check and large_n is not None:
+        if not check_largen(large_n, committed):
+            return 1
     return 0
 
 

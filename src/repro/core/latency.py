@@ -66,6 +66,8 @@ def path_cost_doubling(next_hop: jax.Array, step_cost: jax.Array,
     n = next_hop.shape[0]
     if n_steps is None:
         n_steps = num_doubling_steps(n)
+    # tables may arrive int16 (routing/device.py); widen for the gathers
+    next_hop = next_hop.astype(jnp.int32)
     dest = jnp.arange(n, dtype=next_hop.dtype)[None, :]
     # Initial one-step tables.
     pos = next_hop

@@ -91,12 +91,21 @@ def bucket_population(size: int, multiple: int = 1) -> int:
     return b
 
 
+NODE_TILE = 16
+
+
 def node_bucket(n: int) -> int:
-    """Pad node counts to power-of-two buckets (>= 8): pipelines over
-    heterogeneous-``n`` spaces then share one compiled program per bucket
-    instead of compiling per exact node count (padding rows are self-looped
-    routers with zero traffic — exact no-ops for every proxy)."""
-    return 1 << max(3, int(n - 1).bit_length())
+    """Pad node counts to ``NODE_TILE``-multiple buckets (floor 8):
+    pipelines over heterogeneous-``n`` spaces then share one compiled
+    program per bucket instead of compiling per exact node count (padding
+    rows are self-looped routers with zero traffic — exact no-ops for every
+    proxy). Tile multiples instead of powers of two keep the padding
+    overhead bounded at ~(1 + 16/n)² of the real quadratic work — the old
+    power-of-two buckets padded n = 576 to 1024 (3.2× the work/memory) —
+    while staying aligned with the tiled kernels' slab sizes."""
+    if n <= 8:
+        return 8
+    return ((n + NODE_TILE - 1) // NODE_TILE) * NODE_TILE
 
 
 class PendingGenomeEval:
@@ -157,7 +166,9 @@ def _eval_proxies(next_hop, step_cost, node_weight, adj_bw, traffic,
     f = flow + flow.swapaxes(-1, -2)
     ratio = jnp.where(f > 0, adj_bw / jnp.maximum(f, 1e-30), jnp.inf)
     thr = (jnp.min(ratio, axis=(1, 2)) * t_total).astype(jnp.float32)
-    sc_next = jnp.take_along_axis(step_cost, next_hop, axis=2)   # [P, u, d]
+    # tables arrive int16 (routing/device.py); widen at the gather site
+    sc_next = jnp.take_along_axis(step_cost, next_hop.astype(jnp.int32),
+                                  axis=2)                        # [P, u, d]
     lat = ((jnp.sum(total * sc_next.swapaxes(-1, -2), axis=(1, 2))
             + dest_weight) / t_total).astype(jnp.float32)
     return lat, thr
@@ -255,10 +266,21 @@ def _adjacency_eval(bits, pair_u, pair_v, pair_id, chain_slot, chain_eslot,
     csb = cs_bits.astype(jnp.int32)
     rank = jnp.cumsum(csb, axis=1) - csb     # set slots before step j
     tio = jnp.arange(k_phys, dtype=jnp.int32)
-    sel = (cs_bits[:, None] &
-           (rank[:, None] == tio[None, :, None, None]))     # [P, k, n-1, n]
-    eslots = jnp.sum(jnp.where(sel, chain_eslot.astype(jnp.int32)[None, None],
-                               0), axis=2)                  # [P, k, n]
+    # Position of the t-th set slot in chiplet c's chain, WITHOUT the
+    # [P, k, n-1, n] one-hot: with rank_inc[j] = set slots through step j,
+    # the t-th set slot sits at position Σ_j [rank_inc[j] <= t] (every step
+    # strictly before it satisfies the bound, it and everything after do
+    # not). One [P, n-1, n] reduction per compact step via lax.map. Steps
+    # past a chiplet's degree clamp to the last chain slot — their picks
+    # are garbage in the dense form too and every consumer gates on
+    # ``valid``/the genome bit.
+    rank_inc = rank + csb
+    pos = jax.lax.map(
+        lambda t: jnp.sum((rank_inc <= t).astype(jnp.int32), axis=1), tio)
+    pos = jnp.minimum(jnp.moveaxis(pos, 0, 1),
+                      chain_eslot.shape[0] - 1)             # [P, k, n]
+    eslots = chain_eslot.astype(jnp.int32)[
+        pos, jnp.arange(n)[None, None, :]]                  # [P, k, n]
     valid = tio[None, :, None] < deg[:, None, :]            # [P, k, n]
 
     def step(used, xs):
@@ -620,7 +642,8 @@ class ParametricPipeline:
             arrays = entry.arrays
             k = arrays.next_hop.shape[0]
             nc = arrays.n_chiplets
-            nh = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, n))
+            # int16 resident tables (n < 32768 always); widened at gathers
+            nh = np.tile(np.arange(n, dtype=np.int16)[:, None], (1, n))
             nh[:k, :k] = arrays.next_hop
             sc = np.zeros((n, n), np.float32)
             sc[:k, :k] = arrays.step_cost

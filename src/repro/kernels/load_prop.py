@@ -27,8 +27,22 @@ separate HBM round-trip anyway.
 Backend selection mirrors ``kernels.apsp``: compiled Pallas on TPU, the
 pure-XLA loop on CPU/GPU (where the Pallas interpreter would run the kernel
 body in Python). ``REPRO_LOAD_PROP_BACKEND`` overrides (``pallas`` |
-``pallas_interpret`` | ``xla``); the legacy ``REPRO_PALLAS_INTERPRET=0``
-still forces compiled Pallas everywhere.
+``pallas_interpret`` | ``xla`` | ``pallas_tiled`` |
+``pallas_tiled_interpret`` | ``xla_blocked``); the legacy
+``REPRO_PALLAS_INTERPRET=0`` still forces compiled Pallas everywhere.
+
+Large-n tier (ISSUE 6): the fused kernel keeps the whole [n, n] state pane
+in VMEM and the XLA loop materializes the [B, n, n, n] one-hot, so both
+blow up past n ≈ 128–256. The ``*_tiled`` / ``xla_blocked`` variants
+exploit that the propagation is *independent per destination row*: they
+stream ``[tile, n]`` destination slabs of the next-hop table and load
+matrix (2-D grid batch × destination-tile for Pallas, a ``lax.scan`` over
+destination tiles for XLA), accumulating the shared flow matrix across
+tiles. Per-tile working set is O(tile · n) state + O(B · tile · n²)
+transient one-hot for XLA — bounded by the tile size regardless of n.
+``kernels.ops.load_propagate`` auto-switches to the tiled variant above
+``REPRO_LOAD_PROP_FUSED_N`` (default 160) nodes; ``REPRO_LOAD_PROP_TILE``
+overrides the auto-chosen tile.
 """
 from __future__ import annotations
 
@@ -39,7 +53,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LOAD_PROP_BACKENDS = ("pallas", "pallas_interpret", "xla")
+LOAD_PROP_BACKENDS = ("pallas", "pallas_interpret", "xla",
+                      "pallas_tiled", "pallas_tiled_interpret", "xla_blocked")
 
 
 def default_backend() -> str:
@@ -186,6 +201,153 @@ def load_prop_pallas(next_hop: jax.Array, load0: jax.Array, max_hops: int,
                   pl.BlockSpec((1, n, n), lambda b: (b, 0, 0))],
         out_specs=[pl.BlockSpec((1, n, n), lambda b: (b, 0, 0)),
                    pl.BlockSpec((1, n, n), lambda b: (b, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, n, n), jnp.float32),
+                   jax.ShapeDtypeStruct((B, n, n), jnp.float32)],
+        interpret=interpret,
+    )(nhT, load0.astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Large-n tier: destination-tiled variants (ISSUE 6)
+# --------------------------------------------------------------------------
+
+def pick_tile(n: int, batch: int, budget_elems: int = 1 << 25) -> int:
+    """Auto tile size for the blocked variants: the largest power of two
+    ≤ 128 whose transient working set (batch · tile · n² elements for the
+    XLA one-hot) stays under ``budget_elems`` (default 2^25 ≈ 128 MB f32).
+    Floor of 8 keeps the sublane dimension tiling-friendly. Powers of two
+    always divide the 128-lane padding the Pallas path applies, so the
+    grid never needs a ragged last tile there."""
+    tile = 128
+    while tile > 8 and batch * tile * n * n > budget_elems:
+        tile //= 2
+    return tile
+
+
+def load_prop_xla_blocked(next_hop: jax.Array, load0: jax.Array,
+                          max_hops: int, adaptive: bool, tile: int
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Destination-blocked XLA load propagation: bit-compatible with
+    ``load_prop_xla`` but scans over ``tile``-row destination slabs so the
+    transient one-hot is [B, tile, n, n] instead of [B, n, n, n].
+
+    Each slab runs its own hop loop (adaptive slabs stop at the slab's own
+    routed eccentricity — strictly earlier than the batch diameter); the
+    flow matrix is the scan carry, accumulated across slabs. Tile sizes
+    that don't divide n are handled by zero-padding the destination axis:
+    padded rows carry zero load and contribute nothing.
+    """
+    B, n, _ = next_hop.shape
+    tile = max(1, min(tile, n))
+    nt = -(-n // tile)
+    n_pad = nt * tile
+    ids = jnp.arange(n, dtype=jnp.int32)
+    nhT = next_hop.swapaxes(-1, -2).astype(jnp.int32)           # [B, d, u]
+    pad = ((0, 0), (0, n_pad - n), (0, 0))
+    nh_t = jnp.pad(nhT, pad).reshape(B, nt, tile, n)
+    l0_t = jnp.pad(load0.astype(jnp.float32), pad).reshape(B, nt, tile, n)
+    d_t = jnp.arange(n_pad, dtype=jnp.int32).reshape(nt, tile)
+
+    def slab(flow, xs):
+        nh, l0, dids = xs                   # [B, T, n], [B, T, n], [T]
+        oh = (nh[:, :, :, None] == ids).astype(jnp.float32)  # [B, T, u, v]
+        offdiag = (dids[None, :, None] != ids)               # [1, T, v]
+        load0s = jnp.where(offdiag, l0, 0.0)
+
+        def step(state):
+            load, total = state
+            total = total + load
+            load = jnp.where(offdiag,
+                             jnp.einsum("btuv,btu->btv", oh, load), 0.0)
+            return load, total
+
+        def still_active(state):
+            return jnp.any(state[0] > 0)
+
+        _, total = hop_loop(step, (load0s, jnp.zeros_like(load0s)),
+                            max_hops, adaptive, still_active)
+        return flow + jnp.einsum("btuv,btu->buv", oh, total), total
+
+    flow0 = jnp.zeros((B, n, n), jnp.float32)
+    flow, w_t = jax.lax.scan(
+        slab, flow0, (nh_t.swapaxes(0, 1), l0_t.swapaxes(0, 1), d_t))
+    w = w_t.swapaxes(0, 1).reshape(B, n_pad, n)[:, :n]
+    return w, flow
+
+
+def _load_prop_tiled_kernel(max_hops: int, nht_ref, l0_ref, w_ref, f_ref):
+    """One (design, destination-tile) pair per grid step: the VMEM working
+    set is two [tile, n] slabs plus the shared [n, n] flow pane, which is
+    revisited across the inner (tile) grid axis and accumulated in place."""
+    t = pl.program_id(1)
+    tile, n = l0_ref.shape[-2], l0_ref.shape[-1]
+    nhT = nht_ref[0]                                            # [d, u] slab
+    viota = jax.lax.broadcasted_iota(jnp.int32, (tile, n), 1)
+    dglob = jax.lax.broadcasted_iota(jnp.int32, (tile, n), 0) + t * tile
+    offdiag = viota != dglob
+    load0 = jnp.where(offdiag, l0_ref[0], 0.0)
+
+    def propagate(load):
+        def body(u, acc):
+            idx = nhT[:, u]                                     # [d]
+            lu = load[:, u]                                     # [d]
+            return acc + jnp.where(viota == idx[:, None],
+                                   lu[:, None], 0.0)
+
+        return jax.lax.fori_loop(0, n, body,
+                                 jnp.zeros((tile, n), jnp.float32))
+
+    def hop(_, state):
+        load, total = state
+        total = total + load
+        return jnp.where(offdiag, propagate(load), 0.0), total
+
+    _, total = jax.lax.fori_loop(
+        0, max_hops, hop, (load0, jnp.zeros((tile, n), jnp.float32)))
+    w_ref[0] = total
+
+    @pl.when(t == 0)
+    def _init():
+        f_ref[0] = jnp.zeros_like(f_ref[0])
+
+    # this tile's flow contribution: flow[u, v] += Σ_{d∈tile} 1[nhT[d,u]=v]·W
+    uiota = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+
+    def f_body(u, acc):
+        mask = viota == nhT[:, u][:, None]                      # [d, v]
+        row = jnp.sum(jnp.where(mask, total[:, u][:, None], 0.0),
+                      axis=0)                                   # [v]
+        return acc + jnp.where(uiota == u, row[None, :], 0.0)
+
+    f_ref[0] = f_ref[0] + jax.lax.fori_loop(
+        0, n, f_body, jnp.zeros((n, n), jnp.float32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_hops", "tile", "interpret"))
+def load_prop_pallas_tiled(next_hop: jax.Array, load0: jax.Array,
+                           max_hops: int, tile: int, *,
+                           interpret: bool = True
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Destination-tiled fused load propagation: grid (batch × dest-tile)
+    streaming [tile, n] slabs through VMEM. Same contract as
+    ``load_prop_pallas`` (self-loop padding rows, zero-padded load); the
+    destination axis must additionally be a multiple of ``tile``, which
+    ``ops.load_propagate`` guarantees by picking power-of-two tiles that
+    divide the 128-lane padding."""
+    B, n, _ = next_hop.shape
+    if n % tile:
+        raise ValueError(f"tile {tile} must divide padded n {n}")
+    nt = n // tile
+    nhT = next_hop.swapaxes(-1, -2).astype(jnp.int32)
+    kernel = functools.partial(_load_prop_tiled_kernel, max_hops)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nt),
+        in_specs=[pl.BlockSpec((1, tile, n), lambda b, t: (b, t, 0)),
+                  pl.BlockSpec((1, tile, n), lambda b, t: (b, t, 0))],
+        out_specs=[pl.BlockSpec((1, tile, n), lambda b, t: (b, t, 0)),
+                   pl.BlockSpec((1, n, n), lambda b, t: (b, 0, 0))],
         out_shape=[jax.ShapeDtypeStruct((B, n, n), jnp.float32),
                    jax.ShapeDtypeStruct((B, n, n), jnp.float32)],
         interpret=interpret,

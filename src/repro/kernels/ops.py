@@ -106,30 +106,50 @@ def load_propagate(next_hop: jax.Array, load0: jax.Array,
 
     ``backend`` is one of ``load_prop.LOAD_PROP_BACKENDS``; ``None``
     auto-selects via ``load_prop.default_backend()`` — the fused Pallas
-    kernel on TPU, the pure-XLA loop on CPU/GPU. ``adaptive`` (XLA backend
-    only) swaps the fixed-length scan for a while_loop that stops at the
-    batch's routed diameter; the fused kernel always runs the shape-stable
-    ``max_hops`` bound (extra steps propagate zeros — exact no-ops), which
-    costs nothing once the state lives in VMEM. The env-driven default is
-    resolved outside this function's own jit boundary, so direct callers
-    pick up a flipped ``REPRO_LOAD_PROP_BACKEND`` on their next call —
-    but *jitted* callers (``edge_flows``, the genome pipelines) resolve it
-    at their trace time and keep the backend baked into their compiled
-    programs; set the variable before first use.
+    kernel on TPU, the pure-XLA loop on CPU/GPU. Above
+    ``REPRO_LOAD_PROP_FUSED_N`` (default 160) nodes the fused/dense
+    backends are promoted to their destination-tiled twins
+    (``pallas -> pallas_tiled``, ``xla -> xla_blocked``) so neither the
+    whole-matrix VMEM pane nor the [B, n, n, n] one-hot ever materializes;
+    ``REPRO_LOAD_PROP_TILE`` pins the tile size (else auto via
+    ``load_prop.pick_tile``). ``adaptive`` (XLA backends only) swaps the
+    fixed-length scan for a while_loop that stops at the batch's routed
+    diameter — per destination slab in the blocked variant; the fused
+    kernels always run the shape-stable ``max_hops`` bound (extra steps
+    propagate zeros — exact no-ops). The env-driven default is resolved
+    outside this function's own jit boundary, so direct callers pick up a
+    flipped ``REPRO_LOAD_PROP_BACKEND`` on their next call — but *jitted*
+    callers (``edge_flows``, the genome pipelines) resolve it at their
+    trace time and keep the backend baked into their compiled programs;
+    set the variable before first use.
     """
-    from .load_prop import default_backend
+    from .load_prop import default_backend, pick_tile
 
     if backend is None:
         backend = default_backend()
-    return _load_propagate(next_hop, load0, max_hops, adaptive, backend)
+    n = next_hop.shape[-1]
+    batch = next_hop.shape[0] if next_hop.ndim == 3 else 1
+    fused_n = int(os.environ.get("REPRO_LOAD_PROP_FUSED_N", "160"))
+    promote = {"xla": "xla_blocked", "pallas": "pallas_tiled",
+               "pallas_interpret": "pallas_tiled_interpret"}
+    if n > fused_n and backend in promote:
+        backend = promote[backend]
+    tile = None
+    if backend in ("xla_blocked", "pallas_tiled", "pallas_tiled_interpret"):
+        env = os.environ.get("REPRO_LOAD_PROP_TILE")
+        tile = int(env) if env else pick_tile(n, batch)
+    return _load_propagate(next_hop, load0, max_hops, adaptive, backend,
+                           tile)
 
 
 @functools.partial(jax.jit, static_argnames=("max_hops", "adaptive",
-                                             "backend"))
+                                             "backend", "tile"))
 def _load_propagate(next_hop: jax.Array, load0: jax.Array,
-                    max_hops: int | None, adaptive: bool, backend: str
+                    max_hops: int | None, adaptive: bool, backend: str,
+                    tile: int | None = None
                     ) -> tuple[jax.Array, jax.Array]:
-    from .load_prop import load_prop_pallas, load_prop_xla
+    from .load_prop import (load_prop_pallas, load_prop_pallas_tiled,
+                            load_prop_xla, load_prop_xla_blocked)
 
     squeeze = next_hop.ndim == 2
     if squeeze:
@@ -140,6 +160,10 @@ def _load_propagate(next_hop: jax.Array, load0: jax.Array,
     if backend == "xla":
         w, flow = load_prop_xla(next_hop, load0.astype(jnp.float32),
                                 max_hops, adaptive)
+    elif backend == "xla_blocked":
+        w, flow = load_prop_xla_blocked(next_hop,
+                                        load0.astype(jnp.float32),
+                                        max_hops, adaptive, tile)
     else:
         n_lane = _round_up(n, 128)
         nh_p = jnp.tile(jnp.arange(n_lane, dtype=jnp.int32)[:, None],
@@ -147,8 +171,14 @@ def _load_propagate(next_hop: jax.Array, load0: jax.Array,
         nh_p = nh_p.at[:, :n, :n].set(next_hop.astype(jnp.int32))
         l0_p = jnp.zeros((B, n_lane, n_lane), jnp.float32)
         l0_p = l0_p.at[:, :n, :n].set(load0.astype(jnp.float32))
-        w, flow = load_prop_pallas(nh_p, l0_p, max_hops,
-                                   interpret=backend == "pallas_interpret")
+        if backend in ("pallas_tiled", "pallas_tiled_interpret"):
+            w, flow = load_prop_pallas_tiled(
+                nh_p, l0_p, max_hops, tile,
+                interpret=backend == "pallas_tiled_interpret")
+        else:
+            w, flow = load_prop_pallas(
+                nh_p, l0_p, max_hops,
+                interpret=backend == "pallas_interpret")
         w, flow = w[:, :n, :n], flow[:, :n, :n]
     if squeeze:
         return w[0], flow[0]
@@ -164,22 +194,40 @@ def apsp(d: jax.Array, n_iters: int | None = None,
     ``backend`` is one of ``apsp.APSP_BACKENDS``; ``None`` auto-selects via
     ``apsp.default_backend()`` — the fused Pallas kernel compiled for
     hardware on TPU, a pure-XLA doubling on CPU/GPU (where the Pallas
-    interpreter would run the kernel body in Python). The Pallas path falls
+    interpreter would run the kernel body in Python). Above
+    ``REPRO_APSP_FUSED_N`` (default 160) nodes the fused/dense backends are
+    promoted to their blocked twins (``pallas -> pallas_tiled``,
+    ``xla -> xla_blocked``) that stream [tile, n] slabs per squaring;
+    ``REPRO_APSP_TILE`` pins the tile size. The fused Pallas path falls
     back to iterated minplus_matmul beyond the VMEM budget. The env-driven
     default is resolved *outside* the jit boundary, so flipping
     ``REPRO_APSP_BACKEND`` mid-process takes effect on the next call
     instead of being frozen into the jit cache."""
     from .apsp import default_backend
+    from .load_prop import pick_tile
 
     if backend is None:
         backend = default_backend()
-    return _apsp(d, n_iters, backend)
+    n = d.shape[-1]
+    batch = d.shape[0] if d.ndim == 3 else 1
+    fused_n = int(os.environ.get("REPRO_APSP_FUSED_N", "160"))
+    promote = {"xla": "xla_blocked", "pallas": "pallas_tiled",
+               "pallas_interpret": "pallas_tiled_interpret"}
+    if n > fused_n and backend in promote:
+        backend = promote[backend]
+    tile = None
+    if backend in ("xla_blocked", "pallas_tiled", "pallas_tiled_interpret"):
+        env = os.environ.get("REPRO_APSP_TILE")
+        tile = int(env) if env else pick_tile(n, batch)
+    return _apsp(d, n_iters, backend, tile)
 
 
-@functools.partial(jax.jit, static_argnames=("n_iters", "backend"))
-def _apsp(d: jax.Array, n_iters: int | None, backend: str) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("n_iters", "backend", "tile"))
+def _apsp(d: jax.Array, n_iters: int | None, backend: str,
+          tile: int | None = None) -> jax.Array:
     import math
-    from .apsp import MAX_FUSED_N, apsp_pallas, apsp_xla
+    from .apsp import (MAX_FUSED_N, apsp_pallas, apsp_pallas_tiled,
+                       apsp_xla, apsp_xla_blocked)
 
     squeeze = d.ndim == 2
     if squeeze:
@@ -193,6 +241,16 @@ def _apsp(d: jax.Array, n_iters: int | None, backend: str) -> jax.Array:
     n_lane = _round_up(n, 128)
     if backend == "xla":
         out = apsp_xla(d, n_iters)
+    elif backend == "xla_blocked":
+        out = apsp_xla_blocked(d, n_iters, tile)
+    elif backend in ("pallas_tiled", "pallas_tiled_interpret"):
+        dp = jnp.full((B, n_lane, n_lane), BIG, jnp.float32)
+        dp = dp.at[:, :n, :n].set(d)
+        eye_p = jnp.where(jnp.eye(n_lane, dtype=bool), 0.0, BIG)
+        dp = jnp.minimum(dp, eye_p[None].astype(jnp.float32))
+        out = apsp_pallas_tiled(
+            dp, n_iters, tile,
+            interpret=backend == "pallas_tiled_interpret")[:, :n, :n]
     elif n_lane <= MAX_FUSED_N:
         dp = jnp.full((B, n_lane, n_lane), BIG, jnp.float32)
         dp = dp.at[:, :n, :n].set(d)

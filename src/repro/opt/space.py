@@ -33,6 +33,17 @@ DEFAULT_TOPOLOGIES = (
 _ROUTER_TOPOS = ("double_butterfly", "butterdonut", "cluscross", "kite")
 
 
+def _pow2_bucket(n: int) -> int:
+    """Power-of-two padding bucket (>= 8) for the degree-cap candidate list.
+    Kept pow2 here regardless of how ``dse.genomes.node_bucket`` pads node
+    counts: candidate counts vary wildly between repair calls, and a coarse
+    doubling ladder keeps the jitted scan's compile cache small."""
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
 class SearchSpace:
     """Base interface: integer genomes with per-gene cardinalities."""
 
@@ -221,12 +232,10 @@ class AdjacencySpace(SearchSpace):
             # over-cap vertex. The candidate list (descending, padded to a
             # power-of-two bucket with a no-op sentinel so the jit cache
             # stays small) drives the compiled loop.
-            from ..dse.genomes import node_bucket
-
             cand = ((bits == 1) &
                     (over[:, pu] | over[:, pv])).any(axis=0)
             idx = np.nonzero(cand)[0][::-1].astype(np.int32)
-            bucket = node_bucket(len(idx))
+            bucket = _pow2_bucket(len(idx))
             idx = np.concatenate(
                 [idx, np.full(bucket - len(idx), G, np.int32)])
             bt = np.concatenate(
@@ -239,19 +248,19 @@ class AdjacencySpace(SearchSpace):
             deg = np.asarray(d2, np.int64).T.copy()
 
         # 2. connectivity — only for genomes that need it. Connected ⟺
-        # every vertex reachable from vertex 0, so the flag is a batched
-        # BFS frontier expansion from 0 (one small f32 vec-mat product per
-        # hop) instead of a full [P, n, n] min-label propagation;
-        # already-connected genomes (the steady-state majority after
-        # variation) skip the union-find scan entirely.
-        adjf = np.zeros((P, n, n), np.float32)
-        adjf[:, pu, pv] = bits.astype(np.float32)
-        adjf += adjf.transpose(0, 2, 1)
+        # every vertex reachable from vertex 0. The frontier expansion runs
+        # edge-wise through the incidence matrix — activate every set gene
+        # with a reached endpoint, scatter back to both endpoints via one
+        # sgemm — so the transient stays [P, G] (the genome's own footprint)
+        # instead of a dense [P, n, n] adjacency stack; already-connected
+        # genomes (the steady-state majority after variation) skip the
+        # union-find scan entirely.
+        bf = (bits == 1).astype(np.float32)
         reach = np.zeros((P, n), np.float32)
         reach[:, 0] = 1.0
         while True:
-            new = reach + np.einsum("pu,puv->pv", reach, adjf)
-            new = np.minimum(new, 1.0)
+            active = bf * (reach[:, pu] + reach[:, pv])
+            new = np.minimum(reach + active @ self._incidence, 1.0)
             if np.array_equal(new, reach):
                 break
             reach = new

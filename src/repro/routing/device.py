@@ -27,17 +27,40 @@ All distances here are float32: for the integer-valued "hops" metric every
 comparison is exact, so tie-breaking matches the float64 host path bit for
 bit. BIG stands in for +inf inside the min-plus algebra (as everywhere in
 ``kernels``).
+
+Large-n tier (ISSUE 6): the dense selection paths materialize [B, n, n, n]
+score tensors and the min-plus helper a [B, n, n, n] sum — both fatal for
+hundreds of chiplets. Above ``REPRO_ROUTING_BLOCK_N`` (default 160) nodes
+every public entry switches to destination-blocked scans that stream
+[n, tile] column slabs (``REPRO_ROUTING_TILE`` pins the tile), producing
+bit-identical tables. Next-hop tables are emitted as int16 (n < 32768
+always holds here); gather sites widen back to int32.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.load_prop import pick_tile
 from ..kernels.ops import apsp
 from ..kernels.ref import BIG
+
+NH_DTYPE = jnp.int16
+
+
+def _block_n() -> int:
+    """Node count above which routing construction switches to the
+    destination-blocked scans (env-tunable, read at trace time)."""
+    return int(os.environ.get("REPRO_ROUTING_BLOCK_N", "160"))
+
+
+def _block_tile(n: int, batch: int) -> int:
+    env = os.environ.get("REPRO_ROUTING_TILE")
+    return int(env) if env else pick_tile(n, batch)
 
 
 def _edge_big(cost: jax.Array) -> jax.Array:
@@ -57,8 +80,52 @@ def _clamp_big(cost: jax.Array) -> jax.Array:
     return jnp.minimum(d, eye[None])
 
 
+def _minplus_blocked(a: jax.Array, b: jax.Array, tile: int) -> jax.Array:
+    """Row-and-contraction-blocked (min, +) product: same values as the
+    dense form but the transient is [B, tile, tile, n] instead of
+    [B, n, n, n]. Ragged edges are handled by clamped dynamic slices —
+    overlapping slabs recompute a few rows, which is idempotent under min.
+    """
+    B, n, _ = a.shape
+    m = b.shape[-1]
+    tile = max(1, min(tile, n))
+    nt = -(-n // tile)
+
+    def row_slab(_, i):
+        r0 = jnp.minimum(i * tile, n - tile)
+        ar = jax.lax.dynamic_slice_in_dim(a, r0, tile, 1)       # [B, T, n]
+
+        def w_slab(acc, k):
+            w0 = jnp.minimum(k * tile, n - tile)
+            aw = jax.lax.dynamic_slice_in_dim(ar, w0, tile, 2)  # [B, T, Tw]
+            bw = jax.lax.dynamic_slice_in_dim(b, w0, tile, 1)   # [B, Tw, m]
+            cand = jnp.min(aw[:, :, :, None] + bw[:, None, :, :], axis=2)
+            return jnp.minimum(acc, cand), None
+
+        acc, _ = jax.lax.scan(w_slab, jnp.full((B, tile, m), jnp.inf, a.dtype),
+                              jnp.arange(nt))
+        return None, (r0, acc)
+
+    _, (starts, rows) = jax.lax.scan(row_slab, None, jnp.arange(nt))
+
+    def place(i, out):
+        cur = jax.lax.dynamic_slice_in_dim(out, starts[i], tile, 1)
+        return jax.lax.dynamic_update_slice_in_dim(
+            out, jnp.minimum(rows[i], cur), starts[i], 1)
+
+    return jax.lax.fori_loop(0, nt, place,
+                             jnp.full((B, n, m), jnp.inf, a.dtype))
+
+
 def _minplus(a: jax.Array, b: jax.Array) -> jax.Array:
-    """Batched (min, +) product: out[b, u, d] = min_w a[b, u, w] + b[b, w, d]."""
+    """Batched (min, +) product: out[b, u, d] = min_w a[b, u, w] + b[b, w, d].
+
+    Dense broadcast for the small-n regime; destination/contraction-blocked
+    above ``REPRO_ROUTING_BLOCK_N`` nodes (shapes are static under jit, so
+    the branch resolves at trace time)."""
+    n = a.shape[-1]
+    if n > _block_n():
+        return _minplus_blocked(a, b, _block_tile(n, a.shape[0]))
     return jnp.min(a[:, :, :, None] + b[:, None, :, :], axis=2)
 
 
@@ -94,18 +161,7 @@ def distances_batch(cost: jax.Array, relay: jax.Array | None = None,
     return _relay_masked_distances_batch(cost, relay, n_iters)
 
 
-@jax.jit
-def lowest_id_next_hops_batch(cost: jax.Array, dist: jax.Array,
-                              relay: jax.Array) -> jax.Array:
-    """Batched next-hop selection with the reference's tie-breaking: for
-    every (u, d) pick the lowest-ID legal neighbor v minimizing
-    cost[u, v] + dist[v, d] (ties within TIE_TOL go to the lowest ID).
-
-    cost:  [B, n, n] with BIG non-edges (the diagonal must be BIG too — a
-    vertex is not its own neighbor); dist: [B, n, n]; relay: [B, n] bool.
-    Returns int32 [B, n, n] next-hop tables (next_hop[u, d] = u marks
-    "no route", next_hop[d, d] = d).
-    """
+def _lowest_id_next_hops_dense(cost, dist, relay):
     n = cost.shape[-1]
     ids = jnp.arange(n, dtype=jnp.int32)
     edge = cost < BIG * 0.5
@@ -117,9 +173,93 @@ def lowest_id_next_hops_batch(cost: jax.Array, dist: jax.Array,
     # The host compares score < best + TIE_TOL in float64; TIE_TOL (1e-12)
     # underflows float32 addition, and for exact (integer-valued) metrics
     # the rule is equivalent to score <= best — which IS exact in f32.
-    pick = jnp.argmax(scores <= best[:, :, None, :], axis=2).astype(jnp.int32)
+    pick = jnp.argmax(scores <= best[:, :, None, :], axis=2).astype(NH_DTYPE)
     take = (dist < BIG * 0.5) & (ids[:, None] != ids[None, :])[None]
-    return jnp.where(take, pick, ids[:, None][None])
+    return jnp.where(take, pick, ids.astype(NH_DTYPE)[:, None][None])
+
+
+def _lowest_id_next_hops_blocked(cost, dist, relay, tile):
+    """Destination-and-candidate-blocked twin of the dense selection: for
+    each [n, tile] destination slab, a first v-slab sweep finds the best
+    score and a second ascending sweep picks the first (lowest-ID) v that
+    attains it — the transient is [B, n, tile, tile] instead of
+    [B, n, n, n]. Clamped (overlapping) slabs are safe: the minimum is
+    idempotent, and the pick sweep keeps the first hit, which is the
+    lowest ID because no hit exists below it in any earlier slab."""
+    B, n, _ = cost.shape
+    ids = jnp.arange(n, dtype=jnp.int32)
+    edge = cost < BIG * 0.5
+    tile = max(1, min(tile, n))
+    nt = -(-n // tile)
+    d_starts = jnp.minimum(jnp.arange(nt) * tile, n - tile)
+
+    def slab(_, d0):
+        dids = d0 + jnp.arange(tile)
+        dcol = jax.lax.dynamic_slice_in_dim(dist, d0, tile, 2)  # [B, v, T]
+        e = ids[:, None] == dids[None, :]                       # [n, T] v==d
+
+        def v_scores(v0):
+            ec = jax.lax.dynamic_slice_in_dim(edge, v0, tile, 2)       # [B,u,Tv]
+            cc = jax.lax.dynamic_slice_in_dim(cost, v0, tile, 2)       # [B,u,Tv]
+            rl = jax.lax.dynamic_slice_in_dim(relay, v0, tile, 1)      # [B,Tv]
+            dc = jax.lax.dynamic_slice_in_dim(dcol, v0, tile, 1)       # [B,Tv,T]
+            ev = jax.lax.dynamic_slice_in_dim(e, v0, tile, 0)          # [Tv,T]
+            legal = ec[:, :, :, None] & (rl[:, None, :, None] | ev[None, None])
+            return jnp.where(legal, cc[:, :, :, None] + dc[:, None, :, :],
+                             BIG)                                # [B,u,Tv,T]
+
+        def vmin(acc, k):
+            v0 = jnp.minimum(k * tile, n - tile)
+            return jnp.minimum(acc, jnp.min(v_scores(v0), axis=2)), None
+
+        best, _ = jax.lax.scan(vmin, jnp.full((B, n, tile), BIG, cost.dtype),
+                               jnp.arange(nt))
+
+        def vpick(carry, k):
+            pick, found = carry
+            v0 = jnp.minimum(k * tile, n - tile)
+            hit = v_scores(v0) <= best[:, :, None, :]
+            any_hit = jnp.any(hit, axis=2)
+            local = jnp.argmax(hit, axis=2).astype(jnp.int32) + v0
+            pick = jnp.where(any_hit & ~found, local, pick)
+            return (pick, found | any_hit), None
+
+        (pick, _), _ = jax.lax.scan(
+            vpick, (jnp.zeros((B, n, tile), jnp.int32),
+                    jnp.zeros((B, n, tile), bool)), jnp.arange(nt))
+        take = (dcol < BIG * 0.5) & ~e[None]
+        nh = jnp.where(take, pick.astype(NH_DTYPE),
+                       ids.astype(NH_DTYPE)[:, None])
+        return None, nh
+
+    _, slabs = jax.lax.scan(slab, None, d_starts)               # [nt,B,n,T]
+
+    def place(i, out):
+        return jax.lax.dynamic_update_slice_in_dim(out, slabs[i],
+                                                   d_starts[i], 2)
+
+    return jax.lax.fori_loop(0, nt, place,
+                             jnp.zeros((B, n, n), NH_DTYPE))
+
+
+@jax.jit
+def lowest_id_next_hops_batch(cost: jax.Array, dist: jax.Array,
+                              relay: jax.Array) -> jax.Array:
+    """Batched next-hop selection with the reference's tie-breaking: for
+    every (u, d) pick the lowest-ID legal neighbor v minimizing
+    cost[u, v] + dist[v, d] (ties within TIE_TOL go to the lowest ID).
+
+    cost:  [B, n, n] with BIG non-edges (the diagonal must be BIG too — a
+    vertex is not its own neighbor); dist: [B, n, n]; relay: [B, n] bool.
+    Returns int16 [B, n, n] next-hop tables (next_hop[u, d] = u marks
+    "no route", next_hop[d, d] = d). Dense selection below
+    ``REPRO_ROUTING_BLOCK_N`` nodes, destination-blocked above.
+    """
+    n = cost.shape[-1]
+    if n > _block_n():
+        return _lowest_id_next_hops_blocked(
+            cost, dist, relay, _block_tile(n, cost.shape[0]))
+    return _lowest_id_next_hops_dense(cost, dist, relay)
 
 
 def next_hop_lowest_id_batch(cost, relay=None) -> np.ndarray:
@@ -134,21 +274,7 @@ def next_hop_lowest_id_batch(cost, relay=None) -> np.ndarray:
                                                 jnp.asarray(relay, bool)))
 
 
-@jax.jit
-def hops_next_hop_batch(adj: jax.Array) -> jax.Array:
-    """Specialized batched ``dijkstra_lowest_id`` tables for the fused
-    genome pipeline: hops metric, every vertex a relay (the free-form
-    optimizer case). adj: [B, n, n] bool. Produces tables identical to
-    ``next_hop_lowest_id_batch`` (asserted in tests) but much cheaper:
-
-    * hop distances by BFS frontier propagation — a while_loop of batched
-      0/1 *matmuls* (runs to the batch diameter, not a static bound);
-    * the lowest-ID argmin in ONE broadcast min-reduction via the exact
-      integer encoding score[v, d] = dist[v, d] * (n+1) + v: minimizing the
-      score over u's neighbors minimizes the hop distance first and the
-      neighbor ID second, and every value stays exactly representable in
-      f32 (< 2^24).
-    """
+def _hops_next_hop_dense(adj: jax.Array) -> jax.Array:
     B, n, _ = adj.shape
     a = adj.astype(jnp.float32)
     eye = jnp.eye(n, dtype=jnp.float32)[None]
@@ -176,8 +302,100 @@ def hops_next_hop_batch(adj: jax.Array) -> jax.Array:
     out = jnp.min(edge0[:, :, :, None] + score[:, None, :, :], axis=2)
     v = out - K * jnp.floor(out / K)
     take = (dist < BIG * 0.5) & ~(jnp.eye(n, dtype=bool)[None])
-    u_ids = jnp.arange(n, dtype=jnp.int32)[:, None]
-    return jnp.where(take, v.astype(jnp.int32), u_ids[None])
+    u_ids = jnp.arange(n, dtype=NH_DTYPE)[:, None]
+    return jnp.where(take, v.astype(NH_DTYPE), u_ids[None])
+
+
+def _hops_next_hop_blocked(adj: jax.Array, tile: int) -> jax.Array:
+    """Destination-blocked twin of the dense BFS-by-matmul construction:
+    each [n, tile] destination slab runs its own frontier while_loop
+    (stopping at that slab's eccentricity, not the batch diameter) with
+    [B, n, tile] state, and the lowest-ID selection streams candidate
+    slabs so the transient is [B, n, tile, tile]. Relies on the adjacency
+    being symmetric (the free-form genome graphs are undirected), which
+    lets the frontier grow from the *source* end of each column slab.
+    """
+    B, n, _ = adj.shape
+    a = adj.astype(jnp.float32)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    idf = ids.astype(jnp.float32)
+    K = jnp.float32(n + 1)
+    edge0 = jnp.where(adj, 0.0, BIG)
+    tile = max(1, min(tile, n))
+    nt = -(-n // tile)
+    d_starts = jnp.minimum(jnp.arange(nt) * tile, n - tile)
+
+    def slab(_, d0):
+        dids = d0 + jnp.arange(tile)
+        e = (ids[:, None] == dids[None, :]).astype(jnp.float32)  # [n, T]
+        acol = jax.lax.dynamic_slice_in_dim(a, d0, tile, 2)      # [B, v, T]
+        dist = jnp.where(e[None] > 0, 0.0,
+                         jnp.where(acol > 0, 1.0, BIG))
+        reach = jnp.minimum(acol + e[None], 1.0)
+
+        def cond(state):
+            k, changed, _, _ = state
+            return changed & (k < n)
+
+        def body(state):
+            k, _, dist, reach = state
+            nr = jnp.minimum(reach + jnp.matmul(a, reach), 1.0)
+            newly = (nr > 0) & (dist >= BIG * 0.5)
+            return (k + 1, jnp.any(newly),
+                    jnp.where(newly, k.astype(jnp.float32), dist), nr)
+
+        _, _, dist, _ = jax.lax.while_loop(
+            cond, body, (jnp.int32(2), jnp.bool_(True), dist, reach))
+
+        score = jnp.where(dist < BIG * 0.5, dist * K + idf[:, None], BIG)
+
+        def vmin(acc, k):
+            v0 = jnp.minimum(k * tile, n - tile)
+            ev = jax.lax.dynamic_slice_in_dim(edge0, v0, tile, 2)  # [B,u,Tv]
+            sv = jax.lax.dynamic_slice_in_dim(score, v0, tile, 1)  # [B,Tv,T]
+            cand = jnp.min(ev[:, :, :, None] + sv[:, None, :, :], axis=2)
+            return jnp.minimum(acc, cand), None
+
+        out, _ = jax.lax.scan(vmin, jnp.full((B, n, tile), 2 * BIG,
+                                             jnp.float32), jnp.arange(nt))
+        v = out - K * jnp.floor(out / K)
+        take = (dist < BIG * 0.5) & (e[None] == 0)
+        nh = jnp.where(take, v.astype(NH_DTYPE),
+                       ids.astype(NH_DTYPE)[:, None])
+        return None, nh
+
+    _, slabs = jax.lax.scan(slab, None, d_starts)
+
+    def place(i, out):
+        return jax.lax.dynamic_update_slice_in_dim(out, slabs[i],
+                                                   d_starts[i], 2)
+
+    return jax.lax.fori_loop(0, nt, place, jnp.zeros((B, n, n), NH_DTYPE))
+
+
+@jax.jit
+def hops_next_hop_batch(adj: jax.Array) -> jax.Array:
+    """Specialized batched ``dijkstra_lowest_id`` tables for the fused
+    genome pipeline: hops metric, every vertex a relay (the free-form
+    optimizer case). adj: [B, n, n] bool. Produces tables identical to
+    ``next_hop_lowest_id_batch`` (asserted in tests) but much cheaper:
+
+    * hop distances by BFS frontier propagation — a while_loop of batched
+      0/1 *matmuls* (runs to the batch diameter, not a static bound);
+    * the lowest-ID argmin in ONE broadcast min-reduction via the exact
+      integer encoding score[v, d] = dist[v, d] * (n+1) + v: minimizing the
+      score over u's neighbors minimizes the hop distance first and the
+      neighbor ID second, and every value stays exactly representable in
+      f32 (< 2^24).
+
+    Returns int16 tables. Above ``REPRO_ROUTING_BLOCK_N`` nodes the whole
+    construction runs destination-blocked (``_hops_next_hop_blocked``), so
+    no [B, n, n, n] selection tensor and no full-frontier state exist.
+    """
+    n = adj.shape[-1]
+    if n > _block_n():
+        return _hops_next_hop_blocked(adj, _block_tile(n, adj.shape[0]))
+    return _hops_next_hop_dense(adj)
 
 
 # ---------------------------------------------------------------------------

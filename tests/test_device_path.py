@@ -331,7 +331,7 @@ def test_population_bucketing_is_stable():
 
 
 def test_node_bucketing_is_stable():
-    from repro.dse.genomes import node_bucket
+    from repro.dse.genomes import NODE_TILE, node_bucket
     assert node_bucket(2) == 8
     assert node_bucket(8) == 8
     assert node_bucket(9) == 16
@@ -339,6 +339,38 @@ def test_node_bucketing_is_stable():
     assert node_bucket(16) == 16
     assert node_bucket(17) == 32
     assert node_bucket(64) == 64
+    # Large-n tier (ISSUE 6): tile multiples, not powers of two — a
+    # 576-chiplet HexaMesh pads to 576, not 1024 (3.2x memory otherwise).
+    assert node_bucket(33) == 48
+    assert node_bucket(144) == 144
+    assert node_bucket(250) == 256
+    assert node_bucket(576) == 576
+    for n in range(9, 600, 7):
+        b = node_bucket(n)
+        assert b >= n and b % NODE_TILE == 0
+        assert b - n < NODE_TILE
+
+
+def test_degree_cap_scan_cache_does_not_fragment():
+    """Repair's degree-cap candidate lists vary in length every call; the
+    pow2 bucketing must keep the jitted scan's compile cache to the few
+    ladder rungs actually hit (node_bucket's tile-16 padding must NOT leak
+    into this path — it would compile once per 16-wide rung)."""
+    space = AdjacencySpace(n_chiplets=24, max_degree=2)
+    rng = np.random.default_rng(0)
+    buckets = set()
+    from repro.opt.space import _pow2_bucket
+    for density in (0.15, 0.3, 0.45, 0.6, 0.75, 0.9, 1.0):
+        raw = (rng.random((4, space.genome_length)) < density).astype(np.int64)
+        over = space.degrees(raw) > space.max_degree
+        cand = ((raw == 1) & (over[:, space.pair_u] |
+                              over[:, space.pair_v])).any(axis=0)
+        if cand.any():
+            buckets.add(_pow2_bucket(int(cand.sum())))
+        space.repair(raw)
+    fn = getattr(space, "_cap_fn", None)
+    assert fn is not None and len(buckets) >= 1
+    assert fn._cache_size() == len(buckets)
 
 
 def test_parametric_spaces_share_one_compile_across_node_counts():

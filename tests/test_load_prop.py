@@ -118,7 +118,9 @@ def test_default_backend_dispatch(monkeypatch):
     monkeypatch.delenv("REPRO_LOAD_PROP_BACKEND")
     monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
     assert default_backend() == "pallas"
-    assert set(LOAD_PROP_BACKENDS) == {"pallas", "pallas_interpret", "xla"}
+    assert set(LOAD_PROP_BACKENDS) == {
+        "pallas", "pallas_interpret", "xla",
+        "pallas_tiled", "pallas_tiled_interpret", "xla_blocked"}
 
 
 def test_edge_flows_default_path_uses_primitive():

@@ -1,0 +1,403 @@
+"""Large-n tier (ISSUE 6): destination-tiled kernels, blocked routing
+construction, and the hierarchical cluster-then-stitch fast path, all pinned
+against the dense oracles — including ragged (non-dividing) tiles, adaptive
+and fixed hop bounds, disconnected graphs, and the int16 table contract."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.core  # noqa: F401  (routing imports core lazily; break the cycle)
+from repro.kernels.ops import apsp, load_propagate
+from repro.routing.device import (
+    NH_DTYPE,
+    _hops_next_hop_blocked,
+    _hops_next_hop_dense,
+    _lowest_id_next_hops_blocked,
+    _lowest_id_next_hops_dense,
+    _minplus_blocked,
+    hops_next_hop_batch,
+    next_hop_lowest_id_batch,
+)
+from repro.routing.hierarchical import (
+    band_clusters,
+    boundary_nodes,
+    grid_clusters,
+    hierarchical_hops_dist,
+    hops_next_hop_auto,
+    hops_next_hop_hierarchical,
+    use_clusters,
+)
+
+
+def _random_adj(n: int, rng: np.random.Generator,
+                connected: bool = True) -> np.ndarray:
+    """Random symmetric adjacency; a spanning tree first when connected."""
+    adj = np.zeros((n, n), bool)
+    if connected:
+        perm = rng.permutation(n)
+        for i in range(1, n):
+            j = perm[rng.integers(0, i)]
+            adj[perm[i], j] = adj[j, perm[i]] = True
+    for _ in range(2 * n):
+        u, v = rng.integers(0, n, 2)
+        if u != v:
+            adj[u, v] = adj[v, u] = True
+    return adj
+
+
+def _random_table(n: int, rng: np.random.Generator):
+    adj = _random_adj(n, rng)
+    nh = np.asarray(hops_next_hop_batch(jnp.asarray(adj[None])))[0]
+    t = rng.random((n, n)).astype(np.float32)
+    np.fill_diagonal(t, 0.0)
+    return nh, t
+
+
+def _load0(t: np.ndarray) -> np.ndarray:
+    l0 = t.T.copy()
+    np.fill_diagonal(l0, 0.0)
+    return l0.astype(np.float32)
+
+
+def _scipy_dist(adj: np.ndarray) -> np.ndarray:
+    sp = pytest.importorskip("scipy.sparse.csgraph")
+    return sp.shortest_path(adj.astype(np.float64), method="D",
+                            unweighted=True)
+
+
+# ---------------------------------------------------------------------------
+# tiled load propagation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("adaptive", [True, False])
+@pytest.mark.parametrize("tile", [3, 4, 5, 16])
+def test_xla_blocked_matches_dense_ragged_tiles(monkeypatch, tile, adaptive):
+    """xla_blocked must bit-match the dense loop for tiles that do and do
+    not divide n, including a disconnected design whose traffic never
+    drains."""
+    monkeypatch.setenv("REPRO_LOAD_PROP_TILE", str(tile))
+    rng = np.random.default_rng(10 + tile)
+    for n in (7, 13, 20):
+        nh, t = _random_table(n, rng)
+        if n == 13:   # disconnected variant: every pair unreachable
+            nh = np.tile(np.arange(n, dtype=nh.dtype)[:, None], (1, n))
+        l0 = jnp.asarray(_load0(t))
+        w_d, f_d = load_propagate(jnp.asarray(nh), l0, backend="xla",
+                                  adaptive=adaptive)
+        w_b, f_b = load_propagate(jnp.asarray(nh), l0, backend="xla_blocked",
+                                  adaptive=adaptive)
+        np.testing.assert_allclose(np.asarray(w_b), np.asarray(w_d),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(f_b), np.asarray(f_d),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_pallas_tiled_interpret_matches_dense(monkeypatch):
+    """The tiled Pallas kernel (interpret mode on CPU) against the dense
+    XLA loop; tiles are pow2 so they always divide the lane padding."""
+    monkeypatch.delenv("REPRO_LOAD_PROP_TILE", raising=False)
+    rng = np.random.default_rng(2)
+    for n, tile in ((9, 32), (17, 64)):
+        monkeypatch.setenv("REPRO_LOAD_PROP_TILE", str(tile))
+        nh, t = _random_table(n, rng)
+        l0 = jnp.asarray(_load0(t))
+        w_d, f_d = load_propagate(jnp.asarray(nh), l0, backend="xla",
+                                  adaptive=False)
+        w_p, f_p = load_propagate(jnp.asarray(nh), l0,
+                                  backend="pallas_tiled_interpret")
+        np.testing.assert_allclose(np.asarray(w_p), np.asarray(w_d),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(f_p), np.asarray(f_d),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_load_prop_promotion_above_fused_n(monkeypatch):
+    """Dense backends silently promote to their tiled twins above
+    REPRO_LOAD_PROP_FUSED_N without changing results."""
+    monkeypatch.setenv("REPRO_LOAD_PROP_FUSED_N", "8")
+    rng = np.random.default_rng(3)
+    nh, t = _random_table(12, rng)
+    l0 = jnp.asarray(_load0(t))
+    w_p, f_p = load_propagate(jnp.asarray(nh), l0, backend="xla")  # promoted
+    monkeypatch.setenv("REPRO_LOAD_PROP_FUSED_N", "1000")
+    w_d, f_d = load_propagate(jnp.asarray(nh), l0, backend="xla")
+    np.testing.assert_allclose(np.asarray(w_p), np.asarray(w_d),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(f_p), np.asarray(f_d),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# blocked APSP
+# ---------------------------------------------------------------------------
+
+def _random_cost(n: int, rng: np.random.Generator) -> np.ndarray:
+    adj = _random_adj(n, rng, connected=False)
+    cost = np.where(adj, rng.integers(1, 5, (n, n)).astype(np.float32),
+                    np.inf)
+    cost = np.minimum(cost, cost.T)
+    return cost
+
+
+@pytest.mark.parametrize("tile", [3, 5, 16])
+def test_apsp_xla_blocked_matches_dense(monkeypatch, tile):
+    monkeypatch.setenv("REPRO_APSP_TILE", str(tile))
+    rng = np.random.default_rng(20 + tile)
+    for n in (7, 13, 20):
+        d = jnp.asarray(np.stack([_random_cost(n, rng) for _ in range(2)]))
+        out_d = np.asarray(apsp(d, backend="xla"))
+        out_b = np.asarray(apsp(d, backend="xla_blocked"))
+        np.testing.assert_allclose(out_b, out_d, rtol=1e-5, atol=1e-6)
+
+
+def test_apsp_pallas_tiled_interpret_matches_dense(monkeypatch):
+    monkeypatch.setenv("REPRO_APSP_TILE", "32")
+    rng = np.random.default_rng(21)
+    d = jnp.asarray(_random_cost(11, rng))
+    out_d = np.asarray(apsp(d, backend="xla"))
+    out_p = np.asarray(apsp(d, backend="pallas_tiled_interpret"))
+    np.testing.assert_allclose(out_p, out_d, rtol=1e-5, atol=1e-6)
+
+
+def test_apsp_promotion_above_fused_n(monkeypatch):
+    monkeypatch.setenv("REPRO_APSP_FUSED_N", "8")
+    rng = np.random.default_rng(22)
+    d = jnp.asarray(_random_cost(12, rng))
+    out_p = np.asarray(apsp(d, backend="xla"))       # promoted to blocked
+    monkeypatch.setenv("REPRO_APSP_FUSED_N", "1000")
+    out_d = np.asarray(apsp(d, backend="xla"))
+    np.testing.assert_allclose(out_p, out_d, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# blocked routing construction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tile", [3, 5, 8])
+def test_blocked_routing_bitidentical_to_dense(tile):
+    """The destination-blocked selection and BFS must reproduce the dense
+    tables bit for bit (ragged tiles included) and keep the int16 dtype."""
+    from repro.kernels.ref import BIG
+
+    rng = np.random.default_rng(30 + tile)
+    for n in (7, 13):
+        adjs = np.stack([_random_adj(n, rng, connected=bool(i % 2))
+                         for i in range(3)])
+        adj = jnp.asarray(adjs)
+        nh_d = _hops_next_hop_dense(adj)
+        nh_b = _hops_next_hop_blocked(adj, tile)
+        assert nh_b.dtype == NH_DTYPE
+        np.testing.assert_array_equal(np.asarray(nh_b), np.asarray(nh_d))
+
+        cost = jnp.where(adj, 1.0, BIG)
+        eye = jnp.where(jnp.eye(n, dtype=bool), BIG, 0.0)
+        cost = jnp.maximum(cost, eye[None])
+        dist = apsp(jnp.where(adj, 1.0, jnp.inf))
+        dist = jnp.minimum(jnp.where(jnp.isfinite(dist), dist, BIG), BIG)
+        relay = jnp.ones((3, n), bool)
+        sel_d = _lowest_id_next_hops_dense(cost, dist, relay)
+        sel_b = _lowest_id_next_hops_blocked(cost, dist, relay, tile)
+        assert sel_b.dtype == NH_DTYPE
+        np.testing.assert_array_equal(np.asarray(sel_b), np.asarray(sel_d))
+
+
+def test_minplus_blocked_matches_dense():
+    rng = np.random.default_rng(31)
+    for n, tile in ((6, 4), (13, 5), (16, 16)):
+        a = jnp.asarray(rng.random((2, n, n)).astype(np.float32))
+        b = jnp.asarray(rng.random((2, n, n)).astype(np.float32))
+        dense = jnp.min(a[:, :, :, None] + b[:, None, :, :], axis=2)
+        blocked = _minplus_blocked(a, b, tile)
+        np.testing.assert_allclose(np.asarray(blocked), np.asarray(dense),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_blocked_dispatch_end_to_end(monkeypatch):
+    """Force the env thresholds so the public entries take the blocked path
+    and compare against host Dijkstra distances. The public entries read the
+    env at trace time, so the jit cache is cleared around the override."""
+    rng = np.random.default_rng(32)
+    n = 9
+    adj = _random_adj(n, rng)
+    expected = np.asarray(hops_next_hop_batch(jnp.asarray(adj[None])))[0]
+
+    jax.clear_caches()
+    monkeypatch.setenv("REPRO_ROUTING_BLOCK_N", "4")
+    monkeypatch.setenv("REPRO_ROUTING_TILE", "5")
+    try:
+        got = np.asarray(hops_next_hop_batch(jnp.asarray(adj[None])))[0]
+        np.testing.assert_array_equal(got, expected)
+        assert got.dtype == np.int16
+
+        cost = np.where(adj, 1.0, np.inf).astype(np.float32)
+        nh2 = next_hop_lowest_id_batch(jnp.asarray(cost[None]))[0]
+        np.testing.assert_array_equal(nh2, expected)
+
+        # routed hop counts through the emitted table match Dijkstra
+        from repro.core.latency import path_cost_doubling
+
+        hops = np.array(path_cost_doubling(
+            jnp.asarray(got), jnp.ones((n, n), jnp.float32),
+            jnp.zeros((n,), jnp.float32)))
+        np.fill_diagonal(hops, 0.0)
+        np.testing.assert_allclose(hops, _scipy_dist(adj))
+    finally:
+        jax.clear_caches()   # drop programs traced with the tiny threshold
+
+
+def test_int16_tables_flow_through_latency_proxy():
+    """path_cost_doubling must accept the int16 tables (widening at the
+    gather sites) and agree with the int32 result exactly."""
+    from repro.core.latency import path_cost_doubling
+
+    rng = np.random.default_rng(33)
+    nh, t = _random_table(10, rng)
+    assert nh.dtype == np.int16
+    sc = rng.random((10, 10)).astype(np.float32)
+    nw = rng.random(10).astype(np.float32)
+    out16 = np.asarray(path_cost_doubling(jnp.asarray(nh), jnp.asarray(sc),
+                                          jnp.asarray(nw)))
+    out32 = np.asarray(path_cost_doubling(
+        jnp.asarray(nh.astype(np.int32)), jnp.asarray(sc), jnp.asarray(nw)))
+    np.testing.assert_array_equal(out16, out32)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical cluster-then-stitch
+# ---------------------------------------------------------------------------
+
+def _mesh_adj(rows: int, cols: int) -> np.ndarray:
+    n = rows * cols
+    adj = np.zeros((n, n), bool)
+    for r in range(rows):
+        for c in range(cols):
+            u = r * cols + c
+            if c + 1 < cols:
+                adj[u, u + 1] = adj[u + 1, u] = True
+            if r + 1 < rows:
+                adj[u, u + cols] = adj[u + cols, u] = True
+    return adj
+
+
+def _clique_ring(k: int, m: int) -> tuple[np.ndarray, np.ndarray]:
+    """k cliques of m nodes joined in a ring — a coarse boundary (2 gateway
+    nodes per cluster) where the hierarchical path genuinely wins."""
+    n = k * m
+    adj = np.zeros((n, n), bool)
+    for c in range(k):
+        s = c * m
+        adj[s:s + m, s:s + m] = True
+        t = ((c + 1) % k) * m
+        adj[s + m - 1, t] = adj[t, s + m - 1] = True
+    np.fill_diagonal(adj, False)
+    return adj, band_clusters(n, m)
+
+
+def test_hierarchical_distances_exact_any_clustering():
+    """Stitched distances are exact for arbitrary graphs and arbitrary
+    clusterings (including disconnected graphs), per the decomposition
+    argument in the module docstring."""
+    rng = np.random.default_rng(40)
+    for n in (9, 14, 20):
+        for connected in (True, False):
+            adj = _random_adj(n, rng, connected=connected)
+            clusters = rng.integers(0, 4, n).astype(np.int32)
+            dist = hierarchical_hops_dist(adj, clusters)
+            np.testing.assert_allclose(dist, _scipy_dist(adj))
+
+
+def test_hierarchical_tables_bitidentical_on_mesh():
+    adj = _mesh_adj(6, 6)
+    clusters = grid_clusters(6, 6, 2, 3)
+    flat = np.asarray(hops_next_hop_batch(jnp.asarray(adj[None])))[0]
+    hier = hops_next_hop_hierarchical(adj, clusters)
+    assert hier.dtype == np.int16
+    np.testing.assert_array_equal(hier, flat)
+
+
+def test_hierarchical_tables_bitidentical_on_clique_ring():
+    adj, clusters = _clique_ring(6, 6)
+    assert use_clusters(adj, clusters)   # 2/6 of each cluster on boundary
+    flat = np.asarray(hops_next_hop_batch(jnp.asarray(adj[None])))[0]
+    hier = hops_next_hop_auto(adj, clusters)
+    np.testing.assert_array_equal(hier, flat)
+
+
+def test_auto_falls_back_to_flat_when_boundary_is_wide():
+    """A fine mesh clustering puts most nodes on a boundary; the heuristic
+    must decline and the auto path must emit the flat oracle's table."""
+    adj = _mesh_adj(6, 6)
+    clusters = grid_clusters(6, 6, 3, 3)
+    assert not use_clusters(adj, clusters)
+    assert len(boundary_nodes(adj, clusters)) == 20
+    flat = np.asarray(hops_next_hop_batch(jnp.asarray(adj[None])))[0]
+    np.testing.assert_array_equal(hops_next_hop_auto(adj, clusters), flat)
+    np.testing.assert_array_equal(hops_next_hop_auto(adj, None), flat)
+
+
+def test_hierarchical_disconnected_clusters():
+    """Clusters with no inter-cluster edges at all (g == 0)."""
+    adj = np.zeros((8, 8), bool)
+    adj[0:4, 0:4] = True
+    adj[4:8, 4:8] = True
+    np.fill_diagonal(adj, False)
+    clusters = band_clusters(8, 4)
+    dist = hierarchical_hops_dist(adj, clusters)
+    np.testing.assert_allclose(dist, _scipy_dist(adj))
+    flat = np.asarray(hops_next_hop_batch(jnp.asarray(adj[None])))[0]
+    np.testing.assert_array_equal(
+        hops_next_hop_hierarchical(adj, clusters), flat)
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis is a test extra; deterministic tests above
+# cover the same invariants when it is absent)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(5, 24), st.integers(2, 17), st.booleans(),
+           st.integers(0, 10_000))
+    def test_property_tiled_load_prop_matches_dense(n, tile, adaptive, seed):
+        rng = np.random.default_rng(seed)
+        nh, t = _random_table(n, rng)
+        l0 = jnp.asarray(_load0(t))
+        import os
+        os.environ["REPRO_LOAD_PROP_TILE"] = str(tile)
+        try:
+            w_b, f_b = load_propagate(jnp.asarray(nh), l0,
+                                      backend="xla_blocked",
+                                      adaptive=adaptive)
+        finally:
+            del os.environ["REPRO_LOAD_PROP_TILE"]
+        w_d, f_d = load_propagate(jnp.asarray(nh), l0, backend="xla",
+                                  adaptive=adaptive)
+        np.testing.assert_allclose(np.asarray(w_b), np.asarray(w_d),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(f_b), np.asarray(f_d),
+                                   rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(5, 24), st.integers(2, 17), st.booleans(),
+           st.integers(0, 10_000))
+    def test_property_blocked_routing_matches_dense(n, tile, connected, seed):
+        rng = np.random.default_rng(seed)
+        adj = jnp.asarray(_random_adj(n, rng, connected=connected)[None])
+        np.testing.assert_array_equal(
+            np.asarray(_hops_next_hop_blocked(adj, min(tile, n))),
+            np.asarray(_hops_next_hop_dense(adj)))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(5, 20), st.integers(1, 5), st.integers(0, 10_000))
+    def test_property_hierarchical_distances_exact(n, n_clusters, seed):
+        rng = np.random.default_rng(seed)
+        adj = _random_adj(n, rng, connected=bool(seed % 2))
+        clusters = rng.integers(0, n_clusters, n).astype(np.int32)
+        np.testing.assert_allclose(hierarchical_hops_dist(adj, clusters),
+                                   _scipy_dist(adj))
+except ImportError:  # pragma: no cover - hypothesis is a test extra
+    pass
