@@ -188,6 +188,63 @@ def run_cost_function(space, pop_size: int, n_calls: int):
     return out
 
 
+def run_telemetry(space, pop_size: int, ab_gens: int,
+                  traced_gens: int) -> dict:
+    """The ISSUE 7 telemetry record: (a) the cost of full tracing, as an
+    interleaved traced/untraced A/B on one optimizer (same jit caches, same
+    co-tenant pressure; median seconds per mode), and (b) the derived
+    telemetry block — async overlap %, cache hit rate, compile/dispatch
+    counts, per-generation latency — from a fully traced async run.
+    ``trace_overhead_pct`` is gated at <= 3% by ``python -m repro.obs
+    --check --bench`` in CI."""
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import report as obs_report
+    from repro.obs.trace import TRACER
+
+    # -- (a) tracing overhead A/B ------------------------------------------
+    evaluator = PopulationEvaluator(
+        space, budgets=Budgets(max_interposer_area=AREA_BUDGET),
+        device_path=True)
+    opt = EvolutionarySearch(space, evaluator, seed=0, pop_size=pop_size)
+    _fresh_caches()
+    opt.step()                      # warm-up: jit compiles, cold caches
+    times = {"traced": [], "untraced": []}
+    for i in range(2 * ab_gens):
+        traced = i % 2 == 0
+        if traced:
+            TRACER.enable(clear=True)
+        t0 = time.perf_counter()
+        opt.step()
+        times["traced" if traced else "untraced"].append(
+            time.perf_counter() - t0)
+        TRACER.disable()
+    med_traced = _median(times["traced"])
+    med_untraced = _median(times["untraced"])
+    overhead_pct = max(0.0, (med_traced / med_untraced - 1.0) * 100.0)
+    print(f"telemetry: full tracing costs {overhead_pct:.2f}% "
+          f"({med_traced * 1e3:.2f}ms vs {med_untraced * 1e3:.2f}ms per "
+          f"generation, medians over {ab_gens} interleaved gens each)")
+
+    # -- (b) fully traced async run -> derived telemetry block -------------
+    obs_metrics.reset()             # zero series in place; clean block
+    TRACER.enable(clear=True)
+    try:
+        run_opt_timed_generations(space, traced_gens, pop_size,
+                                  device_path=True, use_async=True)
+    finally:
+        TRACER.disable()
+    block = obs_report.telemetry(obs_metrics.snapshot())
+    block["trace_overhead_pct"] = round(overhead_pct, 2)
+    block["trace_overhead_ab"] = {
+        "generations_per_mode": ab_gens,
+        "traced_s_per_gen": round(med_traced, 5),
+        "untraced_s_per_gen": round(med_untraced, 5)}
+    if block["async_overlap_pct"] is not None:
+        print(f"telemetry: async overlap {block['async_overlap_pct']}% "
+              f"of host bookkeeping hidden under in-flight device calls")
+    return block
+
+
 def run_scaling_cell(chiplets: int, pop: int, gens: int,
                      use_async: bool) -> dict:
     """One (population, driver-mode) cell of the scaling record on the
@@ -612,6 +669,12 @@ def main(argv=None):
           f"device {cost_fn_big['device']['evals_per_s']} evals/s "
           f"-> {cost_fn_big['speedup']}x")
 
+    # -- observability record (ISSUE 7): tracing overhead + the derived
+    # telemetry block from a fully traced async run --
+    telemetry = run_telemetry(adj_space, pop_size,
+                              ab_gens=5 if args.smoke else 9,
+                              traced_gens=4 if args.smoke else 8)
+
     # -- large-n scaling table (ISSUE 6): hundreds-of-chiplet designs
     # through the tiled/blocked tier, one subprocess per n for clean RSS --
     large_n = None
@@ -666,6 +729,7 @@ def main(argv=None):
         "cost_function": cost_fn,
         "cost_function_batch_pop": big_pop,
         "cost_function_batch": cost_fn_big,
+        "telemetry": telemetry,
         "large_n": large_n if large_n is not None
         else (committed or {}).get("large_n"),
         # legacy field: the default path is now the device pipeline

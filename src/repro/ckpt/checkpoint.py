@@ -28,6 +28,12 @@ import jax
 import ml_dtypes
 import numpy as np
 
+from ..obs.log import get_logger
+from ..obs.trace import span as _span
+from ..utils.version import check_version_stamp, version_stamp
+
+_LOG = get_logger("ckpt")
+
 _SHARD_BYTES = 512 * 1024 * 1024
 
 # npz cannot serialize ml_dtypes (bfloat16, fp8); store them as raw uint
@@ -54,8 +60,14 @@ def _flatten(tree):
     return leaves, treedef
 
 
-def save_checkpoint(directory: str, step: int, tree, keep_last: int = 3
-                    ) -> str:
+def save_checkpoint(directory: str, step: int, tree, keep_last: int = 3,
+                    config_hash: str | None = None) -> str:
+    with _span("ckpt.save", step=step):
+        return _save_checkpoint(directory, step, tree, keep_last,
+                                config_hash)
+
+
+def _save_checkpoint(directory, step, tree, keep_last, config_hash) -> str:
     leaves, treedef = _flatten(tree)
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step}")
@@ -65,7 +77,8 @@ def save_checkpoint(directory: str, step: int, tree, keep_last: int = 3
     os.makedirs(tmp)
 
     manifest = {"step": step, "treedef": str(treedef),
-                "n_leaves": len(leaves), "shards": [], "dtypes": {}}
+                "n_leaves": len(leaves), "shards": [], "dtypes": {},
+                "versions": version_stamp(config_hash)}
     shard, shard_bytes, shard_idx = {}, 0, 0
 
     def flush():
@@ -136,10 +149,13 @@ def latest_step(directory: str) -> int | None:
 
 
 def restore_checkpoint(directory: str, tree_like, step: int | None = None,
-                       shardings=None):
+                       shardings=None, config_hash: str | None = None):
     """Restore into the structure of ``tree_like``. ``shardings`` (optional
     pytree of NamedSharding) re-shards onto the current mesh — restoring a
-    512-chip checkpoint onto 1 CPU or vice versa is the elastic path."""
+    512-chip checkpoint onto 1 CPU or vice versa is the elastic path.
+    A repro/jax/config-hash mismatch against the manifest's version stamp
+    warns (resuming across versions is legitimate for elastic restarts)
+    rather than failing."""
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -147,6 +163,10 @@ def restore_checkpoint(directory: str, tree_like, step: int | None = None,
     d = os.path.join(directory, f"step_{step}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
+    for problem in check_version_stamp(manifest.get("versions"),
+                                       config_hash=config_hash,
+                                       what=f"checkpoint step_{step}"):
+        _LOG.warning(f"[ckpt] restore warning: {problem}")
     leaves, treedef = _flatten(tree_like)
     if manifest["n_leaves"] != len(leaves):
         raise ValueError(
@@ -173,20 +193,23 @@ class CheckpointManager:
     """Convenience wrapper: periodic save + resume + preemption save."""
 
     def __init__(self, directory: str, interval: int = 100,
-                 keep_last: int = 3):
+                 keep_last: int = 3, config_hash: str | None = None):
         self.directory = directory
         self.interval = interval
         self.keep_last = keep_last
+        self.config_hash = config_hash
 
     def maybe_save(self, step: int, tree, force: bool = False):
         if force or (step > 0 and step % self.interval == 0):
             return save_checkpoint(self.directory, step, tree,
-                                   self.keep_last)
+                                   self.keep_last,
+                                   config_hash=self.config_hash)
         return None
 
     def restore_or_init(self, tree_like, shardings=None):
         try:
             return restore_checkpoint(self.directory, tree_like,
-                                      shardings=shardings)
+                                      shardings=shardings,
+                                      config_hash=self.config_hash)
         except FileNotFoundError:
             return tree_like, -1

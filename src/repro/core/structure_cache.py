@@ -25,6 +25,15 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Hashable
 
+from ..obs import metrics as _metrics
+
+# Process-wide telemetry series (repro.obs): unlike the per-instance
+# hits/misses attributes these survive cache clears, so a run report shows
+# cumulative cache behaviour even across benchmark phases.
+_HIT_COUNTER = _metrics.counter("structure_cache.hit")
+_MISS_COUNTER = _metrics.counter("structure_cache.miss")
+_EVICT_COUNTER = _metrics.counter("structure_cache.evict")
+
 
 @dataclass
 class StructureEntry:
@@ -79,9 +88,11 @@ class StructureCache:
             entry = self._entries.get(key)
             if entry is None:
                 self.misses += 1
+                _MISS_COUNTER.inc()
                 return None
             self._entries.move_to_end(key)
             self.hits += 1
+            _HIT_COUNTER.inc()
             return entry
 
     def put(self, key: Hashable, entry: StructureEntry) -> StructureEntry:
@@ -97,6 +108,7 @@ class StructureCache:
                                      self._total_bytes > self.max_bytes):
                 old_key, _ = self._entries.popitem(last=False)
                 self._total_bytes -= self._nbytes.pop(old_key, 0)
+                _EVICT_COUNTER.inc()
         return entry
 
     def get_or_build(self, key: Hashable,

@@ -30,8 +30,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core.latency import latency_proxy, path_cost_doubling
 from ..core.throughput import throughput_proxy
+from ..obs.log import get_logger
+from ..obs.trace import span as _span
 from .batch import DesignBatch, encode_designs
 from .sweep import DesignPoint
+
+_LOG = get_logger("dse")
 
 
 @dataclass
@@ -159,17 +163,18 @@ class DseEngine:
 
     def evaluate_batch(self, batch: DesignBatch) -> DseResult:
         from ..core.latency import num_doubling_steps
-        padded, b_real = self._pad_chunk(batch)
-        sharding = NamedSharding(self.mesh, P("data"))
-        args = [jax.device_put(np.asarray(x), sharding) for x in
-                (padded.next_hop, padded.step_cost, padded.node_weight,
-                 padded.adj_bw, padded.traffic)]
-        n_steps = num_doubling_steps(padded.n)
-        lat, thr = batched_evaluate(*args, n_steps=n_steps,
-                                    max_hops=padded.max_hops)
-        return DseResult(latency=np.asarray(lat)[:b_real],
-                         throughput=np.asarray(thr)[:b_real],
-                         points=batch.points)
+        with _span("dse.evaluate_batch", b=batch.size, n=batch.n):
+            padded, b_real = self._pad_chunk(batch)
+            sharding = NamedSharding(self.mesh, P("data"))
+            args = [jax.device_put(np.asarray(x), sharding) for x in
+                    (padded.next_hop, padded.step_cost, padded.node_weight,
+                     padded.adj_bw, padded.traffic)]
+            n_steps = num_doubling_steps(padded.n)
+            lat, thr = batched_evaluate(*args, n_steps=n_steps,
+                                        max_hops=padded.max_hops)
+            return DseResult(latency=np.asarray(lat)[:b_real],
+                             throughput=np.asarray(thr)[:b_real],
+                             points=batch.points)
 
     def evaluate_points(self, points: list[DesignPoint],
                         validate: bool = False, n_pad: int | None = None,
@@ -203,9 +208,10 @@ class DseEngine:
         for row in rows:
             results[row["index"]] = (row["latency"], row["throughput"])
         if self.checkpoint_path:
-            with open(self.checkpoint_path, "a") as f:
-                for row in rows:
-                    f.write(json.dumps(row) + "\n")
+            with _span("dse.checkpoint", rows=len(rows)):
+                with open(self.checkpoint_path, "a") as f:
+                    for row in rows:
+                        f.write(json.dumps(row) + "\n")
 
     def run(self, points: list[DesignPoint], validate: bool = False,
             progress: bool = False) -> DseResult:
@@ -222,12 +228,13 @@ class DseEngine:
                   for i in range(0, len(todo), self.chunk_size)]
 
         def encode(chunk):
-            return encode_designs(chunk, validate=validate)
+            with _span("dse.encode", b=len(chunk)):
+                return encode_designs(chunk, validate=validate)
 
         def report(ci):
-            if progress:
-                done = min((ci + 1) * self.chunk_size, len(todo))
-                print(f"[dse] {done}/{len(todo)} designs evaluated")
+            done = min((ci + 1) * self.chunk_size, len(todo))
+            _LOG.log("info" if progress else "debug",
+                     f"[dse] {done}/{len(todo)} designs evaluated")
 
         if self.prefetch and len(chunks) > 1:
             with ThreadPoolExecutor(max_workers=1) as pool:

@@ -64,17 +64,23 @@ from ..core.latency import num_doubling_steps
 from ..core.reports import ReportArrays
 from ..kernels.ops import load_propagate
 from ..kernels.ref import BIG
+from ..obs import metrics as _metrics
+from ..obs.trace import span as _span
 from ..routing.device import hops_next_hop_batch
 from ..utils.jaxcompat import shard_map
 
 # Trace-time compile probe: key -> number of jit traces. One generation after
 # another must reuse the same compiled program, so each key stays at 1 for a
-# whole run (asserted in tests/test_device_path.py).
+# whole run (asserted in tests/test_device_path.py). The same events also
+# land in the repro.obs metrics registry (the ``jit.compile`` counter
+# series), where the run report and BENCH telemetry read them.
 COMPILE_COUNTS: dict[tuple, int] = defaultdict(int)
 
 
 def _note_compile(key: tuple) -> None:
     COMPILE_COUNTS[key] += 1
+    _metrics.counter("jit.compile", fn=f"genomes.{key[0]}",
+                     shape="/".join(str(k) for k in key[1:])).inc()
 
 
 def reset_compile_counts() -> None:
@@ -496,32 +502,36 @@ class AdjacencyPipeline:
         ``result()`` materializes metrics + host reports."""
         genomes = np.asarray(genomes, np.int64)
         Pn = len(genomes)
-        deg = self.space.degrees(genomes)
-        if deg.max(initial=0) > self.k_phys:
-            raise ValueError(
-                f"genome exceeds the repaired degree bound "
-                f"({int(deg.max())} > {self.k_phys}); repair genomes before "
-                f"evaluate_genomes")
-        ndev = int(np.prod(list(self.mesh.shape.values())))
-        bp = bucket_population(Pn, ndev)
-        padded = genomes
-        if bp != Pn:
-            padded = np.concatenate(
-                [genomes, np.repeat(genomes[-1:], bp - Pn, axis=0)], axis=0)
-        bits = jax.device_put(jnp.asarray(padded % 2, jnp.int32),
-                              NamedSharding(self.mesh, P("data")))
-        lat, thr, len_sum = self._eval(
-            bits, self._pair_u, self._pair_v, self._pair_id,
-            self._chain_slot, self._chain_eslot, self._inv_j, self._inv_c,
-            self._col, self._row, self._side, self._phyx, self._phyy,
-            self._cphyx, self._cphyy, self._bw, self._traffic, self._consts)
+        with _span("genomes.dispatch", space="adjacency", pop=Pn, n=self.n):
+            deg = self.space.degrees(genomes)
+            if deg.max(initial=0) > self.k_phys:
+                raise ValueError(
+                    f"genome exceeds the repaired degree bound "
+                    f"({int(deg.max())} > {self.k_phys}); repair genomes "
+                    f"before evaluate_genomes")
+            ndev = int(np.prod(list(self.mesh.shape.values())))
+            bp = bucket_population(Pn, ndev)
+            padded = genomes
+            if bp != Pn:
+                padded = np.concatenate(
+                    [genomes, np.repeat(genomes[-1:], bp - Pn, axis=0)],
+                    axis=0)
+            bits = jax.device_put(jnp.asarray(padded % 2, jnp.int32),
+                                  NamedSharding(self.mesh, P("data")))
+            lat, thr, len_sum = self._eval(
+                bits, self._pair_u, self._pair_v, self._pair_id,
+                self._chain_slot, self._chain_eslot, self._inv_j,
+                self._inv_c, self._col, self._row, self._side, self._phyx,
+                self._phyy, self._cphyx, self._cphyy, self._bw,
+                self._traffic, self._consts)
 
         def finish() -> GenomeEvalResult:
-            reports = self._report_arrays(genomes, deg,
-                                          np.asarray(len_sum)[:Pn])
-            return GenomeEvalResult(latency=np.asarray(lat)[:Pn],
-                                    throughput=np.asarray(thr)[:Pn],
-                                    reports=reports)
+            with _span("genomes.finish", space="adjacency", pop=Pn):
+                reports = self._report_arrays(genomes, deg,
+                                              np.asarray(len_sum)[:Pn])
+                return GenomeEvalResult(latency=np.asarray(lat)[:Pn],
+                                        throughput=np.asarray(thr)[:Pn],
+                                        reports=reports)
 
         return PendingGenomeEval(finish)
 
@@ -672,33 +682,41 @@ class ParametricPipeline:
         """Dispatch one sharded proxy call for the population (structures
         built/gathered on the host first) without blocking on the device."""
         genomes = self.space.repair(np.asarray(genomes, np.int64))
-        keys = [self._key_of(g) for g in genomes]
-        self._ensure(keys)
-        sids = np.asarray([self._sid[k] for k in keys], np.int64)
-        if self._stacked is None:
-            self._stacked = (np.stack(self._next_hop),
-                             np.stack(self._step_cost),
-                             np.stack(self._node_weight),
-                             np.stack(self._adj_bw),
-                             np.stack(self._traffic))
         Pn = len(genomes)
-        ndev = int(np.prod(list(self.mesh.shape.values())))
-        bp = bucket_population(Pn, ndev)
-        gsids = sids
-        if bp != Pn:
-            gsids = np.concatenate([sids, np.repeat(sids[-1:], bp - Pn)])
-        sharding = NamedSharding(self.mesh, P("data"))
-        args = [jax.device_put(t[gsids], sharding) for t in self._stacked]
-        lat, thr = self._eval(*args)
+        with _span("genomes.dispatch", space="parametric", pop=Pn,
+                   n=self.n) as sp:
+            keys = [self._key_of(g) for g in genomes]
+            n_known = len(self._sid)
+            with _span("genomes.build_structures"):
+                self._ensure(keys)
+            sp.set(new_structures=len(self._sid) - n_known)
+            sids = np.asarray([self._sid[k] for k in keys], np.int64)
+            if self._stacked is None:
+                self._stacked = (np.stack(self._next_hop),
+                                 np.stack(self._step_cost),
+                                 np.stack(self._node_weight),
+                                 np.stack(self._adj_bw),
+                                 np.stack(self._traffic))
+            ndev = int(np.prod(list(self.mesh.shape.values())))
+            bp = bucket_population(Pn, ndev)
+            gsids = sids
+            if bp != Pn:
+                gsids = np.concatenate([sids, np.repeat(sids[-1:], bp - Pn)])
+            sharding = NamedSharding(self.mesh, P("data"))
+            args = [jax.device_put(t[gsids], sharding)
+                    for t in self._stacked]
+            lat, thr = self._eval(*args)
 
         def finish() -> GenomeEvalResult:
-            cols = np.asarray([self._reports[s] for s in sids], np.float64)
-            reports = ReportArrays(total_chiplet_area=cols[:, 0],
-                                   interposer_area=cols[:, 1],
-                                   power=cols[:, 2], cost=cols[:, 3])
-            return GenomeEvalResult(latency=np.asarray(lat)[:Pn],
-                                    throughput=np.asarray(thr)[:Pn],
-                                    reports=reports)
+            with _span("genomes.finish", space="parametric", pop=Pn):
+                cols = np.asarray([self._reports[s] for s in sids],
+                                  np.float64)
+                reports = ReportArrays(total_chiplet_area=cols[:, 0],
+                                       interposer_area=cols[:, 1],
+                                       power=cols[:, 2], cost=cols[:, 3])
+                return GenomeEvalResult(latency=np.asarray(lat)[:Pn],
+                                        throughput=np.asarray(thr)[:Pn],
+                                        reports=reports)
 
         return PendingGenomeEval(finish)
 

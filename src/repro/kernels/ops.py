@@ -11,9 +11,22 @@ import os
 import jax
 import jax.numpy as jnp
 
+from ..obs import metrics as _metrics
 from .minplus import minplus_pallas
 from .flow_accum import flow_accum_pallas
 from .ref import BIG, minplus_ref, flow_accumulate_ref
+
+
+def _note_dispatch(op: str, backend: str, tile: int | None,
+                   promoted: bool, n: int) -> None:
+    """Telemetry (repro.obs): which kernel variant this dispatch selected
+    and why. Counted once per *Python-level* call — for direct callers that
+    is every call; for jitted callers (``edge_flows``, the genome
+    pipelines) once per trace, i.e. the decision baked into each compiled
+    program."""
+    _metrics.counter(f"ops.{op}.dispatch", backend=backend,
+                     tile=tile if tile is not None else "-",
+                     promoted=promoted, n=n).inc()
 
 
 def _interpret() -> bool:
@@ -132,12 +145,14 @@ def load_propagate(next_hop: jax.Array, load0: jax.Array,
     fused_n = int(os.environ.get("REPRO_LOAD_PROP_FUSED_N", "160"))
     promote = {"xla": "xla_blocked", "pallas": "pallas_tiled",
                "pallas_interpret": "pallas_tiled_interpret"}
-    if n > fused_n and backend in promote:
+    promoted = n > fused_n and backend in promote
+    if promoted:
         backend = promote[backend]
     tile = None
     if backend in ("xla_blocked", "pallas_tiled", "pallas_tiled_interpret"):
         env = os.environ.get("REPRO_LOAD_PROP_TILE")
         tile = int(env) if env else pick_tile(n, batch)
+    _note_dispatch("load_propagate", backend, tile, promoted, n)
     return _load_propagate(next_hop, load0, max_hops, adaptive, backend,
                            tile)
 
@@ -155,6 +170,10 @@ def _load_propagate(next_hop: jax.Array, load0: jax.Array,
     if squeeze:
         next_hop, load0 = next_hop[None], load0[None]
     B, n, _ = next_hop.shape
+    # trace-time probe: one increment per compiled program shape
+    _metrics.counter("jit.compile", fn="kernels.load_propagate",
+                     backend=backend, n=n, batch=B,
+                     tile=tile if tile is not None else "-").inc()
     if max_hops is None:
         max_hops = max(n - 1, 1)
     if backend == "xla":
@@ -213,12 +232,14 @@ def apsp(d: jax.Array, n_iters: int | None = None,
     fused_n = int(os.environ.get("REPRO_APSP_FUSED_N", "160"))
     promote = {"xla": "xla_blocked", "pallas": "pallas_tiled",
                "pallas_interpret": "pallas_tiled_interpret"}
-    if n > fused_n and backend in promote:
+    promoted = n > fused_n and backend in promote
+    if promoted:
         backend = promote[backend]
     tile = None
     if backend in ("xla_blocked", "pallas_tiled", "pallas_tiled_interpret"):
         env = os.environ.get("REPRO_APSP_TILE")
         tile = int(env) if env else pick_tile(n, batch)
+    _note_dispatch("apsp", backend, tile, promoted, n)
     return _apsp(d, n_iters, backend, tile)
 
 
@@ -233,6 +254,10 @@ def _apsp(d: jax.Array, n_iters: int | None, backend: str,
     if squeeze:
         d = d[None]
     B, n, _ = d.shape
+    # trace-time probe: one increment per compiled program shape
+    _metrics.counter("jit.compile", fn="kernels.apsp", backend=backend,
+                     n=n, batch=B,
+                     tile=tile if tile is not None else "-").inc()
     if n_iters is None:
         n_iters = max(1, math.ceil(math.log2(max(n - 1, 2))) + 1)
     d = jnp.minimum(jnp.where(jnp.isfinite(d), d, BIG), BIG)

@@ -14,6 +14,7 @@ bit-identically.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, fields as dc_fields
 
 import numpy as np
@@ -22,6 +23,8 @@ from ..core.reports import ReportArrays, report_arrays
 from ..core.structure_cache import GLOBAL_STRUCTURE_CACHE
 from ..dse.engine import DseEngine
 from ..dse.genomes import PendingGenomeEval
+from ..obs import metrics as _metrics
+from ..obs.trace import span as _span
 from .archive import ParetoArchive
 from .operators import mutate_genes, tournament_select, uniform_crossover
 from .space import SearchSpace
@@ -166,27 +169,33 @@ class PopulationEvaluator:
         Evaluations are counted at dispatch time."""
         genomes = np.asarray(genomes, np.int64)
         if self._use_device_path():
-            pending = self.engine.evaluate_genomes_async(self.space, genomes)
+            with _span("opt.dispatch", path="device", evals=len(genomes)):
+                pending = self.engine.evaluate_genomes_async(self.space,
+                                                             genomes)
             self.n_evals += len(genomes)
             return PendingPopulationEval(
                 lambda: self._finalize(genomes, pending.result(), None))
-        points = self.space.decode(genomes, start_index=self.n_evals)
-        self.n_evals += len(points)
-        res = self.engine.evaluate_points(
-            points, validate=self.validate, n_pad=self.space.max_nodes,
-            round_hops=True, keep_designs=True)
+        with _span("opt.dispatch", path="host", evals=len(genomes)):
+            points = self.space.decode(genomes, start_index=self.n_evals)
+            self.n_evals += len(points)
+            res = self.engine.evaluate_points(
+                points, validate=self.validate, n_pad=self.space.max_nodes,
+                round_hops=True, keep_designs=True)
         return PendingPopulationEval(
             lambda: self._finalize(genomes, res, points))
 
     def _finalize(self, genomes, res, points) -> EvaluatedPopulation:
-        reports = res.reports if points is None else self._reports_for(points)
-        lat = np.asarray(res.latency, np.float64)
-        thr = np.asarray(res.throughput, np.float64)
-        feasible = (self.budgets.mask(reports)
-                    & np.isfinite(lat) & np.isfinite(thr))
-        return EvaluatedPopulation(genomes=genomes, latency=lat,
-                                   throughput=thr, feasible=feasible,
-                                   reports=reports)
+        with _span("opt.finalize", evals=len(genomes),
+                   path="device" if points is None else "host"):
+            reports = (res.reports if points is None
+                       else self._reports_for(points))
+            lat = np.asarray(res.latency, np.float64)
+            thr = np.asarray(res.throughput, np.float64)
+            feasible = (self.budgets.mask(reports)
+                        & np.isfinite(lat) & np.isfinite(thr))
+            return EvaluatedPopulation(genomes=genomes, latency=lat,
+                                       throughput=thr, feasible=feasible,
+                                       reports=reports)
 
     def __call__(self, genomes: np.ndarray) -> EvaluatedPopulation:
         return self.dispatch(genomes).result()
@@ -356,12 +365,15 @@ class OptimizerBase:
 
     # -- stepping -----------------------------------------------------------
     def _ingest(self, ev: EvaluatedPopulation) -> None:
-        self.archive.update(
-            ev.latency, ev.throughput, feasible=ev.feasible,
-            payloads=[g.tolist() for g in ev.genomes],
-            metrics={"interposer_area": ev.reports.interposer_area,
-                     "total_chiplet_area": ev.reports.total_chiplet_area,
-                     "power": ev.reports.power, "cost": ev.reports.cost})
+        t0 = time.perf_counter()
+        with _span("opt.ingest", evals=len(ev.latency)):
+            self.archive.update(
+                ev.latency, ev.throughput, feasible=ev.feasible,
+                payloads=[g.tolist() for g in ev.genomes],
+                metrics={"interposer_area": ev.reports.interposer_area,
+                         "total_chiplet_area": ev.reports.total_chiplet_area,
+                         "power": ev.reports.power, "cost": ev.reports.cost})
+        _metrics.histogram("opt.ingest_s").observe(time.perf_counter() - t0)
 
     def begin_step(self) -> np.ndarray:
         """Produce the next population to evaluate. Every RNG draw that

@@ -18,13 +18,20 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..obs import metrics as _metrics
+from ..obs.log import get_logger
+from ..obs.trace import enable_tracing, span as _span
+from ..utils.version import check_version_stamp, version_stamp
 from .algorithms import ALGORITHMS, Budgets, OptimizerBase, PopulationEvaluator
 from .archive import ParetoArchive
 from .space import AdjacencySpace, ParametricSpace, SearchSpace
+
+_LOG = get_logger("opt")
 
 
 @dataclass
@@ -54,11 +61,16 @@ def save_checkpoint(path: str, optimizer: OptimizerBase,
                     meta: dict | None = None) -> None:
     """Atomic write so a kill mid-dump never corrupts the resume point.
     ``meta`` substitutes a snapshot of the RNG/eval-count/generation triple
-    captured earlier (the async driver's deferred checkpointing)."""
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(optimizer.state(meta), f)
-    os.replace(tmp, path)
+    captured earlier (the async driver's deferred checkpointing). The
+    snapshot carries a version stamp so a resume from a different
+    repro/jax version warns instead of silently mixing trajectories."""
+    with _span("opt.checkpoint", path=path):
+        state = optimizer.state(meta)
+        state["versions"] = version_stamp()
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(state, f)
+        os.replace(tmp, path)
 
 
 class AsyncStepper:
@@ -96,14 +108,21 @@ class AsyncStepper:
             return
         ev, meta = self._deferred
         self._deferred = None
-        self.optimizer._ingest(ev)
-        if self.on_generation is not None:
-            self.on_generation(self.optimizer, meta, ev)
+        # This is the host work hidden behind the in-flight device call;
+        # its duration vs the subsequent device wait is the async overlap
+        # efficiency reported by repro.obs.
+        t0 = time.perf_counter()
+        with _span("opt.flush_deferred", generation=meta["generation"]):
+            self.optimizer._ingest(ev)
+            if self.on_generation is not None:
+                self.on_generation(self.optimizer, meta, ev)
+        _metrics.counter("opt.async.host_s").inc(time.perf_counter() - t0)
 
     def step(self) -> bool:
         """Complete one generation; returns False once the target count is
         reached (after flushing the last generation's deferred work)."""
         opt = self.optimizer
+        t_start = time.perf_counter()
         # Deferred work of generation g-1 executes while generation g's
         # dispatched evaluation runs on the device.
         self._flush_deferred()
@@ -111,15 +130,25 @@ class AsyncStepper:
             return False
         if self._pending is None:
             self._pending = opt.evaluator.dispatch(opt.begin_step())
-        ev = self._pending.result()
+        t0 = time.perf_counter()
+        with _span("opt.device_wait", generation=opt.generation):
+            ev = self._pending.result()
+        _metrics.counter("opt.async.wait_s").inc(time.perf_counter() - t0)
         self._pending = None
-        opt.finish_step(ev, ingest=False)
-        meta = opt.snapshot_meta()
-        if opt.generation < self.generations:
-            # dispatch generation g+1 before generation g's bookkeeping:
-            # the device computes through the entire deferred window
-            self._pending = opt.evaluator.dispatch(opt.begin_step())
+        with _span("opt.generation", generation=opt.generation,
+                   mode="async"):
+            opt.finish_step(ev, ingest=False)
+            meta = opt.snapshot_meta()
+            if opt.generation < self.generations:
+                # dispatch generation g+1 before generation g's bookkeeping:
+                # the device computes through the entire deferred window
+                self._pending = opt.evaluator.dispatch(opt.begin_step())
         self._deferred = (ev, meta)
+        dt = time.perf_counter() - t_start
+        _metrics.histogram("opt.generation_s").observe(dt)
+        if dt > 0:
+            _metrics.histogram("opt.evals_per_s").observe(
+                len(ev.latency) / dt)
         return True
 
     def run(self) -> None:
@@ -155,7 +184,11 @@ class OptRunner:
         self.ref_throughput = ref_throughput
         self.async_pipeline = async_pipeline
         if checkpoint_path and os.path.exists(checkpoint_path):
-            self.optimizer.load_state(load_checkpoint(checkpoint_path))
+            state = load_checkpoint(checkpoint_path)
+            for problem in check_version_stamp(state.get("versions"),
+                                              what="checkpoint"):
+                _LOG.warning(f"[opt] resume warning: {problem}")
+            self.optimizer.load_state(state)
 
     def _after_generation(self, opt, meta, history, generations,
                           progress) -> None:
@@ -166,13 +199,15 @@ class OptRunner:
             hv = opt.archive.hypervolume(self.ref_latency,
                                          self.ref_throughput)
             history.append(hv)
-        if progress:
-            msg = (f"[opt] gen {meta['generation']}/{generations} "
-                   f"evals={meta['n_evals']} "
-                   f"archive={len(opt.archive)}")
-            if hv is not None:
-                msg += f" hv={hv:.4g}"
-            print(msg)
+        msg = (f"[opt] gen {meta['generation']}/{generations} "
+               f"evals={meta['n_evals']} "
+               f"archive={len(opt.archive)}")
+        if hv is not None:
+            msg += f" hv={hv:.4g}"
+        # progress=True keeps the classic stdout line (via the obs logging
+        # root at INFO); progress=False still records it at DEBUG for
+        # REPRO_LOG=debug runs.
+        _LOG.log("info" if progress else "debug", msg)
 
     def run(self, generations: int, progress: bool = False) -> OptResult:
         opt = self.optimizer
@@ -185,9 +220,18 @@ class OptRunner:
                     o, meta, history, generations, progress)).run()
         else:
             while opt.generation < generations:
-                opt.step()
-                self._after_generation(opt, opt.snapshot_meta(), history,
-                                       generations, progress)
+                t0 = time.perf_counter()
+                n0 = opt.evaluator.n_evals
+                with _span("opt.generation", generation=opt.generation,
+                           mode="sync"):
+                    opt.step()
+                    self._after_generation(opt, opt.snapshot_meta(),
+                                           history, generations, progress)
+                dt = time.perf_counter() - t0
+                _metrics.histogram("opt.generation_s").observe(dt)
+                if dt > 0:
+                    _metrics.histogram("opt.evals_per_s").observe(
+                        (opt.evaluator.n_evals - n0) / dt)
         return OptResult(archive=opt.archive, n_evals=opt.evaluator.n_evals,
                          generations=opt.generation, history=history,
                          history_start=history_start)
@@ -248,8 +292,17 @@ def main(argv=None) -> int:
                    help="resume point, written after every generation")
     p.add_argument("--out", type=str, default=None,
                    help="write the final front as JSON rows")
+    p.add_argument("--trace", type=str, nargs="?", const="opt_trace",
+                   default=None, metavar="PREFIX",
+                   help="enable full tracing and write <PREFIX>.trace.jsonl, "
+                        "<PREFIX>.chrome.json (Perfetto-loadable), "
+                        "<PREFIX>.metrics.json, and <PREFIX>.report.json "
+                        "at the end of the run (default prefix: opt_trace)")
     p.add_argument("--quiet", action="store_true")
     args = p.parse_args(argv)
+
+    if args.trace:
+        enable_tracing()
 
     if args.space == "adjacency":
         space = make_space("adjacency", n_chiplets=args.n_chiplets,
@@ -277,19 +330,26 @@ def main(argv=None) -> int:
     result = runner.run(args.generations, progress=not args.quiet)
 
     rows = result.to_rows(space)
-    if not args.quiet:
-        print(f"[opt] {result.n_evals} evaluations, "
-              f"{len(result.archive)} points on the front:")
-        for r in rows:
-            print(f"   lat={r['latency']:8.2f} thr={r['throughput']:10.2f} "
-                  f"area={r.get('interposer_area', float('nan')):8.1f} "
-                  f"links={r.get('n_links', '-')}")
+    lvl = "debug" if args.quiet else "info"
+    _LOG.log(lvl, f"[opt] {result.n_evals} evaluations, "
+                  f"{len(result.archive)} points on the front:")
+    for r in rows:
+        _LOG.log(lvl,
+                 f"   lat={r['latency']:8.2f} thr={r['throughput']:10.2f} "
+                 f"area={r.get('interposer_area', float('nan')):8.1f} "
+                 f"links={r.get('n_links', '-')}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(rows, f, indent=2)
             f.write("\n")
-        if not args.quiet:
-            print(f"[opt] front written to {args.out}")
+        _LOG.log(lvl, f"[opt] front written to {args.out}")
+    if args.trace:
+        from ..obs.report import dump_run, format_report
+        summary = dump_run(args.trace)
+        _LOG.log(lvl, format_report(summary))
+        _LOG.log(lvl, f"[opt] trace written to {args.trace}.trace.jsonl / "
+                      f"{args.trace}.chrome.json (open in Perfetto); "
+                      f"report in {args.trace}.report.json")
     return 0
 
 

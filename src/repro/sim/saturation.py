@@ -17,7 +17,11 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+from ..obs.log import get_logger
+from ..obs.trace import span as _span
 from .cyclesim import CycleSim, SimConfig, SimStats
+
+_LOG = get_logger("sim")
 
 
 class SaturationResult(NamedTuple):
@@ -67,7 +71,8 @@ def saturation_throughput(sim: CycleSim, config: SimConfig | None = None,
     cfg = config or sim.cfg
     zero_load_runs = 0
     if latency_cap is None:
-        zl = zero_load_latency(sim, cfg)
+        with _span("sat.zero_load"):
+            zl = zero_load_latency(sim, cfg)
         latency_cap = latency_cap_factor * zl.avg_packet_latency
         zero_load_runs = 1
     probes = 0
@@ -75,26 +80,30 @@ def saturation_throughput(sim: CycleSim, config: SimConfig | None = None,
     def ok(rate: float) -> bool:
         nonlocal probes
         probes += 1
-        if progress:
-            print(f"[sat] probe {probes}, rate={rate:.3f}")
-        return _stable(sim, rate, cfg, latency_cap)
+        _LOG.log("info" if progress else "debug",
+                 f"[sat] probe {probes}, rate={rate:.3f}")
+        with _span("sat.probe", rate=round(rate, 4)):
+            return _stable(sim, rate, cfg, latency_cap)
 
     # 10% steps
     last_good = 0.0
     rate = 0.1
-    while rate <= max_rate + 1e-9 and ok(rate):
-        last_good = rate
-        rate += 0.1
+    with _span("sat.ladder", step=0.1):
+        while rate <= max_rate + 1e-9 and ok(rate):
+            last_good = rate
+            rate += 0.1
     # 1% steps from the last stable rate
     rate = last_good + 0.01
-    while rate <= max_rate + 1e-9 and ok(rate):
-        last_good = rate
-        rate += 0.01
+    with _span("sat.ladder", step=0.01):
+        while rate <= max_rate + 1e-9 and ok(rate):
+            last_good = rate
+            rate += 0.01
     # 0.1% steps
     rate = last_good + 0.001
-    while rate <= max_rate + 1e-9 and ok(rate):
-        last_good = rate
-        rate += 0.001
+    with _span("sat.ladder", step=0.001):
+        while rate <= max_rate + 1e-9 and ok(rate):
+            last_good = rate
+            rate += 0.001
     return SaturationResult(rate=last_good, probes=probes,
                             zero_load_runs=zero_load_runs)
 
@@ -161,7 +170,8 @@ def _saturation_batched(sim, cfg, latency_cap_factor, max_rate, chunk,
                         progress) -> SaturationResult:
     zero_load_runs = 0
     if latency_cap is None:
-        zl = sim.run_batch([0.005], cfg, backend=backend)[0]
+        with _span("sat.zero_load"):
+            zl = sim.run_batch([0.005], cfg, backend=backend)[0]
         latency_cap = latency_cap_factor * zl.avg_packet_latency
         zero_load_runs = 1
     probes = 0
@@ -179,10 +189,11 @@ def _saturation_batched(sim, cfg, latency_cap_factor, max_rate, chunk,
         failed = False
         while rung < len(ladder) and not failed:
             rates = ladder[rung:rung + chunk]
-            if progress:
-                print(f"[sat] probing rates "
-                      f"{', '.join(f'{r:.3f}' for r in rates)}")
-            stats = _run_chunk(sim, rates, cfg, backend, pool, workers)
+            _LOG.log("info" if progress else "debug",
+                     f"[sat] probing rates "
+                     f"{', '.join(f'{r:.3f}' for r in rates)}")
+            with _span("sat.probe", step=step, rates=len(rates)):
+                stats = _run_chunk(sim, rates, cfg, backend, pool, workers)
             for r, st in zip(rates, stats):
                 probes += 1
                 if st.stable and st.avg_packet_latency <= latency_cap:

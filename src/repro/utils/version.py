@@ -1,0 +1,46 @@
+"""Version identification for checkpoints and telemetry (ISSUE 7).
+
+``repro`` is a namespace package, so the version lives in the installed
+distribution metadata; source-tree runs (PYTHONPATH=src without an
+install) fall back to the pyproject default.
+"""
+from __future__ import annotations
+
+_DIST_NAME = "repro-rapidchiplet"
+_FALLBACK = "0.1.0"
+
+
+def repro_version() -> str:
+    try:
+        from importlib.metadata import version
+        return version(_DIST_NAME)
+    except Exception:
+        return _FALLBACK
+
+
+def version_stamp(config_hash: str | None = None) -> dict:
+    """The {repro, jax[, config_hash]} triple embedded in checkpoint
+    snapshots so a resume from a different code/config version warns
+    instead of silently mixing trajectories."""
+    import jax
+    stamp = {"repro": repro_version(), "jax": jax.__version__}
+    if config_hash is not None:
+        stamp["config_hash"] = str(config_hash)
+    return stamp
+
+
+def check_version_stamp(stamp: dict | None, config_hash: str | None = None,
+                        what: str = "checkpoint") -> list[str]:
+    """Mismatch descriptions between a stored stamp and the current
+    process (empty == clean). ``None``/missing stamps (pre-ISSUE-7
+    snapshots) report themselves so callers can warn once."""
+    if not stamp:
+        return [f"{what} predates version stamping (no versions recorded)"]
+    current = version_stamp(config_hash)
+    out = []
+    for key, now in current.items():
+        then = stamp.get(key)
+        if then is not None and then != now:
+            out.append(f"{what} was written with {key}={then}, "
+                       f"this process runs {key}={now}")
+    return out
