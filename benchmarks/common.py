@@ -51,4 +51,5 @@ def _fmt(v) -> str:
 
 
 def full_mode() -> bool:
-    return os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+    from repro.utils import env as _env
+    return _env.get_str("REPRO_BENCH_FULL") == "1"

@@ -26,8 +26,6 @@ from repro.kernels.ops import apsp, load_propagate
 
 from .common import emit, time_fn, RESULTS_DIR
 
-LARGE_N_DENSE_MAX = 256   # dense [n, n, n] transients past this are pointless
-
 
 def _peak_rss_mb() -> float:
     return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
@@ -51,9 +49,15 @@ def _mesh_next_hop(rows: int, cols: int) -> np.ndarray:
 
 def large_n_rows() -> list[dict]:
     """Dense vs blocked per n on a mesh routing: the scaling table the
-    large-n tier exists for. Dense rows stop at LARGE_N_DENSE_MAX."""
-    ns = [int(x) for x in os.environ.get(
-        "REPRO_BENCH_LARGE_N_NS", "64,144,256,576").split(",")]
+    large-n tier exists for. The backend names and the dense-coverage
+    ceiling come from the static-analysis registry (``large_n_plan``), so
+    this benchmark times exactly the variants the contract audit proves
+    things about — it cannot drift from the audited set."""
+    from repro.analysis.registry import large_n_plan
+    from repro.utils import env as _env
+    plan = large_n_plan()
+    lp_plan, ap_plan = plan["load_propagate"], plan["apsp"]
+    ns = [int(x) for x in _env.get_str("REPRO_BENCH_LARGE_N_NS").split(",")]
     rows = []
     rng = np.random.default_rng(7)
     for n in ns:
@@ -80,12 +84,17 @@ def large_n_rows() -> list[dict]:
         def ap(backend):
             apsp(d, backend=backend).block_until_ready()
 
-        t_lpb = time_fn(lambda: lp("xla_blocked"), warmup=1, iters=iters)
-        t_apb = time_fn(lambda: ap("xla_blocked"), warmup=1, iters=iters)
+        t_lpb = time_fn(lambda: lp(lp_plan["blocked"]), warmup=1,
+                        iters=iters)
+        t_apb = time_fn(lambda: ap(ap_plan["blocked"]), warmup=1,
+                        iters=iters)
         t_lpd = t_apd = None
-        if n <= LARGE_N_DENSE_MAX:
-            t_lpd = time_fn(lambda: lp("xla"), warmup=1, iters=iters)
-            t_apd = time_fn(lambda: ap("xla"), warmup=1, iters=iters)
+        if n <= lp_plan["dense_max_n"]:
+            t_lpd = time_fn(lambda: lp(lp_plan["dense"]), warmup=1,
+                            iters=iters)
+        if n <= ap_plan["dense_max_n"]:
+            t_apd = time_fn(lambda: ap(ap_plan["dense"]), warmup=1,
+                            iters=iters)
         row = {
             "kernel": "large_n", "n": n, "tile": tile,
             "load_prop_dense_ms": round(t_lpd * 1e3, 2) if t_lpd else "",

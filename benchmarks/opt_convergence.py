@@ -62,9 +62,11 @@ from repro.opt import (                                   # noqa: E402
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 OUT_PATH = os.path.join(REPO_ROOT, "BENCH_opt.json")
 
-POP_SIZE = int(os.environ.get("REPRO_OPT_BENCH_POP", "16"))
-GENERATIONS = int(os.environ.get("REPRO_OPT_BENCH_GENS", "10"))
-ADJ_CHIPLETS = int(os.environ.get("REPRO_OPT_BENCH_N", "32"))
+from repro.utils import env as _env                       # noqa: E402
+
+POP_SIZE = _env.get_int("REPRO_OPT_BENCH_POP")
+GENERATIONS = _env.get_int("REPRO_OPT_BENCH_GENS")
+ADJ_CHIPLETS = _env.get_int("REPRO_OPT_BENCH_N")
 AREA_BUDGET = 6500.0
 REF_LATENCY = 300.0
 

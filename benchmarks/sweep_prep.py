@@ -82,7 +82,8 @@ def prepare_after(points) -> None:
 
 
 def main():
-    n_points = int(os.environ.get("REPRO_SWEEP_PREP_POINTS", "1000"))
+    from repro.utils import env as _env
+    n_points = _env.get_int("REPRO_SWEEP_PREP_POINTS")
     points = sweep_points(n_points)
     print(f"sweep_prep: {len(points)} design points "
           f"({len({p.structure_key() for p in points})} unique structures)")

@@ -1,0 +1,30 @@
+"""Static analysis for the repro toolchain (ISSUE 8).
+
+Two levels, one gate (``python -m repro.analysis --check``):
+
+* **Level 1 — jaxpr/HLO contract audit** (:mod:`.jaxpr_audit`,
+  :mod:`.registry`): every performance-critical compiled program in the
+  repo is registered with the shapes it is traced at and the structural
+  contract its jaxpr must satisfy — forbidden primitives (no scatter in
+  load propagation, no host callbacks, no float64 on the device path),
+  transient-size bounds (no ``[P, n, n]`` stack in repair, tile slabs
+  bounded), dtype flow (every int16 table gather widened to >= int32
+  indices), and recompile-hazard checks that hash jaxprs across each
+  bucket ladder to prove the expected number of distinct compilations.
+
+* **Level 2 — AST repo lint** (:mod:`.lint`): no ``print()`` outside
+  ``obs/log.py``, no wall-clock ``time.time()`` (monotonic/perf_counter +
+  ``obs.trace`` only), no ``numpy.random`` on the device path, every
+  ``REPRO_*`` environment read through :mod:`repro.utils.env`, and no
+  Python for-loops over population/destination axes in hot modules.
+
+Both levels emit structured :class:`.findings.Finding` records
+(file:line, rule id, contract name), honour inline suppressions
+(``# repro-lint: allow[rule-id] reason``) and the committed baseline
+(``analysis_baseline.json``), and run as the ``analysis`` CI job.
+"""
+from .findings import Finding, format_findings, load_baseline
+from .jaxpr_audit import Contract, audit_contract, iter_eqns, jaxpr_key
+
+__all__ = ["Finding", "format_findings", "load_baseline",
+           "Contract", "audit_contract", "iter_eqns", "jaxpr_key"]

@@ -1,0 +1,122 @@
+"""CLI for the static-analysis gate.
+
+    python -m repro.analysis --check            # lint + contract audit
+    python -m repro.analysis --lint             # AST lint only (fast)
+    python -m repro.analysis --audit            # jaxpr contract audit only
+    python -m repro.analysis --env              # print the env-knob table
+    python -m repro.analysis --list             # rules + audited programs
+    python -m repro.analysis --json out.json    # findings as JSON
+    python -m repro.analysis --write-baseline   # accept current findings
+
+Exit status is the number of unsuppressed findings (0 = gate passes),
+capped at 125 so large counts stay distinguishable from shell errors.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+from .findings import (BASELINE_PATH, apply_baseline, format_findings,
+                       load_baseline, write_baseline)
+
+
+def _collect(lint: bool, audit: bool):
+    findings = []
+    if lint:
+        from .lint import lint_paths
+
+        findings += lint_paths()
+    if audit:
+        from .jaxpr_audit import audit_all
+        from .registry import contracts
+
+        findings += audit_all(list(contracts()))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis",
+                                 description=__doc__.split("\n")[0])
+    ap.add_argument("--check", action="store_true",
+                    help="run both analysis levels (the CI gate)")
+    ap.add_argument("--lint", action="store_true",
+                    help="AST repo lint only")
+    ap.add_argument("--audit", action="store_true",
+                    help="jaxpr/HLO contract audit only")
+    ap.add_argument("--env", action="store_true",
+                    help="print the REPRO_* env-knob registry table")
+    ap.add_argument("--list", action="store_true",
+                    help="list lint rules and audited programs")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write findings as JSON")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the committed baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help=f"accept current findings into {BASELINE_PATH.name}")
+    args = ap.parse_args(argv)
+
+    if args.env:
+        from ..utils import env
+
+        # repro-lint: allow[no-print] the analysis CLI reports to stdout regardless of REPRO_LOG
+        print(env.format_table())
+        return 0
+
+    if args.list:
+        from .lint import RULES
+        from .registry import contracts
+
+        # repro-lint: allow[no-print] the analysis CLI reports to stdout regardless of REPRO_LOG
+        print("lint rules:")
+        for rule, doc in RULES.items():
+            # repro-lint: allow[no-print] the analysis CLI reports to stdout regardless of REPRO_LOG
+            print(f"  {rule:20s} {doc}")
+        # repro-lint: allow[no-print] the analysis CLI reports to stdout regardless of REPRO_LOG
+        print("audited programs:")
+        for c in contracts():
+            checks = []
+            if c.forbidden_primitives:
+                checks.append("primitives")
+            if c.forbid_f64:
+                checks.append("f64")
+            if c.max_transient_elements is not None:
+                checks.append(f"transient<={c.max_transient_elements}")
+            if c.forbidden_shapes:
+                checks.append("shapes")
+            if c.gather_index_min_bits:
+                checks.append(f"gather>={c.gather_index_min_bits}b")
+            if c.out_dtypes is not None:
+                checks.append("out-dtypes")
+            if c.ladder is not None:
+                checks.append(f"ladder={c.ladder_expected}")
+            if c.hlo is not None:
+                checks.append("hlo-buffers")
+            # repro-lint: allow[no-print] the analysis CLI reports to stdout regardless of REPRO_LOG
+            print(f"  {c.name:48s} {', '.join(checks)}")
+        return 0
+
+    lint = args.lint or args.check or not (args.lint or args.audit)
+    audit = args.audit or args.check or not (args.lint or args.audit)
+
+    findings = _collect(lint, audit)
+    if args.write_baseline:
+        n = write_baseline(findings)
+        # repro-lint: allow[no-print] the analysis CLI reports to stdout regardless of REPRO_LOG
+        print(f"baseline: {n} entries -> {BASELINE_PATH}")
+        return 0
+    if not args.no_baseline:
+        findings = apply_baseline(findings, load_baseline())
+
+    # repro-lint: allow[no-print] the analysis CLI reports to stdout regardless of REPRO_LOG
+    print(format_findings(findings))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([dataclasses.asdict(x) for x in findings], f, indent=1)
+            f.write("\n")
+    return min(len(findings), 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,335 @@
+"""The audited-program registry: every performance-critical compiled
+program, the representative bucket shapes it is traced at, and its
+structural contract (see :mod:`.jaxpr_audit`).
+
+The registry is also the single source of truth for the large-n
+benchmark's variant plan (``large_n_plan``): ``benchmarks/kernels_bench``
+times exactly the backends audited here at the dense-coverage limit
+audited here, so the benchmark can not drift from what the analysis
+gate actually proves.
+
+Everything heavier than a closure is deferred into the contract thunks —
+importing this module costs no jax tracing.
+"""
+from __future__ import annotations
+
+import functools
+
+from .jaxpr_audit import (CALLBACK_PRIMITIVES, SCATTER_PRIMITIVES,
+                          Contract, jaxpr_key)
+
+# The bucket shape the dense ops contracts are audited at — and therefore
+# the largest n at which the benchmark times the dense variants.
+LARGE_N_DENSE_MAX = 256
+
+_FORBIDDEN = SCATTER_PRIMITIVES + CALLBACK_PRIMITIVES
+
+
+def _sds(shape, dtype):
+    import jax
+
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _mesh():
+    import jax
+
+    from ..core import latency as _latency  # noqa: F401  (import order:
+    # repro.core must initialize before repro.routing — see routing/tables)
+    from ..utils.jaxcompat import make_auto_mesh
+
+    return make_auto_mesh((1,), ("data",), devices=jax.devices()[:1])
+
+
+# ---------------------------------------------------------------------------
+# kernels.ops: load_propagate / apsp backend variants
+# ---------------------------------------------------------------------------
+
+def _trace_load_prop(n: int, batch: int, backend: str):
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels import ops
+
+    def fn(nh, l0):
+        return ops.load_propagate(nh, l0, backend=backend, adaptive=True)
+
+    return jax.make_jaxpr(fn)(_sds((batch, n, n), jnp.int32),
+                              _sds((batch, n, n), jnp.float32))
+
+
+def _lower_load_prop(n: int, batch: int, backend: str) -> str:
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels import ops
+
+    def fn(nh, l0):
+        return ops.load_propagate(nh, l0, backend=backend, adaptive=True)
+
+    return jax.jit(fn).lower(
+        _sds((batch, n, n), jnp.int32),
+        _sds((batch, n, n), jnp.float32)).compile().as_text()
+
+
+def _trace_apsp(n: int, batch: int, backend: str):
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels import ops
+
+    return jax.make_jaxpr(
+        lambda d: ops.apsp(d, backend=backend))(
+            _sds((batch, n, n), jnp.float32))
+
+
+def _lower_apsp(n: int, batch: int, backend: str) -> str:
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels import ops
+
+    return jax.jit(lambda d: ops.apsp(d, backend=backend)).lower(
+        _sds((batch, n, n), jnp.float32)).compile().as_text()
+
+
+# ---------------------------------------------------------------------------
+# routing.device: batched next-hop construction, dense vs blocked
+# ---------------------------------------------------------------------------
+
+def _trace_lowest_id(n: int, batch: int):
+    import jax
+    import jax.numpy as jnp
+
+    from ..core import latency as _latency  # noqa: F401  (import order)
+    from ..routing import device
+
+    return jax.make_jaxpr(device.lowest_id_next_hops_batch)(
+        _sds((batch, n, n), jnp.float32), _sds((batch, n, n), jnp.float32),
+        _sds((batch, n), jnp.bool_))
+
+
+def _trace_hops_next_hop(n: int, batch: int):
+    import jax
+    import jax.numpy as jnp
+
+    from ..core import latency as _latency  # noqa: F401  (import order)
+    from ..routing import device
+
+    return jax.make_jaxpr(device.hops_next_hop_batch)(
+        _sds((batch, n, n), jnp.bool_))
+
+
+# ---------------------------------------------------------------------------
+# dse.genomes: fused genome pipelines + population/node bucket ladders
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _adjacency_pipeline(n_chiplets: int):
+    from ..dse import genomes
+    from ..opt.space import AdjacencySpace
+
+    space = AdjacencySpace(n_chiplets=n_chiplets)
+    return genomes.AdjacencyPipeline(space, _mesh())
+
+
+def _trace_adjacency(n_chiplets: int, pop: int):
+    import jax
+    import jax.numpy as jnp
+
+    from ..dse import genomes
+
+    pipe = _adjacency_pipeline(n_chiplets)
+    bp = genomes.bucket_population(pop, 1)
+    bits = _sds((bp, pipe.space.genome_length), jnp.int32)
+    return jax.make_jaxpr(pipe._eval)(
+        bits, pipe._pair_u, pipe._pair_v, pipe._pair_id, pipe._chain_slot,
+        pipe._chain_eslot, pipe._inv_j, pipe._inv_c, pipe._col, pipe._row,
+        pipe._side, pipe._phyx, pipe._phyy, pipe._cphyx, pipe._cphyy,
+        pipe._bw, pipe._traffic, pipe._consts)
+
+
+def _adjacency_ladder(n_chiplets: int, pops=(5, 8, 9, 16, 17)):
+    return [jaxpr_key(_trace_adjacency(n_chiplets, p)) for p in pops]
+
+
+def _trace_parametric(n_raw: int, pop: int):
+    import jax
+    import jax.numpy as jnp
+
+    from ..core.latency import num_doubling_steps
+    from ..dse import genomes
+
+    nb = genomes.node_bucket(n_raw)
+    fn = genomes._parametric_eval_fn(_mesh(), num_doubling_steps(nb),
+                                     max(nb - 1, 1))
+    return jax.make_jaxpr(fn)(
+        _sds((pop, nb, nb), jnp.int16), _sds((pop, nb, nb), jnp.float32),
+        _sds((pop, nb), jnp.float32), _sds((pop, nb, nb), jnp.float32),
+        _sds((pop, nb, nb), jnp.float32))
+
+
+def _parametric_ladder(sizes=(9, 16, 17, 24, 33), pop: int = 8):
+    return [jaxpr_key(_trace_parametric(n, pop)) for n in sizes]
+
+
+# ---------------------------------------------------------------------------
+# opt.space: the repair degree-cap scan
+# ---------------------------------------------------------------------------
+
+_REPAIR_N = 16      # n_chiplets: G = n(n-1)/2 = 120 gene pairs
+_REPAIR_P = 12      # population — chosen != n so (P, n, n) is unambiguous
+
+
+def _trace_repair_cap(n_cand: int):
+    import jax
+    import jax.numpy as jnp
+
+    from ..core import latency as _latency  # noqa: F401  (import order)
+    from ..opt.space import AdjacencySpace, _pow2_bucket
+
+    space = AdjacencySpace(n_chiplets=_REPAIR_N)
+    cap = space._degree_cap_fn()
+    G, P = space.genome_length, _REPAIR_P
+    bucket = _pow2_bucket(n_cand)
+    return jax.make_jaxpr(cap)(
+        _sds((G + 1, P), jnp.int32), _sds((_REPAIR_N, P), jnp.int32),
+        _sds((bucket,), jnp.int32))
+
+
+def _repair_ladder(cands=(3, 8, 9, 16, 17, 30)):
+    return [jaxpr_key(_trace_repair_cap(c)) for c in cands]
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def contracts() -> tuple[Contract, ...]:
+    import jax.numpy as jnp
+
+    def lp(name, n, batch, backend, **kw):
+        return Contract(
+            name=f"ops.load_propagate[{backend},n={n},B={batch}]",
+            description="fused load propagation + edge flows",
+            trace=lambda: _trace_load_prop(n, batch, backend),
+            forbidden_primitives=_FORBIDDEN,
+            forbid_f64=True,
+            out_dtypes=(jnp.float32, jnp.float32),
+            bench={"op": "load_propagate", "backend": backend,
+                   "role": name, "n": n},
+            **kw)
+
+    def ap(name, n, batch, backend, **kw):
+        return Contract(
+            name=f"ops.apsp[{backend},n={n},B={batch}]",
+            description="min-plus all-pairs path costs",
+            trace=lambda: _trace_apsp(n, batch, backend),
+            forbidden_primitives=_FORBIDDEN,
+            forbid_f64=True,
+            out_dtypes=(jnp.float32,),
+            bench={"op": "apsp", "backend": backend, "role": name, "n": n},
+            **kw)
+
+    return (
+        # -- kernels.ops ----------------------------------------------------
+        lp("dense", 64, 4, "xla"),
+        lp("blocked", LARGE_N_DENSE_MAX, 2, "xla_blocked",
+           # tile slab [B, 128, n, n] = 2^24 elements exactly; the dense
+           # one-hot would be [B, n, n, n] = 2^25 and must not fit
+           max_transient_elements=1 << 24,
+           hlo=lambda: _lower_load_prop(LARGE_N_DENSE_MAX, 2, "xla_blocked"),
+           max_hlo_buffer_bytes=112 << 20),
+        lp("tiled", LARGE_N_DENSE_MAX, 1, "pallas_tiled_interpret",
+           max_transient_elements=1 << 24),
+        ap("dense", 64, 4, "xla"),
+        ap("blocked", LARGE_N_DENSE_MAX, 2, "xla_blocked",
+           max_transient_elements=1 << 24,
+           hlo=lambda: _lower_apsp(LARGE_N_DENSE_MAX, 2, "xla_blocked"),
+           max_hlo_buffer_bytes=112 << 20),
+        ap("tiled", LARGE_N_DENSE_MAX, 1, "pallas_tiled_interpret",
+           max_transient_elements=1 << 24),
+        # -- routing.device -------------------------------------------------
+        Contract(
+            name="routing.lowest_id_next_hops[dense,n=64,B=2]",
+            description="batched lowest-ID next-hop selection",
+            trace=lambda: _trace_lowest_id(64, 2),
+            forbidden_primitives=_FORBIDDEN,
+            forbid_f64=True,
+            out_dtypes=(jnp.int16,)),
+        Contract(
+            name="routing.lowest_id_next_hops[blocked,n=256,B=1]",
+            description="destination-blocked next-hop selection",
+            trace=lambda: _trace_lowest_id(256, 1),
+            forbidden_primitives=_FORBIDDEN,
+            forbid_f64=True,
+            out_dtypes=(jnp.int16,),
+            # per-slab selection [B, n, n, tile] = 2^23; the dense
+            # [B, n, n, n] score tensor would be 2^24
+            max_transient_elements=1 << 23),
+        Contract(
+            name="routing.hops_next_hop[dense,n=64,B=2]",
+            description="BFS-by-matmul hop tables",
+            trace=lambda: _trace_hops_next_hop(64, 2),
+            forbidden_primitives=_FORBIDDEN,
+            forbid_f64=True,
+            out_dtypes=(jnp.int16,)),
+        Contract(
+            name="routing.hops_next_hop[blocked,n=256,B=1]",
+            description="destination-blocked BFS hop tables",
+            trace=lambda: _trace_hops_next_hop(256, 1),
+            forbidden_primitives=_FORBIDDEN,
+            forbid_f64=True,
+            out_dtypes=(jnp.int16,),
+            max_transient_elements=1 << 23),
+        # -- dse.genomes ----------------------------------------------------
+        Contract(
+            name="dse.genomes.adjacency[n=16]",
+            description="fused adjacency genome eval (scatter-free)",
+            trace=lambda: _trace_adjacency(16, 16),
+            forbidden_primitives=_FORBIDDEN,
+            forbid_f64=True,
+            gather_index_min_bits=32,
+            ladder=lambda: _adjacency_ladder(16),
+            # pops (5, 8, 9, 16, 17) bucket to {8, 16, 32}
+            ladder_expected=3),
+        Contract(
+            name="dse.genomes.parametric[n<=48]",
+            description="structure-table parametric eval (int16 tables)",
+            trace=lambda: _trace_parametric(16, 8),
+            forbidden_primitives=_FORBIDDEN,
+            forbid_f64=True,
+            gather_index_min_bits=32,
+            ladder=lambda: _parametric_ladder(),
+            # node counts (9, 16, 17, 24, 33) bucket to {16, 32, 48}
+            ladder_expected=3),
+        # -- opt.space ------------------------------------------------------
+        Contract(
+            name="opt.space.repair_cap[n=16,P=12]",
+            description="jitted degree-cap scan of AdjacencySpace.repair",
+            trace=lambda: _trace_repair_cap(20),
+            forbidden_primitives=CALLBACK_PRIMITIVES,
+            forbid_f64=True,
+            dims={"P": _REPAIR_P, "n": _REPAIR_N},
+            forbidden_shapes=(("P", "n", "n"), ("n", "n", "P"),
+                              ("n", "P", "n")),
+            ladder=lambda: _repair_ladder(),
+            # candidate counts (3, 8, 9, 16, 17, 30) bucket to {8, 16, 32}
+            ladder_expected=3),
+    )
+
+
+def large_n_plan() -> dict:
+    """Benchmark variant plan derived from the registry: op -> the dense
+    and blocked backend names audited above, plus the dense n ceiling."""
+    plan: dict[str, dict] = {}
+    for c in contracts():
+        if not c.bench:
+            continue
+        op = c.bench["op"]
+        entry = plan.setdefault(op, {"dense_max_n": LARGE_N_DENSE_MAX})
+        role = c.bench["role"]
+        if role in ("dense", "blocked"):
+            entry[role] = c.bench["backend"]
+    return plan

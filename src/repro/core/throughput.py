@@ -36,8 +36,11 @@ def _dest_major_load0(next_hop: jax.Array, traffic: jax.Array) -> jax.Array:
     traffic matrix: traffic[s, d] starts residing at s, destined for d."""
     n = next_hop.shape[0]
     n_c = traffic.shape[0]
-    t = jnp.zeros((n, n), dtype=jnp.float32).at[:n_c, :n_c].set(
-        traffic.astype(jnp.float32))
+    t = traffic.astype(jnp.float32)
+    if n_c != n:
+        # router padding: jnp.pad stays a `pad` under vmap, where an
+        # .at[].set / dynamic_update_slice spelling batches to a scatter
+        t = jnp.pad(t, ((0, n - n_c), (0, n - n_c)))
     return t.T
 
 
@@ -83,8 +86,9 @@ def edge_flows(next_hop: jax.Array, traffic: jax.Array,
     from ..kernels.ops import flow_accumulate
 
     n_c = traffic.shape[0]
-    t = jnp.zeros((n, n), dtype=jnp.float32).at[:n_c, :n_c].set(
-        traffic.astype(jnp.float32))
+    t = jax.lax.dynamic_update_slice(
+        jnp.zeros((n, n), dtype=jnp.float32),
+        traffic.astype(jnp.float32), (0, 0))
     amount = t.ravel()                                   # [n*n]
     dest = jnp.tile(jnp.arange(n, dtype=next_hop.dtype), (n,))   # [n*n]
     cur0 = jnp.repeat(jnp.arange(n, dtype=next_hop.dtype), n)    # [n*n]

@@ -33,13 +33,13 @@ the right trade once the matrix no longer fits VMEM.
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..utils import env as _env
 from .ref import BIG
 
 # [n, n] f32 scratch must fit comfortably in ~16 MiB VMEM with headroom.
@@ -55,7 +55,7 @@ def default_backend() -> str:
     Priority: ``REPRO_APSP_BACKEND`` env var, then compiled Pallas on TPU
     (or anywhere when ``REPRO_PALLAS_INTERPRET=0``), else the XLA fallback.
     """
-    env = os.environ.get("REPRO_APSP_BACKEND")
+    env = _env.get_str("REPRO_APSP_BACKEND")
     if env:
         if env not in APSP_BACKENDS:
             raise ValueError(f"REPRO_APSP_BACKEND={env!r}; "
@@ -63,7 +63,7 @@ def default_backend() -> str:
         return env
     if jax.default_backend() == "tpu":
         return "pallas"
-    if os.environ.get("REPRO_PALLAS_INTERPRET") == "0":
+    if _env.get_str("REPRO_PALLAS_INTERPRET") == "0":
         return "pallas"
     return "xla"
 

@@ -47,11 +47,12 @@ overrides the auto-chosen tile.
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ..utils import env as _env
 
 LOAD_PROP_BACKENDS = ("pallas", "pallas_interpret", "xla",
                       "pallas_tiled", "pallas_tiled_interpret", "xla_blocked")
@@ -64,7 +65,7 @@ def default_backend() -> str:
     TPU (or anywhere when ``REPRO_PALLAS_INTERPRET=0``), else the XLA
     fallback.
     """
-    env = os.environ.get("REPRO_LOAD_PROP_BACKEND")
+    env = _env.get_str("REPRO_LOAD_PROP_BACKEND")
     if env:
         if env not in LOAD_PROP_BACKENDS:
             raise ValueError(f"REPRO_LOAD_PROP_BACKEND={env!r}; "
@@ -72,7 +73,7 @@ def default_backend() -> str:
         return env
     if jax.default_backend() == "tpu":
         return "pallas"
-    if os.environ.get("REPRO_PALLAS_INTERPRET") == "0":
+    if _env.get_str("REPRO_PALLAS_INTERPRET") == "0":
         return "pallas"
     return "xla"
 

@@ -6,12 +6,12 @@ on real TPUs set ``REPRO_PALLAS_INTERPRET=0`` to compile them for hardware.
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
 from ..obs import metrics as _metrics
+from ..utils import env as _env
 from .minplus import minplus_pallas
 from .flow_accum import flow_accum_pallas
 from .ref import BIG, minplus_ref, flow_accumulate_ref
@@ -30,11 +30,20 @@ def _note_dispatch(op: str, backend: str, tile: int | None,
 
 
 def _interpret() -> bool:
-    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+    return _env.get_str("REPRO_PALLAS_INTERPRET") != "0"
 
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def _set_block(dst: jax.Array, src: jax.Array) -> jax.Array:
+    """Corner-anchored pad-write dst[:s0, :s1, ...] = src as ONE
+    dynamic_update_slice. The ``.at[slices].set`` spelling lowers to a
+    scatter, which the audited device contracts forbid (scatter is the
+    slow path on TPU; see repro.analysis.registry)."""
+    return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
+                                        (0,) * dst.ndim)
 
 
 def _pick_block(dim: int, pref: int, mult: int) -> int:
@@ -63,8 +72,8 @@ def minplus_matmul(a: jax.Array, b: jax.Array, bm: int | None = None,
     bn = bn or _pick_block(N, 128, 128)
     bk = bk or _pick_block(K, 128, 8)
     Mp, Kp, Np = _round_up(M, bm), _round_up(K, bk), _round_up(N, bn)
-    ap = jnp.full((B, Mp, Kp), BIG, jnp.float32).at[:, :M, :K].set(a)
-    bp_ = jnp.full((B, Kp, Np), BIG, jnp.float32).at[:, :K, :N].set(b)
+    ap = _set_block(jnp.full((B, Mp, Kp), BIG, jnp.float32), a)
+    bp_ = _set_block(jnp.full((B, Kp, Np), BIG, jnp.float32), b)
     out = minplus_pallas(ap, bp_, bm=bm, bn=bn, bk=bk, interpret=_interpret())
     out = out[:, :M, :N]
     return out[0] if squeeze else out
@@ -87,12 +96,10 @@ def flow_accumulate(flow: jax.Array, cur: jax.Array, nxt: jax.Array,
     Pp = _round_up(P, bp)
     n_lane = _round_up(n, 128)
 
-    fl = jnp.zeros((B, n_lane, n_lane), jnp.float32).at[:, :n, :n].set(
-        flow.astype(jnp.float32))
-    cu = jnp.zeros((B, Pp), jnp.int32).at[:, :P].set(cur.astype(jnp.int32))
-    nx = jnp.zeros((B, Pp), jnp.int32).at[:, :P].set(nxt.astype(jnp.int32))
-    am = jnp.zeros((B, Pp), jnp.float32).at[:, :P].set(
-        amount.astype(jnp.float32))
+    fl = _set_block(jnp.zeros((B, n_lane, n_lane), jnp.float32), flow)
+    cu = _set_block(jnp.zeros((B, Pp), jnp.int32), cur)
+    nx = _set_block(jnp.zeros((B, Pp), jnp.int32), nxt)
+    am = _set_block(jnp.zeros((B, Pp), jnp.float32), amount)
     out = flow_accum_pallas(fl, cu, nx, am, bp=bp, interpret=_interpret())
     out = out[:, :n, :n].astype(flow.dtype)
     return out[0] if squeeze else out
@@ -142,7 +149,7 @@ def load_propagate(next_hop: jax.Array, load0: jax.Array,
         backend = default_backend()
     n = next_hop.shape[-1]
     batch = next_hop.shape[0] if next_hop.ndim == 3 else 1
-    fused_n = int(os.environ.get("REPRO_LOAD_PROP_FUSED_N", "160"))
+    fused_n = _env.get_int("REPRO_LOAD_PROP_FUSED_N")
     promote = {"xla": "xla_blocked", "pallas": "pallas_tiled",
                "pallas_interpret": "pallas_tiled_interpret"}
     promoted = n > fused_n and backend in promote
@@ -150,8 +157,7 @@ def load_propagate(next_hop: jax.Array, load0: jax.Array,
         backend = promote[backend]
     tile = None
     if backend in ("xla_blocked", "pallas_tiled", "pallas_tiled_interpret"):
-        env = os.environ.get("REPRO_LOAD_PROP_TILE")
-        tile = int(env) if env else pick_tile(n, batch)
+        tile = _env.get_opt_int("REPRO_LOAD_PROP_TILE") or pick_tile(n, batch)
     _note_dispatch("load_propagate", backend, tile, promoted, n)
     return _load_propagate(next_hop, load0, max_hops, adaptive, backend,
                            tile)
@@ -187,9 +193,9 @@ def _load_propagate(next_hop: jax.Array, load0: jax.Array,
         n_lane = _round_up(n, 128)
         nh_p = jnp.tile(jnp.arange(n_lane, dtype=jnp.int32)[:, None],
                         (B, 1, n_lane))
-        nh_p = nh_p.at[:, :n, :n].set(next_hop.astype(jnp.int32))
-        l0_p = jnp.zeros((B, n_lane, n_lane), jnp.float32)
-        l0_p = l0_p.at[:, :n, :n].set(load0.astype(jnp.float32))
+        nh_p = _set_block(nh_p, next_hop.astype(jnp.int32))
+        l0_p = _set_block(jnp.zeros((B, n_lane, n_lane), jnp.float32),
+                          load0)
         if backend in ("pallas_tiled", "pallas_tiled_interpret"):
             w, flow = load_prop_pallas_tiled(
                 nh_p, l0_p, max_hops, tile,
@@ -229,7 +235,7 @@ def apsp(d: jax.Array, n_iters: int | None = None,
         backend = default_backend()
     n = d.shape[-1]
     batch = d.shape[0] if d.ndim == 3 else 1
-    fused_n = int(os.environ.get("REPRO_APSP_FUSED_N", "160"))
+    fused_n = _env.get_int("REPRO_APSP_FUSED_N")
     promote = {"xla": "xla_blocked", "pallas": "pallas_tiled",
                "pallas_interpret": "pallas_tiled_interpret"}
     promoted = n > fused_n and backend in promote
@@ -237,8 +243,7 @@ def apsp(d: jax.Array, n_iters: int | None = None,
         backend = promote[backend]
     tile = None
     if backend in ("xla_blocked", "pallas_tiled", "pallas_tiled_interpret"):
-        env = os.environ.get("REPRO_APSP_TILE")
-        tile = int(env) if env else pick_tile(n, batch)
+        tile = _env.get_opt_int("REPRO_APSP_TILE") or pick_tile(n, batch)
     _note_dispatch("apsp", backend, tile, promoted, n)
     return _apsp(d, n_iters, backend, tile)
 
@@ -261,7 +266,8 @@ def _apsp(d: jax.Array, n_iters: int | None, backend: str,
     if n_iters is None:
         n_iters = max(1, math.ceil(math.log2(max(n - 1, 2))) + 1)
     d = jnp.minimum(jnp.where(jnp.isfinite(d), d, BIG), BIG)
-    eye = jnp.where(jnp.eye(n, dtype=bool), 0.0, BIG).astype(jnp.float32)
+    eye = jnp.where(jnp.eye(n, dtype=bool), jnp.float32(0.0),
+                    jnp.float32(BIG))
     d = jnp.minimum(d.astype(jnp.float32), eye[None])
     n_lane = _round_up(n, 128)
     if backend == "xla":
@@ -269,18 +275,20 @@ def _apsp(d: jax.Array, n_iters: int | None, backend: str,
     elif backend == "xla_blocked":
         out = apsp_xla_blocked(d, n_iters, tile)
     elif backend in ("pallas_tiled", "pallas_tiled_interpret"):
-        dp = jnp.full((B, n_lane, n_lane), BIG, jnp.float32)
-        dp = dp.at[:, :n, :n].set(d)
-        eye_p = jnp.where(jnp.eye(n_lane, dtype=bool), 0.0, BIG)
-        dp = jnp.minimum(dp, eye_p[None].astype(jnp.float32))
+        dp = _set_block(jnp.full((B, n_lane, n_lane), BIG, jnp.float32),
+                        d)
+        eye_p = jnp.where(jnp.eye(n_lane, dtype=bool), jnp.float32(0.0),
+                          jnp.float32(BIG))
+        dp = jnp.minimum(dp, eye_p[None])
         out = apsp_pallas_tiled(
             dp, n_iters, tile,
             interpret=backend == "pallas_tiled_interpret")[:, :n, :n]
     elif n_lane <= MAX_FUSED_N:
-        dp = jnp.full((B, n_lane, n_lane), BIG, jnp.float32)
-        dp = dp.at[:, :n, :n].set(d)
-        eye_p = jnp.where(jnp.eye(n_lane, dtype=bool), 0.0, BIG)
-        dp = jnp.minimum(dp, eye_p[None].astype(jnp.float32))
+        dp = _set_block(jnp.full((B, n_lane, n_lane), BIG, jnp.float32),
+                        d)
+        eye_p = jnp.where(jnp.eye(n_lane, dtype=bool), jnp.float32(0.0),
+                          jnp.float32(BIG))
+        dp = jnp.minimum(dp, eye_p[None])
         out = apsp_pallas(dp, n_iters,
                           interpret=backend == "pallas_interpret")[:, :n, :n]
     else:

@@ -36,6 +36,9 @@ from repro.train import adamw_init, make_train_step
 from repro.train.optimizer import OptConfig
 from repro.train.state import train_state_specs
 from repro.utils.hlo_cost import analyze, xla_cost_analysis
+from repro.obs.log import get_logger
+
+_LOG = get_logger("launch.dryrun")
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "benchmarks", "results", "dryrun")
@@ -152,7 +155,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     if variant == "serve_tp" and spec.kind == "decode":
         rules = SERVING_RULES
     model = Model(cfg)
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     with mesh, logical_axis_rules(mesh, rules):
         batch_sds = token_spec(cfg, spec)
@@ -204,10 +207,10 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                 params_sds, cache_sds, batch_sds["tokens"],
                 batch_sds["pos"])
 
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     cost = xla_cost_analysis(compiled)
@@ -297,10 +300,9 @@ def main():
                 mesh_name = "2x16x16" if multi else "16x16"
                 path = artifact_path(arch, shape, mesh_name, tag)
                 if os.path.exists(path) and not args.force:
-                    print(f"[dryrun] SKIP (exists) {arch} {shape} {mesh_name}")
+                    _LOG.info(f"[dryrun] SKIP (exists) {arch} {shape} {mesh_name}")
                     continue
-                print(f"[dryrun] {arch:22s} {shape:12s} {mesh_name:8s} ...",
-                      flush=True)
+                _LOG.info(f"[dryrun] {arch:22s} {shape:12s} {mesh_name:8s} ...")
                 try:
                     rec = lower_cell(arch, shape, multi,
                                      variant=args.variant,
@@ -308,22 +310,22 @@ def main():
                     with open(path, "w") as f:
                         json.dump(rec, f, indent=1)
                     if rec.get("skipped"):
-                        print(f"[dryrun]   -> skipped: {rec['reason']}")
+                        _LOG.info(f"[dryrun]   -> skipped: {rec['reason']}")
                     else:
-                        print(f"[dryrun]   -> ok: compile={rec['compile_s']:.1f}s "
+                        _LOG.info(f"[dryrun]   -> ok: compile={rec['compile_s']:.1f}s "
                               f"flops/dev={rec['flops_per_device']:.3e} "
                               f"coll/dev={rec['collective_bytes_per_device']:.3e}B "
                               f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB")
                 except Exception as e:  # noqa: BLE001 — record and continue
                     failures.append((arch, shape, mesh_name, repr(e)))
-                    print(f"[dryrun]   -> FAIL: {e}")
+                    _LOG.error(f"[dryrun]   -> FAIL: {e}")
                     traceback.print_exc()
     if failures:
-        print(f"\n[dryrun] {len(failures)} failures:")
+        _LOG.error(f"[dryrun] {len(failures)} failures:")
         for f in failures:
-            print("   ", *f)
+            _LOG.error("    " + " ".join(str(x) for x in f))
         raise SystemExit(1)
-    print("\n[dryrun] all requested cells compiled")
+    _LOG.info("[dryrun] all requested cells compiled")
 
 
 if __name__ == "__main__":

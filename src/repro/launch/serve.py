@@ -16,6 +16,9 @@ from repro.configs import ARCH_IDS, get_config
 from repro.models import Model, reduced
 from repro.launch.mesh import make_host_mesh
 from repro.sharding import DEFAULT_RULES, logical_axis_rules
+from repro.obs.log import get_logger
+
+_LOG = get_logger("launch.serve")
 
 
 def generate(model: Model, params, prompts: np.ndarray, max_new: int,
@@ -74,15 +77,15 @@ def main():
         rng = np.random.default_rng(0)
         prompts = rng.integers(0, cfg.vocab_size,
                                (args.batch, args.prompt_len))
-        t0 = time.time()
+        t0 = time.perf_counter()
         completions = generate(model, params, prompts, args.max_new,
                                args.temperature)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
     n_tok = args.batch * (args.prompt_len + args.max_new)
-    print(f"[serve] {args.arch}: {args.batch} seqs x "
+    _LOG.info(f"[serve] {args.arch}: {args.batch} seqs x "
           f"({args.prompt_len} prompt + {args.max_new} new) in {dt:.1f}s "
           f"({n_tok/dt:.1f} tok/s incl. compile)")
-    print("[serve] sample completion token ids:", completions[0][:16])
+    _LOG.info(f"[serve] sample completion token ids: {completions[0][:16]}")
 
 
 if __name__ == "__main__":

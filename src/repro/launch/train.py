@@ -27,9 +27,12 @@ from repro.ckpt import CheckpointManager
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.sharding import DEFAULT_RULES, logical_axis_rules
 from repro.sharding.rules import batch_specs
+from repro.obs.log import get_logger
 from repro.train import adamw_init, adafactor_init, make_train_step
 from repro.train.optimizer import OptConfig
 from repro.train.state import train_state_specs
+
+_LOG = get_logger("launch.train")
 
 
 def build_state(model: Model, optimizer: str, key):
@@ -63,7 +66,7 @@ def train(cfg: ModelConfig, *, steps: int, batch: int, seq_len: int,
             state, restored = mgr.restore_or_init(state, shardings)
             if restored >= 0:
                 start_step = restored + 1
-                print(f"[train] resumed from step {restored}")
+                _LOG.info(f"[train] resumed from step {restored}")
 
         step_fn = jax.jit(
             make_train_step(model, opt_cfg, optimizer, accum_steps=accum),
@@ -82,45 +85,45 @@ def train(cfg: ModelConfig, *, steps: int, batch: int, seq_len: int,
 
         old = signal.signal(signal.SIGTERM, on_sigterm)
         losses = []
-        t_start = time.time()
+        t_start = time.perf_counter()
         slow_steps = 0
         step_times = []
         try:
             for i in range(start_step, steps):
                 step_idx, host_batch = pf.get()
                 assert step_idx == i, (step_idx, i)
-                t0 = time.time()
+                t0 = time.perf_counter()
                 state, metrics = step_fn(state, host_batch)
                 loss = float(metrics["loss"])
-                dt = time.time() - t0
+                dt = time.perf_counter() - t0
                 step_times.append(dt)
                 # straggler watchdog: flag steps >3x the trailing median
                 med = sorted(step_times[-20:])[len(step_times[-20:]) // 2]
                 if len(step_times) > 5 and dt > 3 * med:
                     slow_steps += 1
-                    print(f"[train] step {i}: straggler ({dt:.2f}s vs "
+                    _LOG.warning(f"[train] step {i}: straggler ({dt:.2f}s vs "
                           f"median {med:.2f}s)")
                 losses.append(loss)
                 if i % log_every == 0:
                     tput = batch * seq_len / dt
-                    print(f"[train] step {i:5d} loss {loss:.4f} "
+                    _LOG.info(f"[train] step {i:5d} loss {loss:.4f} "
                           f"lr {float(metrics['lr']):.2e} "
                           f"gnorm {float(metrics['grad_norm']):.2f} "
                           f"{dt*1e3:.0f}ms ({tput:.0f} tok/s)")
                 if mgr:
                     mgr.maybe_save(i, state, force=stop["now"])
                 if stop["now"]:
-                    print(f"[train] SIGTERM: checkpointed at step {i}, "
+                    _LOG.warning(f"[train] SIGTERM: checkpointed at step {i}, "
                           f"exiting")
                     break
                 if target_loss is not None and loss <= target_loss:
-                    print(f"[train] target loss {target_loss} reached")
+                    _LOG.info(f"[train] target loss {target_loss} reached")
                     break
         finally:
             pf.close()
             signal.signal(signal.SIGTERM, old)
-        wall = time.time() - t_start
-        print(f"[train] done: {len(losses)} steps in {wall:.1f}s, "
+        wall = time.perf_counter() - t_start
+        _LOG.info(f"[train] done: {len(losses)} steps in {wall:.1f}s, "
               f"loss {losses[0]:.3f} -> {losses[-1]:.3f}, "
               f"{slow_steps} straggler steps flagged")
         return state, losses

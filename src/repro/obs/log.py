@@ -19,8 +19,9 @@ flags log at ``debug`` — invisible by default, exactly as before, but one
 from __future__ import annotations
 
 import logging
-import os
 import sys
+
+from ..utils import env as _env
 
 _LEVELS = {"debug": logging.DEBUG, "info": logging.INFO,
            "quiet": logging.WARNING, "warning": logging.WARNING,
@@ -54,7 +55,7 @@ def configure(level: str | None = None, force: bool = False) -> logging.Logger:
     if _configured and not force and level is None:
         return _ROOT
     if level is None:
-        level = os.environ.get("REPRO_LOG", "info")
+        level = _env.get_str("REPRO_LOG")
     resolved = _LEVELS.get(str(level).lower())
     if resolved is None:
         raise ValueError(f"unknown log level {level!r}; options: "

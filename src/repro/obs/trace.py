@@ -24,6 +24,8 @@ import threading
 import time
 from collections import deque
 
+from ..utils import env as _env
+
 # Span event tuple layout (kept a tuple, not a dataclass, for append cost):
 #   (name, t0_ns, t1_ns, thread_id, thread_name, depth, attrs-dict-or-None)
 _NAME, _T0, _T1, _TID, _TNAME, _DEPTH, _ATTRS = range(7)
@@ -100,6 +102,7 @@ class Tracer:
         # monotonic origin + the wall time it corresponds to, so exported
         # timestamps are relative (t=0 at enable) but anchored for humans
         self._t0_ns = time.monotonic_ns()
+        # repro-lint: allow[no-wallclock] wall-time anchor for exported trace timestamps
         self._t0_wall = time.time()
 
     # -- control ------------------------------------------------------------
@@ -107,6 +110,7 @@ class Tracer:
         if clear:
             self.clear()
         self._t0_ns = time.monotonic_ns()
+        # repro-lint: allow[no-wallclock] wall-time anchor for exported trace timestamps
         self._t0_wall = time.time()
         self.enabled = True
 
@@ -202,8 +206,7 @@ class Tracer:
         return len(events)
 
 
-TRACER = Tracer(enabled=os.environ.get("REPRO_TRACE", "0")
-                not in ("", "0", "false", "off"))
+TRACER = Tracer(enabled=_env.get_bool("REPRO_TRACE"))
 
 
 def span(name: str, **attrs):

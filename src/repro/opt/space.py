@@ -383,6 +383,7 @@ class AdjacencySpace(SearchSpace):
             ru, rv = find(self.pair_u[g]), find(self.pair_v[g])
             if ru != rv:
                 parent[ru] = rv
+        # repro-lint: allow[axis-loop] sequential reference oracle (vectorized twin in repair())
         roots = np.asarray([find(i) for i in range(n)])
         comp_ids = np.unique(roots)
         while len(comp_ids) > 1:

@@ -20,6 +20,8 @@ import hashlib
 import os
 import subprocess
 
+from ..utils import env as _env
+
 _SOURCE = r"""
 #include <stdint.h>
 #include <stdlib.h>
@@ -281,7 +283,7 @@ def _cache_dir() -> str:
     """Per-user, 0700 cache dir — never a shared world-writable location
     (loading a .so from a predictable /tmp path would let another local
     user plant code)."""
-    path = os.environ.get("REPRO_CKERNEL_DIR")
+    path = _env.get_str("REPRO_CKERNEL_DIR")
     if path is None:
         base = os.environ.get("XDG_CACHE_HOME",
                               os.path.join(os.path.expanduser("~"),

@@ -1,0 +1,231 @@
+"""Central registry of every ``REPRO_*`` environment knob (ISSUE 8).
+
+Every env-var read in the package goes through this module: the knob's
+name, type, default, and doc live in ONE place, ``python -m repro.analysis
+--env`` prints the table, and the repo lint (``repro.analysis.lint``, rule
+``env-read``) rejects stray ``os.environ["REPRO_*"]`` reads anywhere else
+in ``src/``. Reads stay *dynamic* — the value is fetched from the process
+environment at every call, exactly like the scattered ``os.environ.get``
+calls this replaces — so flipping a knob mid-process behaves as before
+(subject to each call site's own trace-time caveats).
+
+Semantics preserved from the original call sites:
+
+* ``get_int`` — ``int(os.environ.get(name, default))``;
+* ``get_opt_int`` — ``int(v) if v else None`` (unset and ``""`` both mean
+  "auto");
+* ``get_str`` — the raw string, knob default when unset;
+* ``get_bool`` — false for ``"" / "0" / "false" / "off"`` (the
+  ``REPRO_TRACE`` truthiness rule).
+
+``override(NAME=value, OTHER=None)`` is a context manager for tests and
+the jaxpr auditor: it sets (or, for ``None``, unsets) variables and
+restores the previous state on exit.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+from dataclasses import dataclass
+
+_FALSY = ("", "0", "false", "off")
+
+
+@dataclass(frozen=True)
+class Knob:
+    """One registered environment knob."""
+    name: str
+    type: str                 # "int" | "str" | "bool" | "path"
+    default: object           # None = unset / auto
+    doc: str
+    choices: tuple | None = None
+
+
+KNOBS: dict[str, Knob] = {}
+
+
+def _register(name: str, type: str, default, doc: str,
+              choices: tuple | None = None) -> Knob:
+    knob = Knob(name, type, default, doc, choices)
+    KNOBS[name] = knob
+    return knob
+
+
+# --- kernels ---------------------------------------------------------------
+_register(
+    "REPRO_PALLAS_INTERPRET", "str", "1",
+    "'1' (default) runs Pallas kernels through the interpreter (the CPU "
+    "container); '0' compiles them for hardware and makes compiled Pallas "
+    "the default kernel backend everywhere.")
+_register(
+    "REPRO_LOAD_PROP_BACKEND", "str", None,
+    "Force the load-propagation backend (auto-selected per runtime when "
+    "unset).",
+    choices=("pallas", "pallas_interpret", "xla", "pallas_tiled",
+             "pallas_tiled_interpret", "xla_blocked"))
+_register(
+    "REPRO_LOAD_PROP_FUSED_N", "int", 160,
+    "Node count above which load propagation promotes the fused/dense "
+    "backends to their destination-tiled twins.")
+_register(
+    "REPRO_LOAD_PROP_TILE", "int", None,
+    "Pin the destination-tile size of the tiled load-propagation variants "
+    "(auto via load_prop.pick_tile when unset).")
+_register(
+    "REPRO_APSP_BACKEND", "str", None,
+    "Force the APSP backend (auto-selected per runtime when unset).",
+    choices=("pallas", "pallas_interpret", "xla", "pallas_tiled",
+             "pallas_tiled_interpret", "xla_blocked"))
+_register(
+    "REPRO_APSP_FUSED_N", "int", 160,
+    "Node count above which APSP promotes the fused/dense backends to "
+    "their blocked twins.")
+_register(
+    "REPRO_APSP_TILE", "int", None,
+    "Pin the row-slab tile size of the blocked APSP variants (auto when "
+    "unset).")
+
+# --- routing ---------------------------------------------------------------
+_register(
+    "REPRO_ROUTING_BLOCK_N", "int", 160,
+    "Node count above which routing-table construction switches to the "
+    "destination-blocked scans (read at trace time).")
+_register(
+    "REPRO_ROUTING_TILE", "int", None,
+    "Pin the destination-slab tile of the blocked routing scans (auto via "
+    "load_prop.pick_tile when unset).")
+
+# --- sim -------------------------------------------------------------------
+_register(
+    "REPRO_CKERNEL_DIR", "path", None,
+    "Cache directory for the runtime-compiled FastSim C kernel "
+    "(default: $XDG_CACHE_HOME/repro_simfast_ckernel, mode 0700).")
+
+# --- observability ---------------------------------------------------------
+_register(
+    "REPRO_TRACE", "bool", "0",
+    "Enable the process-wide span tracer at import "
+    "('', '0', 'false', 'off' = disabled).")
+_register(
+    "REPRO_LOG", "str", "info",
+    "Process-wide log verbosity of the 'repro' logging root.",
+    choices=("debug", "info", "quiet", "warning", "error"))
+
+# --- benchmarks ------------------------------------------------------------
+_register(
+    "REPRO_BENCH_FULL", "bool", "0",
+    "Run benchmarks at full scale instead of the smoke subset.")
+_register(
+    "REPRO_OPT_BENCH_POP", "int", 16,
+    "Population size of the optimizer convergence benchmark.")
+_register(
+    "REPRO_OPT_BENCH_GENS", "int", 10,
+    "Generation count of the optimizer convergence benchmark.")
+_register(
+    "REPRO_OPT_BENCH_N", "int", 32,
+    "Chiplet count of the optimizer convergence benchmark's free-form "
+    "space.")
+_register(
+    "REPRO_BENCH_LARGE_N_NS", "str", "64,144,256,576",
+    "Comma-separated (square) node counts for the large-n kernel and "
+    "optimizer scaling tables.")
+_register(
+    "REPRO_SWEEP_PREP_POINTS", "int", 1000,
+    "Design-point count of the sweep-preparation benchmark.")
+
+
+def _knob(name: str) -> Knob:
+    try:
+        return KNOBS[name]
+    except KeyError:
+        raise KeyError(
+            f"{name} is not a registered REPRO_* knob; add it to "
+            f"repro/utils/env.py (see `python -m repro.analysis --env`)"
+        ) from None
+
+
+def get_str(name: str) -> str | None:
+    """Raw string value; the knob default when unset."""
+    knob = _knob(name)
+    v = os.environ.get(name)
+    return knob.default if v is None else v
+
+
+def get_int(name: str) -> int:
+    """``int(value)``; the knob default when unset."""
+    knob = _knob(name)
+    v = os.environ.get(name)
+    return int(knob.default) if v is None else int(v)
+
+
+def get_opt_int(name: str) -> int | None:
+    """``int(value)``, or None when unset/empty (= "auto")."""
+    _knob(name)
+    v = os.environ.get(name)
+    return int(v) if v else None
+
+
+def get_bool(name: str) -> bool:
+    """Truthy unless unset-default/'', '0', 'false', or 'off'."""
+    knob = _knob(name)
+    v = os.environ.get(name)
+    if v is None:
+        v = knob.default if knob.default is not None else ""
+    return str(v).lower() not in _FALSY
+
+
+@contextmanager
+def override(**values):
+    """Temporarily set (value) or unset (None) environment knobs; restores
+    the prior environment on exit. Keys must be registered knobs — typos
+    fail loudly instead of silently not overriding anything."""
+    for name in values:
+        _knob(name)
+    saved = {name: os.environ.get(name) for name in values}
+    try:
+        for name, v in values.items():
+            if v is None:
+                os.environ.pop(name, None)
+            else:
+                os.environ[name] = str(v)
+        yield
+    finally:
+        for name, old in saved.items():
+            if old is None:
+                os.environ.pop(name, None)
+            else:
+                os.environ[name] = old
+
+
+def table() -> list[dict]:
+    """One row per knob (name, type, default, current, doc) — the
+    ``python -m repro.analysis --env`` listing."""
+    rows = []
+    for name in sorted(KNOBS):
+        k = KNOBS[name]
+        cur = os.environ.get(name)
+        rows.append({
+            "name": k.name, "type": k.type,
+            "default": "(auto)" if k.default is None else str(k.default),
+            "current": "(unset)" if cur is None else cur,
+            "doc": k.doc,
+            "choices": "|".join(k.choices) if k.choices else "",
+        })
+    return rows
+
+
+def format_table() -> str:
+    rows = table()
+    cols = ("name", "type", "default", "current")
+    widths = {c: max(len(c), *(len(r[c]) for r in rows)) for c in cols}
+    lines = ["  ".join(c.ljust(widths[c]) for c in cols)]
+    lines.append("  ".join("-" * widths[c] for c in cols))
+    for r in rows:
+        lines.append("  ".join(r[c].ljust(widths[c]) for c in cols))
+        lines.append(" " * 4 + r["doc"]
+                     + (f" [{r['choices']}]" if r["choices"] else ""))
+    return "\n".join(lines)
+
+
+__all__ = ["Knob", "KNOBS", "get_str", "get_int", "get_opt_int", "get_bool",
+           "override", "table", "format_table"]

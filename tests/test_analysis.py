@@ -1,0 +1,319 @@
+"""Static-analysis gate tests (ISSUE 8).
+
+Two halves:
+
+* seeded violations — tiny fixture programs and source files that each
+  break exactly one contract/lint rule, proving every rule actually
+  fires (a gate that can't catch its target is worse than none);
+* the real thing — the repo's own lint scope and audited-program
+  registry must come back clean (minus the HLO-compile checks, which the
+  CI ``analysis`` job runs via ``--check``; they're minutes of XLA
+  compile time this suite doesn't re-pay).
+"""
+from __future__ import annotations
+
+import dataclasses
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core  # noqa: F401  (import order: core before routing)
+from repro.analysis import registry as registry_mod
+from repro.analysis.findings import (Finding, apply_baseline, parse_allows,
+                                     write_baseline, load_baseline)
+from repro.analysis.jaxpr_audit import (Contract, audit_contract, iter_eqns,
+                                        jaxpr_key)
+from repro.analysis.lint import lint_file, lint_paths
+from repro.utils import env
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# seeded jaxpr-contract violations
+# ---------------------------------------------------------------------------
+
+def _trace(fn, *shapes):
+    return jax.make_jaxpr(fn)(*[jax.ShapeDtypeStruct(s, d)
+                                for s, d in shapes])
+
+
+def test_scatter_fixture_caught():
+    """A load-prop lookalike accumulating via .at[].add must be flagged."""
+
+    def scatterful(load, idx):
+        return jnp.zeros_like(load).at[idx].add(load)
+
+    c = Contract(
+        name="fixture.scatter",
+        trace=lambda: _trace(scatterful, ((8, 8), jnp.float32),
+                             ((8,), jnp.int32)),
+        forbidden_primitives=("scatter", "scatter-add"))
+    findings = audit_contract(c)
+    assert _rules(findings) == ["audit-forbidden-primitive"]
+    assert "scatter-add" in findings[0].message
+
+
+@pytest.mark.filterwarnings("ignore:Explicitly requested dtype")
+def test_f64_fixture_caught():
+    """An explicit float64 cast must be flagged under the x64 trace —
+    and must NOT be masked by x64-off canonicalization."""
+
+    def leaky(x):
+        return (x.astype(jnp.float64) * 2).astype(jnp.float32)
+
+    c = Contract(name="fixture.f64",
+                 trace=lambda: _trace(leaky, ((4,), jnp.float32)),
+                 forbid_f64=True)
+    findings = audit_contract(c)
+    assert "audit-f64" in _rules(findings)
+
+
+def test_scalar_where_f64_fixture_caught():
+    """The real leak pattern this repo had: jnp.where with two Python
+    scalar branches silently computes in float64 when x64 is on."""
+
+    def leaky(mask):
+        return jnp.where(mask, 0.0, 1e9).astype(jnp.float32)
+
+    c = Contract(name="fixture.where-f64",
+                 trace=lambda: _trace(leaky, ((4,), jnp.bool_)),
+                 forbid_f64=True)
+    assert "audit-f64" in _rules(audit_contract(c))
+
+
+def test_transient_shape_fixture_caught():
+    """Materializing a [P, n, n] stack in a repair-shaped program must
+    trip both the symbolic-shape and the element-count bounds."""
+    P, n = 12, 16
+
+    def dense_repair(bits):
+        stack = jnp.zeros((P, n, n), jnp.float32) + bits[:, :, None]
+        return stack.sum()
+
+    c = Contract(
+        name="fixture.pnn",
+        trace=lambda: _trace(dense_repair, ((P, n), jnp.float32)),
+        dims={"P": P, "n": n},
+        forbidden_shapes=(("P", "n", "n"),),
+        max_transient_elements=P * n)
+    rules = _rules(audit_contract(c))
+    assert "audit-forbidden-shape" in rules
+    assert "audit-transient-bound" in rules
+
+
+def test_fragmented_ladder_fixture_caught():
+    """Identity bucketing (compile per exact size) must be reported as a
+    recompile hazard against the expected bucket count."""
+    sizes = (5, 8, 9, 16, 17)
+
+    def ladder():
+        return [jaxpr_key(_trace(lambda x: x * 2, ((s,), jnp.float32)))
+                for s in sizes]
+
+    c = Contract(name="fixture.ladder",
+                 trace=lambda: _trace(lambda x: x * 2, ((8,), jnp.float32)),
+                 ladder=ladder, ladder_expected=3)
+    findings = [f for f in audit_contract(c) if f.rule == "audit-recompile"]
+    assert len(findings) == 1
+    assert "5 distinct" in findings[0].message
+
+
+def test_narrow_gather_fixture_caught():
+    """An int16-indexed table gather must be flagged until widened.
+
+    jnp indexing helpers widen indices themselves, so the narrow fixture
+    goes through lax.gather directly — the spelling a hand-rolled kernel
+    regression would use."""
+    dnums = jax.lax.GatherDimensionNumbers(
+        offset_dims=(), collapsed_slice_dims=(0,), start_index_map=(0,))
+
+    def narrow(table, idx16):
+        return jax.lax.gather(table, idx16[:, None], dnums,
+                              slice_sizes=(1,))
+
+    def widened(table, idx16):
+        return jax.lax.gather(table, idx16[:, None].astype(jnp.int32),
+                              dnums, slice_sizes=(1,))
+
+    shapes = (((8,), jnp.float32), ((4,), jnp.int16))
+    c = Contract(name="fixture.gather",
+                 trace=lambda: _trace(narrow, *shapes),
+                 gather_index_min_bits=32)
+    assert "audit-gather-index" in _rules(audit_contract(c))
+    c_ok = dataclasses.replace(c, trace=lambda: _trace(widened, *shapes))
+    assert audit_contract(c_ok) == []
+
+
+def test_out_dtype_and_trace_error():
+    c = Contract(name="fixture.dtype",
+                 trace=lambda: _trace(lambda x: x.astype(jnp.float32),
+                                      ((4,), jnp.int32)),
+                 out_dtypes=(jnp.int16,))
+    assert _rules(audit_contract(c)) == ["audit-out-dtype"]
+    boom = Contract(name="fixture.boom",
+                    trace=lambda: (_ for _ in ()).throw(ValueError("no")))
+    assert _rules(audit_contract(boom)) == ["audit-trace-error"]
+
+
+def test_iter_eqns_recurses_into_jitted_calls():
+    def inner(x):
+        return x.at[jnp.arange(3)].add(1.0)
+
+    closed = jax.make_jaxpr(lambda x: jax.jit(inner)(x))(jnp.zeros(8))
+    assert "scatter-add" in {e.primitive.name for e in iter_eqns(closed)}
+
+
+# ---------------------------------------------------------------------------
+# seeded lint violations
+# ---------------------------------------------------------------------------
+
+def _lint_src(tmp_path, rel, body):
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(body))
+    return lint_file(path, root=tmp_path)
+
+
+def test_lint_env_read_caught(tmp_path):
+    findings = _lint_src(tmp_path, "src/repro/foo.py", """\
+        import os
+        a = os.environ["REPRO_STRAY"]
+        b = os.environ.get("REPRO_OTHER", "1")
+        c = os.getenv("REPRO_THIRD")
+        ok = os.environ.get("XDG_CACHE_HOME")
+    """)
+    assert _rules(findings) == ["env-read"]
+    assert len(findings) == 3
+
+
+def test_lint_print_and_wallclock_caught(tmp_path):
+    findings = _lint_src(tmp_path, "src/repro/foo.py", """\
+        import time
+        print("hi")
+        t = time.time()
+        ok = time.perf_counter()
+    """)
+    assert _rules(findings) == ["no-print", "no-wallclock"]
+    # benchmarks may print and read wall time
+    assert _lint_src(tmp_path, "benchmarks/foo.py", """\
+        import time
+        print("hi", time.time())
+    """) == []
+
+
+def test_lint_axis_loop_and_np_random_caught(tmp_path):
+    findings = _lint_src(tmp_path, "src/repro/kernels/foo.py", """\
+        import numpy as np
+        def f(n, k_phys):
+            rng = np.random.default_rng(0)
+            acc = [rng.random() for _ in range(n)]
+            for d in range(n):
+                acc.append(d)
+            for r in range(1, k_phys + 1):   # radix table: fine
+                acc.append(r)
+            for i in range(0, n, 16):        # chunk loop: fine
+                acc.append(i)
+            return acc
+    """)
+    assert _rules(findings) == ["axis-loop", "no-np-random"]
+    assert sum(f.rule == "axis-loop" for f in findings) == 2
+
+
+def test_lint_suppressions(tmp_path):
+    findings = _lint_src(tmp_path, "src/repro/foo.py", """\
+        print("a")  # repro-lint: allow[no-print] CLI output
+        # repro-lint: allow[no-print] next-line form
+        print("b")
+        print("c")  # repro-lint: allow[no-print]
+    """)
+    # a and b suppressed; c's reason-less allow still suppresses the
+    # print but is itself the finding that fails the gate
+    assert _rules(findings) == ["suppression-reason"]
+    assert len(findings) == 1
+
+
+def test_parse_allows_reason_required():
+    allows, bad = parse_allows(
+        ["x = 1  # repro-lint: allow[no-print, env-read] because demo",
+         "y = 2  # repro-lint: allow[no-print]"], "f.py")
+    assert allows[1] == {"no-print", "env-read"}
+    assert [b.rule for b in bad] == ["suppression-reason"]
+
+
+def test_baseline_round_trip(tmp_path):
+    f1 = Finding(rule="no-print", path="a.py", line=3, message="m")
+    f2 = Finding(rule="env-read", path="b.py", line=9, message="m")
+    path = tmp_path / "baseline.json"
+    write_baseline([f1], path)
+    baseline = load_baseline(path)
+    # line-number drift must not resurrect a baselined finding
+    moved = dataclasses.replace(f1, line=99)
+    assert apply_baseline([moved, f2], baseline) == [f2]
+
+
+# ---------------------------------------------------------------------------
+# the real registry and repo must pass
+# ---------------------------------------------------------------------------
+
+def test_repo_lint_clean():
+    assert lint_paths() == []
+
+
+@pytest.mark.slow
+def test_registry_contracts_clean():
+    """Every audited program satisfies its contract (HLO-compile bounds
+    excluded here; the CI analysis job pays those via --check)."""
+    cs = [dataclasses.replace(c, hlo=None)
+          for c in registry_mod.contracts()]
+    findings = []
+    for c in cs:
+        findings += audit_contract(c)
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_registry_names_unique_and_bench_plan():
+    names = [c.name for c in registry_mod.contracts()]
+    assert len(names) == len(set(names))
+    plan = registry_mod.large_n_plan()
+    for op in ("load_propagate", "apsp"):
+        assert plan[op]["dense"] == "xla"
+        assert plan[op]["blocked"] == "xla_blocked"
+        assert plan[op]["dense_max_n"] == registry_mod.LARGE_N_DENSE_MAX
+
+
+# ---------------------------------------------------------------------------
+# env-knob registry (satellite: every REPRO_* read goes through it)
+# ---------------------------------------------------------------------------
+
+def test_env_registry_accessors():
+    with env.override(REPRO_LOAD_PROP_FUSED_N=64, REPRO_TRACE="1",
+                      REPRO_LOAD_PROP_TILE=None):
+        assert env.get_int("REPRO_LOAD_PROP_FUSED_N") == 64
+        assert env.get_bool("REPRO_TRACE") is True
+        assert env.get_opt_int("REPRO_LOAD_PROP_TILE") is None
+    assert env.get_int("REPRO_LOAD_PROP_FUSED_N") == 160
+    with pytest.raises(KeyError):
+        env.get_str("REPRO_NOT_A_KNOB")
+    with pytest.raises(KeyError):
+        env.override(REPRO_NOT_A_KNOB="1").__enter__()
+
+
+def test_env_table_lists_every_knob():
+    table = env.format_table()
+    for name in env.KNOBS:
+        assert name in table
+
+
+def test_cli_env_and_list():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--env"],
+        capture_output=True, text=True, check=True,
+        cwd=str(registry_mod.__file__).rsplit("/src/", 1)[0] + "/src")
+    assert "REPRO_PALLAS_INTERPRET" in out.stdout
