@@ -1,0 +1,185 @@
+"""Chaos harness for the crash-proof search (ISSUE 9): prove that the
+optimizer survives SIGKILL mid-run with a *bit-identical* resume, and that
+forced kernel-backend failures degrade gracefully through the fallback
+ladder without changing results.
+
+Three phases, all on the same small fault-aware NSGA-II configuration:
+
+1. **reference** — one uninterrupted ``python -m repro.opt`` run; its
+   front JSON is the ground truth.
+2. **SIGKILL + resume** — the same run, fresh checkpoint, SIGKILL'd
+   mid-run (after the first checkpoint write, so the kill lands between —
+   or inside — snapshot writes), repeatedly; after each kill the
+   checkpoint must still be loadable (``load_checkpoint_resilient``), and
+   the final resumed run's front must equal the reference byte-for-byte.
+3. **forced backend failure** — the run again with the kernel backends
+   pinned to a Pallas rung and ``REPRO_CHAOS_BACKEND_FAIL`` failing that
+   rung at dispatch: the fallback ladder must land on XLA, finish, and
+   reproduce the reference front exactly.
+
+Exit 0 only if all three agree. ``--out`` writes a JSON summary (the CI
+chaos job uploads it next to BENCH_faults.json).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SRC = os.path.join(REPO_ROOT, "src")
+
+OPT_ARGS = ["--n-chiplets", "10", "--max-degree", "4",
+            "--generations", "8", "--pop-size", "8", "--seed", "0",
+            "--faults", "--fault-model", "single", "--fault-top-k", "6",
+            "--max-interposer-area", "6500", "--quiet"]
+
+
+def _env(extra=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    if extra:
+        env.update(extra)
+    return env
+
+
+def run_opt(ckpt: str, out: str, extra_env=None) -> None:
+    cmd = [sys.executable, "-m", "repro.opt", *OPT_ARGS,
+           "--checkpoint", ckpt, "--out", out]
+    subprocess.run(cmd, env=_env(extra_env), check=True,
+                   stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+
+
+def run_opt_and_kill(ckpt: str, out: str, delay_after_ckpt: float) -> bool:
+    """Start the run, wait for a *new* snapshot write (mtime change, so a
+    resume round waits for fresh progress, not the previous round's file),
+    then SIGKILL it ``delay_after_ckpt`` seconds later. Returns True if
+    the kill landed mid-run; a clean early finish must exit 0."""
+    def mtime():
+        try:
+            return os.stat(ckpt).st_mtime_ns
+        except OSError:
+            return None
+
+    before = mtime()
+    cmd = [sys.executable, "-m", "repro.opt", *OPT_ARGS,
+           "--checkpoint", ckpt, "--out", out]
+    proc = subprocess.Popen(cmd, env=_env(),
+                            stdout=subprocess.DEVNULL,
+                            stderr=subprocess.DEVNULL)
+    try:
+        deadline = time.time() + 120.0
+        while time.time() < deadline and proc.poll() is None \
+                and mtime() == before:
+            time.sleep(0.02)
+        time.sleep(delay_after_ckpt)
+        if proc.poll() is not None:
+            if proc.returncode != 0:
+                raise RuntimeError(f"opt run died on its own with exit "
+                                   f"code {proc.returncode}")
+            return False
+        proc.kill()                      # SIGKILL: no flush, no handlers
+        proc.wait()
+        return True
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+
+
+def checkpoint_loadable(ckpt: str) -> bool:
+    from repro.opt.runner import load_checkpoint_resilient
+    state, path = load_checkpoint_resilient(ckpt)
+    if state is None:
+        print(f"FAIL: no loadable snapshot at {ckpt} after SIGKILL")
+        return False
+    print(f"  snapshot survived: {os.path.basename(path)} "
+          f"(generation {state.get('generation')})")
+    return True
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    p.add_argument("--kills", type=int, default=2,
+                   help="number of SIGKILL rounds before the final resume")
+    p.add_argument("--out", type=str, default=None,
+                   help="write a JSON summary of the three phases here")
+    p.add_argument("--workdir", type=str, default=None,
+                   help="scratch directory (default: a temp dir)")
+    args = p.parse_args(argv)
+
+    import tempfile
+    workdir = args.workdir or tempfile.mkdtemp(prefix="chaos_opt_")
+    os.makedirs(workdir, exist_ok=True)
+    ref_front = os.path.join(workdir, "front_ref.json")
+    chaos_ckpt = os.path.join(workdir, "ck_chaos.json")
+    chaos_front = os.path.join(workdir, "front_chaos.json")
+    forced_front = os.path.join(workdir, "front_forced.json")
+
+    print("[1/3] reference run (uninterrupted)")
+    t0 = time.perf_counter()
+    run_opt(os.path.join(workdir, "ck_ref.json"), ref_front)
+    ref_s = time.perf_counter() - t0
+    reference = open(ref_front, "rb").read()
+    print(f"  done in {ref_s:.1f}s, front {len(json.loads(reference))} "
+          f"points")
+
+    print(f"[2/3] SIGKILL mid-run x{args.kills}, then resume")
+    kills_landed = 0
+    for i in range(args.kills):
+        # vary the kill point so different rounds land in different
+        # generations (and sometimes inside the snapshot write itself)
+        landed = run_opt_and_kill(chaos_ckpt, chaos_front,
+                                  delay_after_ckpt=0.3 * (i + 1))
+        kills_landed += bool(landed)
+        print(f"  kill round {i + 1}: "
+              f"{'landed mid-run' if landed else 'run finished first'}")
+        if not checkpoint_loadable(chaos_ckpt):
+            return 1
+    run_opt(chaos_ckpt, chaos_front)     # resume to completion
+    resumed = open(chaos_front, "rb").read()
+    resume_identical = resumed == reference
+    print(f"  resumed front bit-identical to reference: "
+          f"{resume_identical}")
+    if not resume_identical:
+        print("FAIL: resumed front differs from the uninterrupted run")
+
+    print("[3/3] forced backend failure (fallback ladder smoke)")
+    # pin the kernels to the Pallas rung and fail it at dispatch: the
+    # ladder must fall back to XLA and reproduce the reference exactly
+    run_opt(os.path.join(workdir, "ck_forced.json"), forced_front,
+            extra_env={"REPRO_LOAD_PROP_BACKEND": "pallas_interpret",
+                       "REPRO_APSP_BACKEND": "pallas_interpret",
+                       "REPRO_CHAOS_BACKEND_FAIL": "pallas_interpret"})
+    forced = open(forced_front, "rb").read()
+    forced_identical = forced == reference
+    print(f"  degraded-backend front bit-identical to reference: "
+          f"{forced_identical}")
+    if not forced_identical:
+        print("FAIL: fallback-ladder run changed the front")
+
+    ok = resume_identical and forced_identical
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"benchmark": "chaos_opt",
+                       "reference_seconds": round(ref_s, 2),
+                       "kill_rounds": args.kills,
+                       "kills_landed_mid_run": kills_landed,
+                       "resume_bit_identical": resume_identical,
+                       "forced_backend_bit_identical": forced_identical,
+                       "ok": ok}, f, indent=2)
+            f.write("\n")
+        print(f"summary -> {args.out}")
+    print("chaos harness: " + ("OK" if ok else "FAILED"))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

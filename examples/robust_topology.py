@@ -1,0 +1,116 @@
+"""Designing for failure: fault-aware topology search (ISSUE 9).
+
+A design that is optimal with every link alive can strand traffic the
+moment one interposer trace cracks. This example runs the fault-injection
+machinery end to end on CPU in well under a minute:
+
+1. evaluate one population under a batch of fault scenarios in a single
+   fused [population x scenario] device call (`faults.model` samplers ->
+   `DseEngine.evaluate_genomes_faults_async`);
+2. optimize the same space twice — pristine objectives vs worst-case
+   objectives over every single-link failure (what `python -m repro.opt
+   --faults` runs) — and score both fronts under the same failure
+   battery.
+
+    PYTHONPATH=src python examples/robust_topology.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import numpy as np
+
+from repro.dse import DseEngine
+from repro.faults.model import iid_link_faults, single_link_faults
+from repro.faults.objectives import REACH_EPS, FaultSetup, reduce_grid
+from repro.opt import (
+    AdjacencySpace, Budgets, EvolutionarySearch, OptRunner,
+    PopulationEvaluator,
+)
+
+N_CHIPLETS = 12
+MAX_DEGREE = 3              # sparse enough that one dead link can hurt
+GENERATIONS = 8
+POP_SIZE = 8
+AREA_BUDGET = 6500.0        # mm^2 of interposer
+
+
+def fault_grid_demo(space, engine):
+    """One fused device call: 8 designs x 9 scenarios, no Python loops."""
+    rng = np.random.default_rng(0)
+    genomes = space.sample(rng, 8)
+    scenarios = iid_link_faults(space, p=0.1, n_scenarios=8, seed=1)
+    grid = engine.evaluate_genomes_faults_async(
+        space, genomes, scenarios.link_fail, scenarios.node_fail).result()
+    reduced = reduce_grid(grid.latency, grid.throughput,
+                          grid.reachable_fraction, scenarios.weights)
+    print(f"[faults] {len(genomes)} designs x {scenarios.n_scenarios} "
+          f"scenarios (model '{scenarios.kind}') in one device call:")
+    for i in range(len(genomes)):
+        print(f"   design {i}: pristine lat={grid.latency[i, 0]:7.2f}  "
+              f"worst lat={reduced['worst_latency'][i]:7.2f}  "
+              f"P[disconnect]={reduced['disconnect_prob'][i]:.2f}  "
+              f"min reach={reduced['min_reachable_fraction'][i]:.3f}")
+
+
+def optimize(space, faults=None, seed=0):
+    evaluator = PopulationEvaluator(
+        space, budgets=Budgets(max_interposer_area=AREA_BUDGET),
+        device_path=True, faults=faults)
+    opt = EvolutionarySearch(space, evaluator, seed=seed,
+                             pop_size=POP_SIZE)
+    OptRunner(opt).run(GENERATIONS, progress=False)
+    return [np.asarray(e.payload, np.int64) for e in opt.archive.front()]
+
+
+def worst_case(engine, space, battery, front):
+    """Best worst-case latency on a front; a scenario that strands traffic
+    counts as unbounded latency (the stranded packets never arrive)."""
+    grid = engine.evaluate_genomes_faults_async(
+        space, np.stack(front), battery.link_fail,
+        battery.node_fail).result()
+    lat = np.asarray(grid.latency, np.float64)
+    reach = np.asarray(grid.reachable_fraction, np.float64)
+    worst = np.where(reach < 1.0 - REACH_EPS, np.inf, lat).max(axis=1)
+    best = int(np.argmin(worst))
+    return float(worst[best]), float(reach[best].min())
+
+
+def main():
+    space = AdjacencySpace(n_chiplets=N_CHIPLETS, max_degree=MAX_DEGREE)
+    engine = DseEngine()
+
+    fault_grid_demo(space, engine)
+
+    battery = single_link_faults(space)      # every single-link failure
+    print(f"\n[faults] optimizing {N_CHIPLETS} chiplets at degree <= "
+          f"{MAX_DEGREE}, pristine vs fault-aware "
+          f"({battery.n_scenarios} single-link scenarios):")
+    t0 = time.perf_counter()
+    pristine_front = optimize(space)
+    robust_front = optimize(space, faults=FaultSetup(scenarios=battery))
+    dt = time.perf_counter() - t0
+    if not robust_front:
+        print("   fault-aware search found no fully fault-tolerant design "
+              "at this budget -- raise GENERATIONS")
+        return
+
+    p_worst, p_reach = worst_case(engine, space, battery, pristine_front)
+    r_worst, r_reach = worst_case(engine, space, battery, robust_front)
+    print(f"   pristine-optimized: worst-case lat={p_worst:.2f}  "
+          f"min reach={p_reach:.3f}")
+    print(f"   fault-aware:        worst-case lat={r_worst:.2f}  "
+          f"min reach={r_reach:.3f}")
+    if not np.isfinite(p_worst):
+        print("   -> the pristine-optimal design STRANDS traffic under a "
+              "single link failure; the fault-aware front never does")
+    else:
+        print(f"   -> margin: {(p_worst - r_worst) / p_worst * 100:.1f}%")
+    print(f"   ({dt:.1f}s for both searches)")
+    print("\nSame thing from the CLI:  python -m repro.opt --space "
+          "adjacency --faults --fault-model single")
+
+
+if __name__ == "__main__":
+    main()

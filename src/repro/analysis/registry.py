@@ -153,6 +153,26 @@ def _adjacency_ladder(n_chiplets: int, pops=(5, 8, 9, 16, 17)):
     return [jaxpr_key(_trace_adjacency(n_chiplets, p)) for p in pops]
 
 
+def _trace_adjacency_faults(n_chiplets: int, pop: int, n_faults: int):
+    import jax
+    import jax.numpy as jnp
+
+    from ..dse import genomes
+
+    pipe = _adjacency_pipeline(n_chiplets)
+    bp = genomes.bucket_population(pop, 1)
+    G = pipe.space.genome_length
+    fn = genomes._adjacency_faults_fn(pipe.mesh, pipe.n, pipe.k_phys,
+                                      pipe._euclid, pipe.max_hops, False)
+    return jax.make_jaxpr(fn)(
+        _sds((bp, G), jnp.int32), _sds((n_faults, G), jnp.bool_),
+        _sds((n_faults, n_chiplets), jnp.bool_),
+        pipe._pair_u, pipe._pair_v, pipe._pair_id, pipe._chain_slot,
+        pipe._chain_eslot, pipe._inv_j, pipe._inv_c, pipe._col, pipe._row,
+        pipe._side, pipe._phyx, pipe._phyy, pipe._cphyx, pipe._cphyy,
+        pipe._bw, pipe._traffic, pipe._consts)
+
+
 def _trace_parametric(n_raw: int, pop: int):
     import jax
     import jax.numpy as jnp
@@ -294,6 +314,19 @@ def contracts() -> tuple[Contract, ...]:
             ladder=lambda: _adjacency_ladder(16),
             # pops (5, 8, 9, 16, 17) bucket to {8, 16, 32}
             ladder_expected=3),
+        Contract(
+            name="dse.genomes.adjacency_faults[n=16,P=8,F=4]",
+            description="fused [P, F] population x fault grid "
+                        "(scatter-free; flat [P*F] gathers, never a "
+                        "[P, F, n, n] transient)",
+            trace=lambda: _trace_adjacency_faults(16, 8, 4),
+            forbidden_primitives=_FORBIDDEN,
+            forbid_f64=True,
+            gather_index_min_bits=32,
+            out_dtypes=(jnp.float32, jnp.float32, jnp.float32,
+                        jnp.float32),
+            dims={"P": 8, "F": 4, "n": 16},
+            forbidden_shapes=(("P", "F", "n", "n"),)),
         Contract(
             name="dse.genomes.parametric[n<=48]",
             description="structure-table parametric eval (int16 tables)",

@@ -28,6 +28,7 @@ import jax
 import ml_dtypes
 import numpy as np
 
+from ..faults.harness import CheckpointCorruptError, file_digest
 from ..obs.log import get_logger
 from ..obs.trace import span as _span
 from ..utils.version import check_version_stamp, version_stamp
@@ -88,7 +89,8 @@ def _save_checkpoint(directory, step, tree, keep_last, config_hash) -> str:
         path = os.path.join(tmp, f"shard_{shard_idx}.npz")
         np.savez(path, **shard)
         manifest["shards"].append(
-            {"file": f"shard_{shard_idx}.npz", "keys": sorted(shard)})
+            {"file": f"shard_{shard_idx}.npz", "keys": sorted(shard),
+             "sha256": file_digest(path)})
         shard, shard_bytes = {}, 0
         shard_idx += 1
 
@@ -148,18 +150,7 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
-def restore_checkpoint(directory: str, tree_like, step: int | None = None,
-                       shardings=None, config_hash: str | None = None):
-    """Restore into the structure of ``tree_like``. ``shardings`` (optional
-    pytree of NamedSharding) re-shards onto the current mesh — restoring a
-    512-chip checkpoint onto 1 CPU or vice versa is the elastic path.
-    A repro/jax/config-hash mismatch against the manifest's version stamp
-    warns (resuming across versions is legitimate for elastic restarts)
-    rather than failing."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint under {directory}")
+def _restore_step(directory, step, tree_like, shardings, config_hash):
     d = os.path.join(directory, f"step_{step}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
@@ -174,7 +165,12 @@ def restore_checkpoint(directory: str, tree_like, step: int | None = None,
             f"{len(leaves)} (architecture mismatch?)")
     data: dict[str, np.ndarray] = {}
     for sh in manifest["shards"]:
-        with np.load(os.path.join(d, sh["file"])) as z:
+        path = os.path.join(d, sh["file"])
+        want = sh.get("sha256")   # absent in pre-ISSUE-9 manifests
+        if want is not None and file_digest(path) != want:
+            raise CheckpointCorruptError(
+                f"{path}: sha256 mismatch (torn or bit-rotted shard)")
+        with np.load(path) as z:
             for k in sh["keys"]:
                 data[k] = _decode(z[k], manifest.get("dtypes", {}).get(k, ""))
     new_leaves = []
@@ -187,6 +183,46 @@ def restore_checkpoint(directory: str, tree_like, step: int | None = None,
     if shardings is not None:
         restored = jax.tree.map(jax.device_put, restored, shardings)
     return restored, step
+
+
+def restore_checkpoint(directory: str, tree_like, step: int | None = None,
+                       shardings=None, config_hash: str | None = None):
+    """Restore into the structure of ``tree_like``. ``shardings`` (optional
+    pytree of NamedSharding) re-shards onto the current mesh — restoring a
+    512-chip checkpoint onto 1 CPU or vice versa is the elastic path.
+    A repro/jax/config-hash mismatch against the manifest's version stamp
+    warns (resuming across versions is legitimate for elastic restarts)
+    rather than failing.
+
+    Shard payloads are verified against the manifest's per-shard sha256
+    before deserialization (manifests without digests — pre-upgrade — skip
+    the check). With ``step=None`` a corrupt or unreadable step warns and
+    falls back to the next-newest step on disk; an explicit ``step`` raises
+    ``CheckpointCorruptError`` instead."""
+    import zipfile
+
+    if step is not None:
+        return _restore_step(directory, step, tree_like, shardings,
+                             config_hash)
+    preferred = latest_step(directory)
+    steps = sorted(_list_steps(directory), reverse=True)
+    if preferred in steps:
+        steps.remove(preferred)
+        steps.insert(0, preferred)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    last_err = None
+    for s in steps:
+        try:
+            return _restore_step(directory, s, tree_like, shardings,
+                                 config_hash)
+        except (CheckpointCorruptError, OSError, KeyError, EOFError,
+                json.JSONDecodeError, zipfile.BadZipFile) as e:
+            _LOG.warning(f"[ckpt] step_{s} rejected ({type(e).__name__}: "
+                         f"{e}); falling back to an older step")
+            last_err = e
+    raise CheckpointCorruptError(
+        f"no restorable checkpoint under {directory}") from last_err
 
 
 class CheckpointManager:

@@ -146,15 +146,94 @@ class ReportArrays:
 
     This is the batched form the optimizer's constraint masks consume
     (area/power/cost budgets over whole populations); numbers match the
-    per-design reports above exactly."""
+    per-design reports above exactly.
+
+    ``reachable_fraction`` (ISSUE 9) surfaces disconnection explicitly:
+    the fraction of ordered chiplet pairs (s != d) connected by the link
+    graph — 1.0 for any connected design. The throughput proxy used to be
+    the only signal (unreachable-pair flow accumulates on the next-hop
+    self-loop diagonal and silently drives the proxy toward 0, see
+    ``core.throughput.edge_flows``); this column makes the failure mode a
+    first-class report instead. Defaults to all-ones when a constructor
+    predates the column (old checkpoints, minimal tests)."""
     total_chiplet_area: np.ndarray
     interposer_area: np.ndarray
     power: np.ndarray
     cost: np.ndarray
+    reachable_fraction: np.ndarray | None = None
+
+    def __post_init__(self):
+        if self.reachable_fraction is None:
+            object.__setattr__(self, "reachable_fraction",
+                               np.ones_like(np.asarray(self.power,
+                                                       np.float64)))
 
     @property
     def total_area(self) -> np.ndarray:
         return self.total_chiplet_area + self.interposer_area
+
+
+def connected_fraction(n_chiplets: int, n_routers: int, links) -> float:
+    """Fraction of ordered chiplet pairs (s != d) connected through the
+    link graph (chiplets + interposer routers as relay vertices); 1.0 when
+    the design is connected, 0.0 when every chiplet is isolated.
+
+    Pure-numpy union-find — deliberately independent of the routing
+    machinery so the device path's reachable-fraction metric has a host
+    oracle to test against."""
+    n_total = n_chiplets + n_routers
+    if n_chiplets <= 1:
+        return 1.0
+    parent = np.arange(n_total)
+
+    def find(x: int) -> int:
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:        # path compression
+            parent[x], x = root, parent[x]
+        return root
+
+    def node_id(endpoint) -> int:
+        kind, idx = endpoint[0], endpoint[1]
+        return idx if kind == "chiplet" else n_chiplets + idx
+
+    for link in links:
+        ra, rb = find(node_id(link.a)), find(node_id(link.b))
+        if ra != rb:
+            parent[ra] = rb
+    roots = np.asarray([find(i) for i in range(n_chiplets)])
+    _, counts = np.unique(roots, return_counts=True)
+    pairs = float(np.sum(counts * (counts - 1)))
+    return pairs / float(n_chiplets * (n_chiplets - 1))
+
+
+def adjacency_connected_fraction(bits: np.ndarray, pair_u: np.ndarray,
+                                 pair_v: np.ndarray, n: int) -> np.ndarray:
+    """``connected_fraction`` for a batch of adjacency bit-genomes [P, G]
+    over the upper-triangle pair lists (``opt.space.AdjacencySpace``):
+    fraction of ordered chiplet pairs (s != d) connected per genome."""
+    bits = np.asarray(bits) % 2
+    out = np.ones(len(bits), np.float64)
+    if n <= 1:
+        return out
+    for b, row in enumerate(bits):
+        parent = np.arange(n)
+
+        def find(x: int) -> int:
+            while parent[x] != x:
+                parent[x] = parent[parent[x]]
+                x = parent[x]
+            return x
+
+        for g in np.nonzero(row)[0]:
+            ra, rb = find(int(pair_u[g])), find(int(pair_v[g]))
+            if ra != rb:
+                parent[ra] = rb
+        roots = np.asarray([find(i) for i in range(n)])
+        _, counts = np.unique(roots, return_counts=True)
+        out[b] = float(np.sum(counts * (counts - 1))) / float(n * (n - 1))
+    return out
 
 
 def report_arrays(designs) -> ReportArrays:
@@ -168,7 +247,7 @@ def report_arrays(designs) -> ReportArrays:
     B = len(designs)
     if B == 0:
         z = np.zeros(0, np.float64)
-        return ReportArrays(z, z, z, z)
+        return ReportArrays(z, z, z, z, z)
 
     # Flatten every placed chiplet of every design into one axis.
     seg, c_area, c_power = [], [], []
@@ -179,7 +258,10 @@ def report_arrays(designs) -> ReportArrays:
     pkg_cost = np.zeros(B, np.float64)
     i_wradius, i_wcost, i_dd, i_clr, i_alpha = (
         np.zeros(B, np.float64) for _ in range(5))
+    reach = np.ones(B, np.float64)
     for b, d in enumerate(designs):
+        reach[b] = connected_fraction(d.n_chiplets, d.n_routers,
+                                      d.topology.links)
         lib = d.library()
         tech = d.technology_map()
         pkg = d.packaging
@@ -220,4 +302,5 @@ def report_arrays(designs) -> ReportArrays:
                                i_wradius, i_dd, i_clr, i_alpha)
         cost = cost + np.where(has_ia, icost, 0.0)
     return ReportArrays(total_chiplet_area=chip_area, interposer_area=ia,
-                        power=chip_power + router_p + link_p, cost=cost)
+                        power=chip_power + router_p + link_p, cost=cost,
+                        reachable_fraction=reach)

@@ -178,6 +178,31 @@ def throughput_proxy(next_hop: jax.Array, adj_bw: jax.Array,
     return (min_ratio * total).astype(jnp.float32)
 
 
+@jax.jit
+def reachable_fraction(next_hop: jax.Array, traffic: jax.Array) -> jax.Array:
+    """Traffic-weighted fraction of reachable source/destination pairs.
+
+    Unreachable pairs self-loop in the routing table
+    (``next_hop[u, d] = u``, see ``routing.device``); their flow piles up
+    on the diagonal and silently drives the throughput proxy to 0 while
+    the latency proxy under-counts them entirely. This surfaces the
+    condition as an explicit [0, 1] metric: 1.0 iff every pair with
+    traffic can route. next_hop: [n, n] or [B, n, n]; traffic
+    [n_c, n_c] (router-padded internally). Returns a scalar or [B]."""
+    squeeze = next_hop.ndim == 2
+    if squeeze:
+        next_hop = next_hop[None]
+    n = next_hop.shape[-1]
+    t = _dest_major_load0(next_hop[0], traffic).T        # [n, n] src-major
+    ids = jnp.arange(n, dtype=next_hop.dtype)
+    reach = (next_hop != ids[None, :, None]) | (ids[:, None] ==
+                                                ids[None, :])[None]
+    total = jnp.maximum(jnp.sum(t), 1e-30)
+    frac = (jnp.sum(t[None] * reach, axis=(1, 2)) / total
+            ).astype(jnp.float32)
+    return frac[0] if squeeze else frac
+
+
 @functools.partial(jax.jit, static_argnames=("max_hops",))
 def bottleneck_edges(next_hop: jax.Array, adj_bw: jax.Array,
                      traffic: jax.Array, max_hops: int | None = None

@@ -143,6 +143,27 @@ class DseEngine:
                 f"use evaluate_points")
         return pipeline.evaluate_async(genomes)
 
+    def supports_faults(self, space) -> bool:
+        """True when ``evaluate_genomes_faults_async`` has a device path:
+        the fused fault grid exists for the adjacency pipeline only."""
+        pipeline = self._genome_pipeline(space)
+        return pipeline is not None and hasattr(pipeline,
+                                                "evaluate_faults_async")
+
+    def evaluate_genomes_faults_async(self, space, genomes, link_fail,
+                                      node_fail):
+        """Fused [P, F] population x fault grid (ISSUE 9): every genome
+        under every fault scenario in one device call; ``result()``
+        returns a ``dse.genomes.FaultGridResult``."""
+        pipeline = self._genome_pipeline(space)
+        if pipeline is None or not hasattr(pipeline,
+                                           "evaluate_faults_async"):
+            raise ValueError(
+                f"no device fault-grid path for {type(space).__name__} "
+                f"(routing {getattr(space, 'routing', None)!r})")
+        return pipeline.evaluate_faults_async(genomes, link_fail,
+                                              node_fail)
+
     def _pad_chunk(self, batch: DesignBatch) -> tuple[DesignBatch, int]:
         """Pad the chunk's design axis to a device-count multiple (elastic)."""
         b = batch.size

@@ -140,6 +140,18 @@ class GenomeEvalResult:
     reports: ReportArrays     # [P] f64 host-exact constraint columns
 
 
+@dataclass
+class FaultGridResult:
+    """Degraded metrics over a [P, F] population x fault-scenario grid
+    (ISSUE 9): one fused device call evaluates every genome under every
+    fault scenario; ``faults.objectives`` reduces the grid into robust
+    Pareto objectives."""
+    latency: np.ndarray              # [P, F] f32 (BIG when nothing routes)
+    throughput: np.ndarray           # [P, F] f32 (0 when nothing routes)
+    reachable_fraction: np.ndarray   # [P, F] f32 delivered traffic share
+    reports: ReportArrays            # [P] pristine constraint columns
+
+
 # ---------------------------------------------------------------------------
 # AdjacencySpace: fused bits -> metrics
 # ---------------------------------------------------------------------------
@@ -180,16 +192,18 @@ def _eval_proxies(next_hop, step_cost, node_weight, adj_bw, traffic,
     return lat, thr
 
 
-def _adjacency_eval(bits, pair_u, pair_v, pair_id, chain_slot, chain_eslot,
-                    inv_j, inv_c, col, row, side_t, phyx_t, phyy_t,
-                    cphyx_t, cphyy_t, bw_t, traffic, consts, *, n: int,
-                    k_phys: int, euclid: bool, max_hops: int):
-    """Fused device path: repaired bit genomes [P, G] -> per-design latency,
-    throughput, and summed link length. Wrapped per mesh by
-    ``_adjacency_eval_fn`` in ``shard_map`` over the population axis — each
-    device runs this body on its own population shard (all tables
-    replicated), so the whole pipeline scales across ``jax.devices()`` with
-    zero cross-device communication.
+def _adjacency_structure(bits, pair_u, pair_v, pair_id, chain_slot,
+                         chain_eslot, inv_j, inv_c, col, row, side_t,
+                         phyx_t, phyy_t, cphyx_t, cphyy_t, bw_t, consts,
+                         *, n: int, k_phys: int, euclid: bool):
+    """Genome decode + geometry: repaired bit genomes [P, G] -> structure
+    arrays ``(adj, step_cost, adj_bw, length)`` — the bits->adjacency
+    decode, the greedy nearest-PHY chain scan, and the link geometry
+    (lengths, latencies, bump-limited bandwidths). Shared verbatim by the
+    pristine eval (``_adjacency_eval``) and the fault grid
+    (``_adjacency_eval_faults``): faults degrade the *routing structure*
+    (masked adjacency / step costs) but never the manufactured geometry,
+    so the pristine structure is computed once per genome either way.
 
     pair_u/pair_v: [G] pair endpoints; pair_id: [n, n] static map from a
     vertex pair to its genome slot (G on the diagonal), which turns every
@@ -209,7 +223,6 @@ def _adjacency_eval(bits, pair_u, pair_v, pair_id, chain_slot, chain_eslot,
     internal].
     """
     Pn, G = bits.shape
-    _note_compile(("adjacency", Pn, G, n, k_phys, max_hops))
     spacing, link_const, link_per_mm, phy_lat2, internal = consts
     bitsb = bits.astype(bool)
     bits_pad = jnp.concatenate(
@@ -339,6 +352,28 @@ def _adjacency_eval(bits, pair_u, pair_v, pair_id, chain_slot, chain_eslot,
          jnp.zeros((Pn, 1), jnp.float32)], axis=1)
     adj_bw = bw_pad[:, pair_id]
     step_cost = jnp.where(adj, internal + lat_full, 0.0).astype(jnp.float32)
+    return adj, step_cost, adj_bw, length
+
+
+def _adjacency_eval(bits, pair_u, pair_v, pair_id, chain_slot, chain_eslot,
+                    inv_j, inv_c, col, row, side_t, phyx_t, phyy_t,
+                    cphyx_t, cphyy_t, bw_t, traffic, consts, *, n: int,
+                    k_phys: int, euclid: bool, max_hops: int):
+    """Fused device path: repaired bit genomes [P, G] -> per-design latency,
+    throughput, and summed link length. Wrapped per mesh by
+    ``_adjacency_eval_fn`` in ``shard_map`` over the population axis — each
+    device runs this body on its own population shard (all tables
+    replicated), so the whole pipeline scales across ``jax.devices()`` with
+    zero cross-device communication. The decode/geometry half lives in
+    ``_adjacency_structure`` (shared with the fault grid); this adds the
+    batched routing tables and the two proxies."""
+    Pn, G = bits.shape
+    _note_compile(("adjacency", Pn, G, n, k_phys, max_hops))
+    internal = consts[4]
+    adj, step_cost, adj_bw, length = _adjacency_structure(
+        bits, pair_u, pair_v, pair_id, chain_slot, chain_eslot, inv_j,
+        inv_c, col, row, side_t, phyx_t, phyy_t, cphyx_t, cphyy_t, bw_t,
+        consts, n=n, k_phys=k_phys, euclid=euclid)
 
     # --- batched routing tables (hops metric, every chiplet relays) ---
     next_hop = hops_next_hop_batch(adj)
@@ -347,7 +382,7 @@ def _adjacency_eval(bits, pair_u, pair_v, pair_id, chain_slot, chain_eslot,
     node_weight = jnp.full((n,), internal, jnp.float32)
     lat_m, thr_m = _eval_proxies(next_hop, step_cost, node_weight, adj_bw,
                                  traffic, max_hops)
-    len_sum = jnp.sum(jnp.where(bitsb, length, 0.0), axis=1)
+    len_sum = jnp.sum(jnp.where(bits.astype(bool), length, 0.0), axis=1)
     return lat_m, thr_m, len_sum
 
 
@@ -369,6 +404,127 @@ def _adjacency_eval_fn(mesh, n: int, k_phys: int, euclid: bool,
 def _donate_ok() -> bool:
     """Buffer donation is a no-op warning on CPU; enable it elsewhere."""
     return jax.default_backend() != "cpu"
+
+
+# ---------------------------------------------------------------------------
+# AdjacencySpace: fused [P, F] population x fault grid (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+def _eval_proxies_masked(next_hop, step_cost, node_weight, adj_bw, traffic,
+                         alive, max_hops: int):
+    """``_eval_proxies`` generalized to degraded structures: only traffic
+    between *reachable* alive pairs enters the books, and unreachable
+    traffic becomes an explicit reachable-fraction output instead of
+    inf-poisoning the proxies (the pristine formulas divide by the full
+    traffic total and let self-looped routes accumulate on the diagonal).
+
+    next_hop/step_cost/adj_bw: [B, n, n] degraded structures; alive:
+    [B, n] node-alive mask; traffic: [n, n] shared. Returns (latency,
+    throughput, reachable_fraction) each [B] f32 — latency/throughput of
+    the *delivered* traffic (BIG / 0.0 when nothing routes), and the
+    delivered fraction of total offered traffic. Reduces exactly to the
+    pristine proxies when every node is alive and the graph is connected.
+    """
+    B, n, _ = next_hop.shape
+    t32 = traffic.astype(jnp.float32)
+    ids = jnp.arange(n, dtype=next_hop.dtype)
+    # Unreachable pairs self-loop in the routing table (routing.device).
+    reach = (next_hop != ids[None, :, None]) | (ids[:, None] ==
+                                                ids[None, :])[None]
+    deliver = reach & alive[:, :, None] & alive[:, None, :]
+    t_m = t32[None] * deliver                        # [B, n, n] src-major
+    t_tot = jnp.sum(t_m, axis=(1, 2))                # [B]
+    dest_weight = jnp.sum(t_m * node_weight[None, None, :], axis=(1, 2))
+    total, flow = load_propagate(next_hop, t_m.swapaxes(-1, -2),
+                                 max_hops=max_hops, adaptive=True)
+    f = flow + flow.swapaxes(-1, -2)
+    ratio = jnp.where(f > 0, adj_bw / jnp.maximum(f, 1e-30), jnp.inf)
+    min_ratio = jnp.min(ratio, axis=(1, 2))
+    sc_next = jnp.take_along_axis(step_cost, next_hop.astype(jnp.int32),
+                                  axis=2)
+    path_cost = jnp.sum(total * sc_next.swapaxes(-1, -2), axis=(1, 2))
+    safe_tot = jnp.maximum(t_tot, 1e-30)
+    routed = t_tot > 0
+    lat = jnp.where(routed, (path_cost + dest_weight) / safe_tot,
+                    BIG).astype(jnp.float32)
+    thr = jnp.where(routed, min_ratio * t_tot, 0.0).astype(jnp.float32)
+    reach_frac = (t_tot / jnp.maximum(jnp.sum(t32), 1e-30)
+                  ).astype(jnp.float32)
+    return lat, thr, reach_frac
+
+
+def _adjacency_eval_faults(bits, link_alive, node_alive, pair_u, pair_v,
+                           pair_id, chain_slot, chain_eslot, inv_j, inv_c,
+                           col, row, side_t, phyx_t, phyy_t, cphyx_t,
+                           cphyy_t, bw_t, traffic, consts, *, n: int,
+                           k_phys: int, euclid: bool, max_hops: int):
+    """Fused [P, F] population x fault grid: every genome evaluated under
+    every fault scenario in ONE device program.
+
+    bits: [P, G] repaired genomes (population-sharded); link_alive:
+    [F, G] per-scenario link survival (False = failed); node_alive: [F, n]
+    chiplet survival (both replicated). The pristine structure (geometry,
+    PHY assignment, bandwidths) is built once per genome via
+    ``_adjacency_structure``; each scenario then masks the adjacency —
+    dead links vanish, dead chiplets lose all incident links and stop
+    sourcing/sinking traffic — and the degraded routing tables are
+    recomputed under the mask by the same batched BFS
+    (``routing.device.hops_next_hop_batch``) over a flat [P*F] batch:
+    the grid is materialized as [P*F, n, n] gathers (static iota row/
+    scenario indices), never as a [P, F, n, n] transient (audited in
+    ``analysis.registry``). Returns (latency, throughput,
+    reachable_fraction) each [P, F] f32 plus the pristine summed link
+    length [P]."""
+    Pn, G = bits.shape
+    F = link_alive.shape[0]
+    _note_compile(("adjacency_faults", Pn, F, G, n, k_phys, max_hops))
+    internal = consts[4]
+    adj, step_cost, adj_bw, length = _adjacency_structure(
+        bits, pair_u, pair_v, pair_id, chain_slot, chain_eslot, inv_j,
+        inv_c, col, row, side_t, phyx_t, phyy_t, cphyx_t, cphyy_t, bw_t,
+        consts, n=n, k_phys=k_phys, euclid=euclid)
+
+    # Scenario masks in pair space: pad column G (the diagonal / non-pair
+    # slot) stays alive — adj is already False there.
+    alive_pad = jnp.concatenate(
+        [link_alive.astype(bool), jnp.ones((F, 1), bool)], axis=1)
+    alive_pairs = alive_pad[:, pair_id]                      # [F, n, n]
+    node_ok = node_alive.astype(bool)                        # [F, n]
+
+    # Flat [P*F] grid via static iota gathers — row p of the population
+    # meets scenario f at flat index p*F + f.
+    pf = Pn * F
+    p_idx = jnp.arange(pf, dtype=jnp.int32) // F
+    f_idx = jnp.arange(pf, dtype=jnp.int32) % F
+    adj_pf = (adj[p_idx] & alive_pairs[f_idx]
+              & node_ok[f_idx][:, :, None] & node_ok[f_idx][:, None, :])
+    step_pf = jnp.where(adj_pf, step_cost[p_idx], 0.0)
+    bw_pf = adj_bw[p_idx]          # dead links carry zero flow -> unused
+
+    next_hop = hops_next_hop_batch(adj_pf)
+    node_weight = jnp.full((n,), internal, jnp.float32)
+    lat, thr, reach = _eval_proxies_masked(
+        next_hop, step_pf, node_weight, bw_pf, traffic, node_ok[f_idx],
+        max_hops)
+    len_sum = jnp.sum(jnp.where(bits.astype(bool), length, 0.0), axis=1)
+    return (lat.reshape(Pn, F), thr.reshape(Pn, F), reach.reshape(Pn, F),
+            len_sum)
+
+
+@functools.lru_cache(maxsize=None)
+def _adjacency_faults_fn(mesh, n: int, k_phys: int, euclid: bool,
+                         max_hops: int, donate: bool):
+    """Jitted, population-sharded fault-grid eval per (mesh, statics):
+    bits shard over the data axis, fault masks replicate, the [P, F]
+    outputs shard over their population axis. Module-cached like
+    ``_adjacency_eval_fn``; the compiled program is shared across
+    generations for a fixed scenario count F."""
+    impl = functools.partial(_adjacency_eval_faults, n=n, k_phys=k_phys,
+                             euclid=euclid, max_hops=max_hops)
+    f = shard_map(impl, mesh=mesh,
+                  in_specs=(P("data"), P(), P()) + (P(),) * 17,
+                  out_specs=(P("data"),) * 4, check_rep=False)
+    return jax.jit(f, donate_argnums=(0,) if donate else ())
 
 
 class AdjacencyPipeline:
@@ -539,10 +695,80 @@ class AdjacencyPipeline:
         """One fused jitted call for a whole (repaired) population."""
         return self.evaluate_async(genomes).result()
 
+    def evaluate_faults_async(self, genomes: np.ndarray,
+                              link_fail: np.ndarray,
+                              node_fail: np.ndarray) -> PendingGenomeEval:
+        """Dispatch the fused [P, F] population x fault grid without
+        blocking. link_fail: [F, G] bool (True = link failed); node_fail:
+        [F, n] bool (True = chiplet dead). ``result()`` returns a
+        ``FaultGridResult``; pristine reports are computed on the host as
+        in ``evaluate_async`` (faults are runtime events — the design is
+        still manufactured with every link)."""
+        genomes = np.asarray(genomes, np.int64)
+        link_fail = np.atleast_2d(np.asarray(link_fail, bool))
+        node_fail = np.atleast_2d(np.asarray(node_fail, bool))
+        Pn = len(genomes)
+        F = len(link_fail)
+        if link_fail.shape[1] != self.space.genome_length:
+            raise ValueError(
+                f"link_fail has {link_fail.shape[1]} link slots; space "
+                f"has {self.space.genome_length}")
+        if node_fail.shape != (F, self.n):
+            raise ValueError(
+                f"node_fail shape {node_fail.shape} != ({F}, {self.n})")
+        with _span("genomes.dispatch_faults", space="adjacency", pop=Pn,
+                   n=self.n, faults=F):
+            deg = self.space.degrees(genomes)
+            if deg.max(initial=0) > self.k_phys:
+                raise ValueError(
+                    f"genome exceeds the repaired degree bound "
+                    f"({int(deg.max())} > {self.k_phys}); repair genomes "
+                    f"before evaluate_genomes")
+            ndev = int(np.prod(list(self.mesh.shape.values())))
+            bp = bucket_population(Pn, ndev)
+            padded = genomes
+            if bp != Pn:
+                padded = np.concatenate(
+                    [genomes, np.repeat(genomes[-1:], bp - Pn, axis=0)],
+                    axis=0)
+            rep = NamedSharding(self.mesh, P())
+            bits = jax.device_put(jnp.asarray(padded % 2, jnp.int32),
+                                  NamedSharding(self.mesh, P("data")))
+            link_alive = jax.device_put(jnp.asarray(~link_fail), rep)
+            node_alive = jax.device_put(jnp.asarray(~node_fail), rep)
+            fn = _adjacency_faults_fn(self.mesh, self.n, self.k_phys,
+                                      self._euclid, self.max_hops,
+                                      _donate_ok())
+            lat, thr, reach, len_sum = fn(
+                bits, link_alive, node_alive, self._pair_u, self._pair_v,
+                self._pair_id, self._chain_slot, self._chain_eslot,
+                self._inv_j, self._inv_c, self._col, self._row,
+                self._side, self._phyx, self._phyy, self._cphyx,
+                self._cphyy, self._bw, self._traffic, self._consts)
+
+        def finish() -> FaultGridResult:
+            with _span("genomes.finish_faults", space="adjacency", pop=Pn):
+                reports = self._report_arrays(genomes, deg,
+                                              np.asarray(len_sum)[:Pn])
+                return FaultGridResult(
+                    latency=np.asarray(lat)[:Pn],
+                    throughput=np.asarray(thr)[:Pn],
+                    reachable_fraction=np.asarray(reach)[:Pn],
+                    reports=reports)
+
+        return PendingGenomeEval(finish)
+
+    def evaluate_faults(self, genomes: np.ndarray, link_fail: np.ndarray,
+                        node_fail: np.ndarray) -> FaultGridResult:
+        """Blocking wrapper over ``evaluate_faults_async``."""
+        return self.evaluate_faults_async(genomes, link_fail,
+                                          node_fail).result()
+
     def _report_arrays(self, genomes, deg, len_sums) -> ReportArrays:
         """Constraint columns [P] in host float64, exact against
         ``core.reports`` (the per-mm link-power term uses the device's f32
         length sums; it is zero under default packaging)."""
+        from ..core.reports import adjacency_connected_fraction
         pkg = self.space.packaging
         n = self.n
         radix = np.clip(deg.max(axis=1), 1, self.k_phys)
@@ -554,7 +780,9 @@ class AdjacencyPipeline:
             total_chiplet_area=n * self._chip_area[radix],
             interposer_area=self._ia[radix],
             power=power,
-            cost=self._cost[radix])
+            cost=self._cost[radix],
+            reachable_fraction=adjacency_connected_fraction(
+                genomes, self.space.pair_u, self.space.pair_v, n))
 
 
 # ---------------------------------------------------------------------------

@@ -144,6 +144,7 @@ def load_propagate(next_hop: jax.Array, load0: jax.Array,
     set the variable before first use.
     """
     from .load_prop import default_backend, pick_tile
+    from ..faults.harness import maybe_chaos_fail, run_with_fallback
 
     if backend is None:
         backend = default_backend()
@@ -155,12 +156,21 @@ def load_propagate(next_hop: jax.Array, load0: jax.Array,
     promoted = n > fused_n and backend in promote
     if promoted:
         backend = promote[backend]
-    tile = None
-    if backend in ("xla_blocked", "pallas_tiled", "pallas_tiled_interpret"):
-        tile = _env.get_opt_int("REPRO_LOAD_PROP_TILE") or pick_tile(n, batch)
-    _note_dispatch("load_propagate", backend, tile, promoted, n)
-    return _load_propagate(next_hop, load0, max_hops, adaptive, backend,
-                           tile)
+
+    # A failed dispatch falls back down the ladder (pallas_tiled ->
+    # xla_blocked -> xla) unless REPRO_STRICT_BACKEND=1; the chaos hook
+    # injects failures for CI to prove the ladder keeps results green.
+    def attempt(bk):
+        tile = None
+        if bk in ("xla_blocked", "pallas_tiled", "pallas_tiled_interpret"):
+            tile = (_env.get_opt_int("REPRO_LOAD_PROP_TILE")
+                    or pick_tile(n, batch))
+        maybe_chaos_fail(bk)
+        _note_dispatch("load_propagate", bk, tile, promoted, n)
+        return _load_propagate(next_hop, load0, max_hops, adaptive, bk,
+                               tile)
+
+    return run_with_fallback("load_propagate", backend, attempt)
 
 
 @functools.partial(jax.jit, static_argnames=("max_hops", "adaptive",
@@ -230,6 +240,7 @@ def apsp(d: jax.Array, n_iters: int | None = None,
     instead of being frozen into the jit cache."""
     from .apsp import default_backend
     from .load_prop import pick_tile
+    from ..faults.harness import maybe_chaos_fail, run_with_fallback
 
     if backend is None:
         backend = default_backend()
@@ -241,11 +252,16 @@ def apsp(d: jax.Array, n_iters: int | None = None,
     promoted = n > fused_n and backend in promote
     if promoted:
         backend = promote[backend]
-    tile = None
-    if backend in ("xla_blocked", "pallas_tiled", "pallas_tiled_interpret"):
-        tile = _env.get_opt_int("REPRO_APSP_TILE") or pick_tile(n, batch)
-    _note_dispatch("apsp", backend, tile, promoted, n)
-    return _apsp(d, n_iters, backend, tile)
+
+    def attempt(bk):
+        tile = None
+        if bk in ("xla_blocked", "pallas_tiled", "pallas_tiled_interpret"):
+            tile = _env.get_opt_int("REPRO_APSP_TILE") or pick_tile(n, batch)
+        maybe_chaos_fail(bk)
+        _note_dispatch("apsp", bk, tile, promoted, n)
+        return _apsp(d, n_iters, bk, tile)
+
+    return run_with_fallback("apsp", backend, attempt)
 
 
 @functools.partial(jax.jit, static_argnames=("n_iters", "backend", "tile"))

@@ -61,6 +61,10 @@ class EvaluatedPopulation:
     throughput: np.ndarray    # [P] f64
     feasible: np.ndarray      # [P] bool
     reports: ReportArrays
+    # Robustness columns [P] from the fault grid (ISSUE 9): None on
+    # pristine runs. Keys: expected/worst latency+throughput,
+    # disconnect_prob, min_reachable_fraction, pristine_latency/throughput.
+    extra: dict | None = None
 
 
 def _pop_apply(fn, *pops: EvaluatedPopulation) -> EvaluatedPopulation:
@@ -74,6 +78,12 @@ def _pop_apply(fn, *pops: EvaluatedPopulation) -> EvaluatedPopulation:
             kw[f.name] = ReportArrays(**{
                 g.name: fn(*[getattr(v, g.name) for v in vals])
                 for g in dc_fields(ReportArrays)})
+        elif f.name == "extra":
+            if any(v is None for v in vals):
+                kw[f.name] = None
+            else:
+                kw[f.name] = {k: fn(*[v[k] for v in vals])
+                              for k in vals[0]}
         else:
             kw[f.name] = fn(*vals)
     return EvaluatedPopulation(**kw)
@@ -89,17 +99,26 @@ def _pop_to_state(ev: EvaluatedPopulation | None):
     state = {k: np.asarray(getattr(ev, k)).tolist() for k in _POP_DTYPES}
     state["reports"] = {f.name: np.asarray(getattr(ev.reports, f.name)).tolist()
                         for f in dc_fields(ReportArrays)}
+    if ev.extra is not None:
+        state["extra"] = {k: np.asarray(v).tolist()
+                          for k, v in ev.extra.items()}
     return state
 
 
 def _pop_from_state(state) -> EvaluatedPopulation | None:
     if state is None:
         return None
+    # .get: checkpoints written before a report column existed restore
+    # with the column's constructor default instead of crashing.
+    reports = {f.name: np.asarray(state["reports"][f.name], np.float64)
+               for f in dc_fields(ReportArrays)
+               if state["reports"].get(f.name) is not None}
+    extra = state.get("extra")
+    if extra is not None:
+        extra = {k: np.asarray(v, np.float64) for k, v in extra.items()}
     return EvaluatedPopulation(
         **{k: np.asarray(state[k], dt) for k, dt in _POP_DTYPES.items()},
-        reports=ReportArrays(**{
-            f.name: np.asarray(state["reports"][f.name], np.float64)
-            for f in dc_fields(ReportArrays)}))
+        reports=ReportArrays(**reports), extra=extra)
 
 
 class PopulationEvaluator:
@@ -117,14 +136,20 @@ class PopulationEvaluator:
 
     def __init__(self, space: SearchSpace, engine: DseEngine | None = None,
                  budgets: Budgets | None = None, validate: bool = False,
-                 device_path: bool | None = None):
+                 device_path: bool | None = None, faults=None):
         self.space = space
         self.engine = engine if engine is not None else DseEngine()
         self.budgets = budgets or Budgets()
         self.validate = validate
         self.device_path = device_path
+        self.faults = faults          # faults.objectives.FaultSetup | None
         self.n_evals = 0
         self._report_cache: dict = {}
+        if faults is not None and not self.engine.supports_faults(space):
+            raise ValueError(
+                f"fault-aware evaluation needs the fused device fault "
+                f"grid, which {type(space).__name__} (routing "
+                f"{getattr(space, 'routing', None)!r}) does not support")
 
     def _use_device_path(self) -> bool:
         if self.device_path is not None:
@@ -151,12 +176,14 @@ class PopulationEvaluator:
             for i, pt in enumerate(missing):
                 self._report_cache[pt.structure_key()] = (
                     built.total_chiplet_area[i], built.interposer_area[i],
-                    built.power[i], built.cost[i])
+                    built.power[i], built.cost[i],
+                    built.reachable_fraction[i])
         cols = np.asarray([self._report_cache[pt.structure_key()]
                            for pt in points], np.float64)
         return ReportArrays(total_chiplet_area=cols[:, 0],
                             interposer_area=cols[:, 1],
-                            power=cols[:, 2], cost=cols[:, 3])
+                            power=cols[:, 2], cost=cols[:, 3],
+                            reachable_fraction=cols[:, 4])
 
     def dispatch(self, genomes: np.ndarray) -> "PendingPopulationEval":
         """Start evaluating a population without blocking on the device.
@@ -168,6 +195,15 @@ class PopulationEvaluator:
         the finished result, so callers can pipeline uniformly.
         Evaluations are counted at dispatch time."""
         genomes = np.asarray(genomes, np.int64)
+        if self.faults is not None:
+            sc = self.faults.scenarios
+            with _span("opt.dispatch", path="faults", evals=len(genomes),
+                       scenarios=sc.n_scenarios):
+                pending = self.engine.evaluate_genomes_faults_async(
+                    self.space, genomes, sc.link_fail, sc.node_fail)
+            self.n_evals += len(genomes)
+            return PendingPopulationEval(
+                lambda: self._finalize_faults(genomes, pending.result()))
         if self._use_device_path():
             with _span("opt.dispatch", path="device", evals=len(genomes)):
                 pending = self.engine.evaluate_genomes_async(self.space,
@@ -185,17 +221,50 @@ class PopulationEvaluator:
             lambda: self._finalize(genomes, res, points))
 
     def _finalize(self, genomes, res, points) -> EvaluatedPopulation:
+        from ..faults.harness import quarantine_nonfinite
         with _span("opt.finalize", evals=len(genomes),
                    path="device" if points is None else "host"):
             reports = (res.reports if points is None
                        else self._reports_for(points))
             lat = np.asarray(res.latency, np.float64)
             thr = np.asarray(res.throughput, np.float64)
-            feasible = (self.budgets.mask(reports)
-                        & np.isfinite(lat) & np.isfinite(thr))
+            feasible = self.budgets.mask(reports)
+            # NaN/inf rows get finite penalty scores + feasible=False and
+            # land in the quarantine list — selection math stays finite,
+            # the archive never ingests them (ISSUE 9).
+            lat, thr, feasible = quarantine_nonfinite(
+                genomes, lat, thr, feasible, context="eval")
             return EvaluatedPopulation(genomes=genomes, latency=lat,
                                        throughput=thr, feasible=feasible,
                                        reports=reports)
+
+    def _finalize_faults(self, genomes, grid) -> EvaluatedPopulation:
+        """Reduce the [P, F] fault grid into robust Pareto objectives: the
+        configured mode's latency/throughput become THE archive axes, the
+        disconnection-probability constraint folds into feasibility, and
+        the remaining robustness columns ride along in ``extra``."""
+        from ..faults.harness import quarantine_nonfinite
+        from ..faults.objectives import reduce_grid, robust_columns
+        with _span("opt.finalize", evals=len(genomes), path="faults"):
+            sc = self.faults.scenarios
+            reduced = reduce_grid(grid.latency, grid.throughput,
+                                  grid.reachable_fraction, sc.weights)
+            lat, thr, ok = robust_columns(reduced, self.faults.objectives)
+            try:
+                pristine = sc.names.index("pristine")
+            except ValueError:
+                pristine = 0
+            extra = dict(reduced)
+            extra["pristine_latency"] = np.asarray(
+                grid.latency[:, pristine], np.float64)
+            extra["pristine_throughput"] = np.asarray(
+                grid.throughput[:, pristine], np.float64)
+            feasible = self.budgets.mask(grid.reports) & ok
+            lat, thr, feasible = quarantine_nonfinite(
+                genomes, lat, thr, feasible, context="faults")
+            return EvaluatedPopulation(genomes=genomes, latency=lat,
+                                       throughput=thr, feasible=feasible,
+                                       reports=grid.reports, extra=extra)
 
     def __call__(self, genomes: np.ndarray) -> EvaluatedPopulation:
         return self.dispatch(genomes).result()
@@ -367,12 +436,16 @@ class OptimizerBase:
     def _ingest(self, ev: EvaluatedPopulation) -> None:
         t0 = time.perf_counter()
         with _span("opt.ingest", evals=len(ev.latency)):
+            metrics = {"interposer_area": ev.reports.interposer_area,
+                       "total_chiplet_area": ev.reports.total_chiplet_area,
+                       "power": ev.reports.power, "cost": ev.reports.cost,
+                       "reachable_fraction": ev.reports.reachable_fraction}
+            if ev.extra is not None:
+                metrics.update(ev.extra)
             self.archive.update(
                 ev.latency, ev.throughput, feasible=ev.feasible,
                 payloads=[g.tolist() for g in ev.genomes],
-                metrics={"interposer_area": ev.reports.interposer_area,
-                         "total_chiplet_area": ev.reports.total_chiplet_area,
-                         "power": ev.reports.power, "cost": ev.reports.cost})
+                metrics=metrics)
         _metrics.histogram("opt.ingest_s").observe(time.perf_counter() - t0)
 
     def begin_step(self) -> np.ndarray:

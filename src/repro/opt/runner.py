@@ -23,6 +23,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..faults.harness import (CheckpointCorruptError, graceful_shutdown,
+                              json_digest)
 from ..obs import metrics as _metrics
 from ..obs.log import get_logger
 from ..obs.trace import enable_tracing, span as _span
@@ -63,13 +65,24 @@ def save_checkpoint(path: str, optimizer: OptimizerBase,
     ``meta`` substitutes a snapshot of the RNG/eval-count/generation triple
     captured earlier (the async driver's deferred checkpointing). The
     snapshot carries a version stamp so a resume from a different
-    repro/jax version warns instead of silently mixing trajectories."""
+    repro/jax version warns instead of silently mixing trajectories.
+
+    Format 2 (ISSUE 9): the state is wrapped in an envelope with a
+    canonical sha256, the bytes are fsynced before the atomic rename, and
+    the previous snapshot is rotated to ``<path>.prev`` first — so a
+    SIGKILL at any instant leaves either the new verified snapshot, the
+    old verified snapshot, or both, never a torn resume point."""
     with _span("opt.checkpoint", path=path):
         state = optimizer.state(meta)
         state["versions"] = version_stamp()
+        payload = {"format": 2, "sha256": json_digest(state), "state": state}
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump(state, f)
+            json.dump(payload, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(path):
+            os.replace(path, path + ".prev")
         os.replace(tmp, path)
 
 
@@ -151,14 +164,62 @@ class AsyncStepper:
                 len(ev.latency) / dt)
         return True
 
-    def run(self) -> None:
+    def run(self, stop=None) -> None:
         while self.step():
-            pass
+            if stop is not None and stop.requested():
+                break
+        self.drain()
+
+    def drain(self) -> None:
+        """Finish the in-flight generation (its device work is already
+        paid for) and flush deferred bookkeeping, so an early exit leaves
+        the same per-generation checkpoint a full run would have written
+        at this point."""
+        self._flush_deferred()
+        if self._pending is None:
+            return
+        opt = self.optimizer
+        ev = self._pending.result()
+        self._pending = None
+        opt.finish_step(ev, ingest=False)
+        meta = opt.snapshot_meta()
+        opt._ingest(ev)
+        if self.on_generation is not None:
+            self.on_generation(opt, meta, ev)
 
 
 def load_checkpoint(path: str) -> dict:
+    """Load ONE checkpoint file, verifying the format-2 sha256 envelope.
+    Pre-format-2 flat states (no envelope) load without verification.
+    Raises ``CheckpointCorruptError`` on digest mismatch and the usual
+    OSError/JSONDecodeError on unreadable bytes."""
     with open(path) as f:
-        return json.load(f)
+        payload = json.load(f)
+    if isinstance(payload, dict) and payload.get("format") == 2:
+        state = payload["state"]
+        want = payload.get("sha256")
+        if want is not None and json_digest(state) != want:
+            raise CheckpointCorruptError(f"{path}: sha256 mismatch "
+                                         f"(torn or tampered snapshot)")
+        return state
+    return payload
+
+
+def load_checkpoint_resilient(path: str) -> tuple[dict | None, str | None]:
+    """Warn-then-fall-back resume ladder: try ``path``, then the rotated
+    ``path.prev``; a candidate that is corrupt or unreadable logs a warning
+    and bumps ``ckpt.corrupt`` instead of crashing the run. Returns
+    ``(state, source_path)`` or ``(None, None)`` when nothing loads."""
+    for cand in (path, path + ".prev"):
+        if not os.path.exists(cand):
+            continue
+        try:
+            return load_checkpoint(cand), cand
+        except Exception as e:
+            _metrics.counter("ckpt.corrupt", stage="opt").inc()
+            _LOG.warning(f"[opt] checkpoint {cand} rejected "
+                         f"({type(e).__name__}: {e}); trying fallback")
+    return None, None
 
 
 class OptRunner:
@@ -183,12 +244,21 @@ class OptRunner:
         self.ref_latency = ref_latency
         self.ref_throughput = ref_throughput
         self.async_pipeline = async_pipeline
-        if checkpoint_path and os.path.exists(checkpoint_path):
-            state = load_checkpoint(checkpoint_path)
-            for problem in check_version_stamp(state.get("versions"),
-                                              what="checkpoint"):
-                _LOG.warning(f"[opt] resume warning: {problem}")
-            self.optimizer.load_state(state)
+        if checkpoint_path and (os.path.exists(checkpoint_path)
+                                or os.path.exists(checkpoint_path + ".prev")):
+            state, source = load_checkpoint_resilient(checkpoint_path)
+            if state is None:
+                _LOG.warning(f"[opt] no usable checkpoint at "
+                             f"{checkpoint_path} (all candidates corrupt); "
+                             f"starting fresh")
+            else:
+                if source != checkpoint_path:
+                    _LOG.warning(f"[opt] resumed from fallback snapshot "
+                                 f"{source}")
+                for problem in check_version_stamp(state.get("versions"),
+                                                  what="checkpoint"):
+                    _LOG.warning(f"[opt] resume warning: {problem}")
+                self.optimizer.load_state(state)
 
     def _after_generation(self, opt, meta, history, generations,
                           progress) -> None:
@@ -213,25 +283,37 @@ class OptRunner:
         opt = self.optimizer
         history = []
         history_start = opt.generation
-        if self.async_pipeline:
-            AsyncStepper(
-                opt, generations,
-                on_generation=lambda o, meta, ev: self._after_generation(
-                    o, meta, history, generations, progress)).run()
-        else:
-            while opt.generation < generations:
-                t0 = time.perf_counter()
-                n0 = opt.evaluator.n_evals
-                with _span("opt.generation", generation=opt.generation,
-                           mode="sync"):
-                    opt.step()
-                    self._after_generation(opt, opt.snapshot_meta(),
-                                           history, generations, progress)
-                dt = time.perf_counter() - t0
-                _metrics.histogram("opt.generation_s").observe(dt)
-                if dt > 0:
-                    _metrics.histogram("opt.evals_per_s").observe(
-                        (opt.evaluator.n_evals - n0) / dt)
+        # SIGTERM/SIGINT set a pollable flag: the loop exits through its
+        # normal checkpoint-flush path after the current generation, so a
+        # preempted run resumes bit-identically (a second signal forces
+        # KeyboardInterrupt).
+        with graceful_shutdown() as stop:
+            if self.async_pipeline:
+                AsyncStepper(
+                    opt, generations,
+                    on_generation=lambda o, meta, ev: self._after_generation(
+                        o, meta, history, generations, progress)).run(
+                            stop=stop)
+            else:
+                while opt.generation < generations:
+                    t0 = time.perf_counter()
+                    n0 = opt.evaluator.n_evals
+                    with _span("opt.generation", generation=opt.generation,
+                               mode="sync"):
+                        opt.step()
+                        self._after_generation(opt, opt.snapshot_meta(),
+                                               history, generations, progress)
+                    dt = time.perf_counter() - t0
+                    _metrics.histogram("opt.generation_s").observe(dt)
+                    if dt > 0:
+                        _metrics.histogram("opt.evals_per_s").observe(
+                            (opt.evaluator.n_evals - n0) / dt)
+                    if stop.requested():
+                        break
+            if stop.requested():
+                _LOG.warning(f"[opt] shutdown at generation "
+                             f"{opt.generation}/{generations}; checkpoint "
+                             f"is current — rerun to resume")
         return OptResult(archive=opt.archive, n_evals=opt.evaluator.n_evals,
                          generations=opt.generation, history=history,
                          history_start=history_start)
@@ -290,6 +372,31 @@ def main(argv=None) -> int:
                         "results, lower wall-clock)")
     p.add_argument("--checkpoint", type=str, default=None,
                    help="resume point, written after every generation")
+    p.add_argument("--faults", action="store_true",
+                   help="fault-aware search: evaluate every genome over a "
+                        "batch of failure scenarios and optimize the "
+                        "degraded (worst/expected) latency-throughput "
+                        "front instead of the pristine one (adjacency "
+                        "space, device path only)")
+    p.add_argument("--fault-model", type=str, default="single",
+                   help="fault scenario sampler: iid, region, single, "
+                        "double, chiplet (see repro.faults.model)")
+    p.add_argument("--fault-p", type=float, default=0.02,
+                   help="iid model: per-link failure probability")
+    p.add_argument("--fault-scenarios", type=int, default=16,
+                   help="iid/region models: sampled scenario count")
+    p.add_argument("--fault-seed", type=int, default=0,
+                   help="fault sampler seed (independent of --seed)")
+    p.add_argument("--fault-top-k", type=int, default=None,
+                   help="single/double models: restrict enumeration to the "
+                        "k longest-trace link slots")
+    p.add_argument("--fault-mode", choices=("worst", "expected"),
+                   default="worst",
+                   help="robust objective: worst-case over scenarios or "
+                        "scenario-weighted expectation")
+    p.add_argument("--max-disconnect", type=float, default=0.0,
+                   help="feasibility cap on the probability mass of "
+                        "scenarios that disconnect any traffic")
     p.add_argument("--out", type=str, default=None,
                    help="write the final front as JSON rows")
     p.add_argument("--trace", type=str, nargs="?", const="opt_trace",
@@ -317,9 +424,37 @@ def main(argv=None) -> int:
     budgets = Budgets(max_interposer_area=args.max_interposer_area,
                       max_total_area=args.max_total_area,
                       max_power=args.max_power, max_cost=args.max_cost)
+    faults = None
+    if args.faults:
+        if args.space != "adjacency":
+            p.error("--faults requires --space adjacency")
+        if args.host_path:
+            p.error("--faults requires the fused device path "
+                    "(drop --host-path)")
+        from ..faults.model import make_scenarios
+        from ..faults.objectives import FaultSetup, RobustObjectives
+        kw: dict = {}
+        if args.fault_model == "iid":
+            kw = {"p": args.fault_p, "n_scenarios": args.fault_scenarios,
+                  "seed": args.fault_seed}
+        elif args.fault_model == "region":
+            kw = {"n_scenarios": args.fault_scenarios,
+                  "seed": args.fault_seed}
+        elif args.fault_model in ("single", "double") \
+                and args.fault_top_k is not None:
+            kw = {"top_k": args.fault_top_k}
+        scenarios = make_scenarios(space, args.fault_model, **kw)
+        faults = FaultSetup(
+            scenarios=scenarios,
+            objectives=RobustObjectives(
+                mode=args.fault_mode,
+                max_disconnect_prob=args.max_disconnect))
+        _LOG.info(f"[opt] fault-aware search: model={args.fault_model} "
+                  f"F={scenarios.n_scenarios} mode={args.fault_mode}")
     evaluator = PopulationEvaluator(
         space, budgets=budgets,
-        device_path=False if args.host_path else None)
+        device_path=False if args.host_path else None,
+        faults=faults)
     size_kw = ({"batch_size": args.pop_size} if args.algo == "random"
                else {"n_chains": args.pop_size} if args.algo == "sa"
                else {"pop_size": args.pop_size})

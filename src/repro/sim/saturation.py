@@ -17,11 +17,25 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+from ..faults.harness import call_with_retry
 from ..obs.log import get_logger
 from ..obs.trace import span as _span
+from ..utils import env as _env
 from .cyclesim import CycleSim, SimConfig, SimStats
 
 _LOG = get_logger("sim")
+
+
+def _probe_call(fn, *args, describe: str = "sim probe", **kwargs):
+    """Run one simulator probe under the optional watchdog + bounded-retry
+    harness (``REPRO_SIM_WATCHDOG_S`` / ``REPRO_SIM_RETRIES``): a probe
+    that hangs past the deadline or raises is retried with backoff instead
+    of wedging or crashing the whole saturation search."""
+    timeout = _env.get_int("REPRO_SIM_WATCHDOG_S")
+    return call_with_retry(fn, *args,
+                           retries=_env.get_int("REPRO_SIM_RETRIES"),
+                           timeout_s=timeout if timeout > 0 else None,
+                           describe=describe, **kwargs)
 
 
 class SaturationResult(NamedTuple):
@@ -41,12 +55,13 @@ def zero_load_latency(sim: CycleSim, config: SimConfig | None = None,
     """Average packet latency at (near-)zero load: a single low-rate run
     (paper §3.1: 'a single BookSim-simulation is sufficient')."""
     cfg = config or sim.cfg
-    return sim.run(rate, cfg)
+    return _probe_call(sim.run, rate, cfg, describe="zero-load run")
 
 
 def _stable(sim: CycleSim, rate: float, cfg: SimConfig,
             latency_cap: float) -> bool:
-    st = sim.run(rate, cfg)
+    st = _probe_call(sim.run, rate, cfg,
+                     describe=f"saturation probe rate={rate:.3f}")
     return st.stable and st.avg_packet_latency <= latency_cap
 
 
@@ -118,12 +133,14 @@ def _run_chunk(sim, rates, cfg, backend, pool, workers):
     Sharding never changes results: every replica is seeded like a solo
     run, so grouping is irrelevant to the outcome."""
     if pool is None or len(rates) < 2:
-        return sim.run_batch(rates, cfg, backend=backend)
+        return _probe_call(sim.run_batch, rates, cfg, backend=backend,
+                           describe=f"batched probe x{len(rates)}")
     shard = (len(rates) + workers - 1) // workers
     jobs = [(sim, rates[i:i + shard], cfg, backend)
             for i in range(0, len(rates), shard)]
     out = []
-    for part in pool.map(_run_batch_worker, jobs):
+    for part in _probe_call(pool.map, _run_batch_worker, jobs,
+                            describe=f"pooled probe x{len(rates)}"):
         out.extend(part)
     return out
 
@@ -171,7 +188,8 @@ def _saturation_batched(sim, cfg, latency_cap_factor, max_rate, chunk,
     zero_load_runs = 0
     if latency_cap is None:
         with _span("sat.zero_load"):
-            zl = sim.run_batch([0.005], cfg, backend=backend)[0]
+            zl = _probe_call(sim.run_batch, [0.005], cfg, backend=backend,
+                             describe="zero-load run")[0]
         latency_cap = latency_cap_factor * zl.avg_packet_latency
         zero_load_runs = 1
     probes = 0

@@ -95,6 +95,26 @@ _register(
     "Pin the destination-slab tile of the blocked routing scans (auto via "
     "load_prop.pick_tile when unset).")
 
+# --- faults / graceful degradation -----------------------------------------
+_register(
+    "REPRO_STRICT_BACKEND", "bool", "0",
+    "Disable the kernel-backend fallback ladder: a dispatch failure "
+    "raises instead of retrying on the next rung (faults/harness.py).")
+_register(
+    "REPRO_CHAOS_BACKEND_FAIL", "str", None,
+    "Comma-separated kernel backend names that fail on purpose at "
+    "dispatch (chaos testing of the fallback ladder; never set in "
+    "production).")
+_register(
+    "REPRO_SIM_WATCHDOG_S", "int", 0,
+    "SIGALRM deadline in seconds around each FastSim saturation probe "
+    "(0 = no watchdog). A probe that exceeds it is retried with backoff "
+    "(faults/harness.call_with_retry).")
+_register(
+    "REPRO_SIM_RETRIES", "int", 1,
+    "Bounded retry count for saturation probes that time out or raise "
+    "(0 = fail fast).")
+
 # --- sim -------------------------------------------------------------------
 _register(
     "REPRO_CKERNEL_DIR", "path", None,

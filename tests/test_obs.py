@@ -507,11 +507,14 @@ def test_opt_resume_warns_on_version_mismatch(tmp_path, capsys,
 
     OptRunner(build(), checkpoint_path=ckpt).run(1)
     with open(ckpt) as f:
-        state = json.load(f)
+        envelope = json.load(f)
+    state = envelope["state"]            # format-2 checksummed envelope
     assert "versions" in state and "repro" in state["versions"]
     state["versions"]["jax"] = "0.0.1"
+    from repro.faults.harness import json_digest
+    envelope["sha256"] = json_digest(state)   # keep the envelope valid
     with open(ckpt, "w") as f:
-        json.dump(state, f)
+        json.dump(envelope, f)
     capsys.readouterr()
     runner = OptRunner(build(), checkpoint_path=ckpt)   # resumes + warns
     out = capsys.readouterr().out

@@ -400,11 +400,16 @@ def test_async_and_sync_resume_interchangeably(tmp_path):
 
 def test_checkpoint_is_json_and_atomic(tmp_path):
     import json
+    from repro.faults.harness import json_digest
+    from repro.opt.runner import load_checkpoint
     ckpt = str(tmp_path / "opt.json")
     _, opt = _make_optimizer(RandomSearch, seed=4, size=6, n=10)
     OptRunner(opt, checkpoint_path=ckpt).run(2)
     with open(ckpt) as f:
-        state = json.load(f)
+        envelope = json.load(f)
+    assert envelope["format"] == 2
+    assert envelope["sha256"] == json_digest(envelope["state"])
+    state = load_checkpoint(ckpt)
     assert state["algo"] == "random"
     assert state["generation"] == 2
     assert not os.path.exists(ckpt + ".tmp")
