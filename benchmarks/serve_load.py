@@ -1,0 +1,313 @@
+"""Load + chaos benchmark for the search service (ISSUE 10).
+
+Two phases:
+
+1. **load** — one in-process ``SearchService`` drives ~100 concurrent
+   small jobs (mixed NSGA-II / SA / random, ragged population sizes,
+   several tenants, one shared search space so every scheduler round
+   co-batches into shared mega-dispatches). Recorded: sustained evals/s,
+   p50/p99 job latency (submit -> done), mean mega-batch occupancy
+   (evals per scheduler round). A sample of finished jobs is then
+   re-run solo and must be **bit-identical** — the service's core
+   guarantee, re-proved under load.
+2. **chaos** — the service as a subprocess (``python -m repro.serve``)
+   on three jobs, one armed with ``chaos_fail_generation``. The process
+   is SIGKILL'd mid-run, restarted on the same state dir, and run to
+   completion: the chaos job must end FAILED while both survivors'
+   front files are byte-identical to their solo references.
+
+``--smoke`` shrinks the load phase for CI (the record goes to
+BENCH_serve_smoke.json so the committed full-run record stays intact);
+``--check`` exits non-zero if any bit-identity/isolation invariant
+fails, or if the measured sustained rate regresses by more than 3x
+against the committed record of the same mode.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SRC = os.path.join(REPO_ROOT, "src")
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_serve.json")
+
+SPACE = {"kind": "adjacency", "n_chiplets": 10, "max_degree": 4}
+ALGOS = ("nsga2", "sa", "random")
+POPS = (4, 5, 6, 8)
+
+
+def _percentile(values: list[float], q: float) -> float:
+    xs = sorted(values)
+    if not xs:
+        return 0.0
+    i = min(len(xs) - 1, max(0, round(q * (len(xs) - 1))))
+    return xs[i]
+
+
+# ---------------------------------------------------------------------------
+# phase 1: sustained load
+# ---------------------------------------------------------------------------
+
+def _load_specs(n_jobs: int, generations: int):
+    from repro.serve import JobSpec
+    return [JobSpec(job_id=f"load-{i:03d}", algo=ALGOS[i % len(ALGOS)],
+                    generations=generations, pop_size=POPS[i % len(POPS)],
+                    seed=i, tenant=f"team-{i % 4}", space=dict(SPACE))
+            for i in range(n_jobs)]
+
+
+def run_load(n_jobs: int, generations: int, sample: int) -> dict:
+    from repro.serve import SearchService, front_json_bytes, run_spec_solo
+
+    specs = _load_specs(n_jobs, generations)
+    latencies: dict[str, float] = {}
+
+    def watch(svc, spec, t_submit):
+        svc.job(spec.job_id).done_event.wait(timeout=600.0)
+        latencies[spec.job_id] = time.perf_counter() - t_submit
+
+    print(f"[load] {n_jobs} concurrent jobs x {generations} generations "
+          f"({len(ALGOS)} algorithms, pops {min(POPS)}..{max(POPS)}, "
+          f"4 tenants, one shared space)")
+    t0 = time.perf_counter()
+    with SearchService(max_jobs=16, max_queued=n_jobs + 1) as svc:
+        watchers = []
+        for spec in specs:
+            svc.submit(spec)
+            w = threading.Thread(target=watch, daemon=True,
+                                 args=(svc, spec, time.perf_counter()))
+            w.start()
+            watchers.append(w)
+        jobs = svc.wait_all(timeout_s=600.0)
+        for w in watchers:
+            w.join(timeout=10.0)
+        stats = svc.stats()
+    wall_s = time.perf_counter() - t0
+
+    done = [j for j in jobs if j.status == "done"]
+    evals_total = stats["evals_total"]
+    lat = list(latencies.values())
+    record = {
+        "n_jobs": n_jobs,
+        "generations": generations,
+        "jobs_done": len(done),
+        "wall_s": round(wall_s, 2),
+        "evals_total": evals_total,
+        "evals_per_s": round(evals_total / wall_s, 1),
+        "latency_p50_s": round(_percentile(lat, 0.50), 3),
+        "latency_p99_s": round(_percentile(lat, 0.99), 3),
+        "rounds": stats["rounds"],
+        "mean_batch_occupancy": round(evals_total / max(1, stats["rounds"]),
+                                      1),
+    }
+    print(f"[load] {evals_total} evals in {wall_s:.1f}s "
+          f"({record['evals_per_s']}/s), latency p50 "
+          f"{record['latency_p50_s']}s p99 {record['latency_p99_s']}s, "
+          f"{record['mean_batch_occupancy']} evals/round")
+
+    # the guarantee, re-proved under load: a sample spread across the
+    # algorithms must be byte-identical to the same specs run solo
+    step = max(1, len(done) // max(1, sample))
+    sampled = done[::step][:sample]
+    identical = True
+    for job in sampled:
+        _, solo_rows = run_spec_solo(job.spec)
+        same = (front_json_bytes(job.result_rows)
+                == front_json_bytes(solo_rows))
+        identical &= same
+        if not same:
+            print(f"FAIL: job {job.job_id} front differs from solo")
+    record["bit_identical_sampled"] = identical
+    record["sampled_jobs"] = [j.job_id for j in sampled]
+    print(f"[load] {len(sampled)} sampled fronts bit-identical to solo: "
+          f"{identical}")
+    return record
+
+
+# ---------------------------------------------------------------------------
+# phase 2: SIGKILL + resume + crashed-job isolation (subprocess drill)
+# ---------------------------------------------------------------------------
+
+def _chaos_specs():
+    from repro.serve import JobSpec
+    return [JobSpec(job_id="ref1", algo="nsga2", generations=12, pop_size=8,
+                    seed=3, space=dict(SPACE)),
+            JobSpec(job_id="ref2", algo="sa", generations=12, pop_size=6,
+                    seed=4, space=dict(SPACE)),
+            JobSpec(job_id="victim", algo="random", generations=12,
+                    pop_size=6, seed=5, space=dict(SPACE),
+                    chaos_fail_generation=4)]
+
+
+def _serve_cmd(state_dir: str, jobs_file: str) -> list[str]:
+    return [sys.executable, "-m", "repro.serve", "--state-dir", state_dir,
+            "--jobs", jobs_file, "--exit-when-idle"]
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def run_chaos(workdir: str) -> dict:
+    from repro.serve import front_json_bytes, run_spec_solo
+
+    specs = _chaos_specs()
+    state_dir = os.path.join(workdir, "serve_state")
+    jobs_file = os.path.join(workdir, "jobs.json")
+    with open(jobs_file, "w") as f:
+        json.dump([s.to_dict() for s in specs], f)
+
+    # start the server, wait for the first ref1 checkpoint write (fresh
+    # progress, past JAX startup), then SIGKILL it mid-run
+    ckpt = os.path.join(state_dir, "job-ref1.json")
+    print("[chaos] serve subprocess; SIGKILL after the first checkpoint")
+    proc = subprocess.Popen(_serve_cmd(state_dir, jobs_file), env=_env(),
+                            stdout=subprocess.DEVNULL,
+                            stderr=subprocess.DEVNULL)
+    kill_landed = False
+    try:
+        deadline = time.monotonic() + 180.0
+        while (time.monotonic() < deadline and proc.poll() is None
+                and not os.path.exists(ckpt)):
+            time.sleep(0.02)
+        time.sleep(0.2)
+        if proc.poll() is None:
+            proc.send_signal(signal.SIGKILL)   # no flush, no handlers
+            proc.wait()
+            kill_landed = True
+            print("[chaos] SIGKILL landed mid-run")
+        elif proc.returncode != 0:
+            raise RuntimeError(f"serve subprocess died on its own with "
+                               f"exit code {proc.returncode}")
+        else:
+            print("[chaos] run finished before the kill "
+                  "(still checking resume path)")
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+
+    # restart on the same state dir (duplicate jobs-file entries are
+    # shed; suspended/running jobs resume from their checkpoints)
+    print("[chaos] restarting on the same state dir to completion")
+    subprocess.run(_serve_cmd(state_dir, jobs_file), env=_env(), check=True,
+                   stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+                   timeout=300.0)
+
+    with open(os.path.join(state_dir, "jobs.json")) as f:
+        manifest = {e["spec"]["job_id"]: e
+                    for e in json.load(f)["jobs"]}
+    crashed_isolated = (manifest["victim"]["status"] == "failed"
+                        and manifest["victim"]["reason"] == "error")
+    print(f"[chaos] victim failed in isolation: {crashed_isolated}")
+
+    resume_identical = True
+    for spec in specs[:2]:
+        front = os.path.join(state_dir, f"job-{spec.job_id}.front.json")
+        served = open(front, "rb").read()
+        _, solo_rows = run_spec_solo(spec)
+        same = served == front_json_bytes(solo_rows)
+        resume_identical &= same
+        print(f"[chaos] {spec.job_id} resumed front bit-identical to "
+              f"solo: {same}")
+        if not same:
+            print(f"FAIL: {spec.job_id} front diverged after kill/resume")
+    return {"kill_landed": kill_landed,
+            "resume_bit_identical": resume_identical,
+            "crashed_isolated": crashed_isolated}
+
+
+# ---------------------------------------------------------------------------
+# record + gate
+# ---------------------------------------------------------------------------
+
+def check(record: dict, committed: dict | None) -> bool:
+    ok = True
+    if not record["load"]["bit_identical_sampled"]:
+        print("CHECK FAIL: a served front differed from its solo run")
+        ok = False
+    if not record["chaos"]["resume_bit_identical"]:
+        print("CHECK FAIL: kill/resume changed a surviving job's front")
+        ok = False
+    if not record["chaos"]["crashed_isolated"]:
+        print("CHECK FAIL: the chaos job did not fail in isolation")
+        ok = False
+    if record["load"]["jobs_done"] != record["load"]["n_jobs"]:
+        print("CHECK FAIL: not every load-phase job finished")
+        ok = False
+    if committed and committed.get("smoke") == record["smoke"]:
+        floor = committed["load"]["evals_per_s"] / 3.0
+        if record["load"]["evals_per_s"] < floor:
+            print(f"CHECK FAIL: sustained rate "
+                  f"{record['load']['evals_per_s']}/s is more than 3x "
+                  f"below the committed {committed['load']['evals_per_s']}/s")
+            ok = False
+    elif committed:
+        print("[check] committed record is a different mode "
+              "(smoke vs full) -- gating invariants only")
+    return ok
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    p.add_argument("--smoke", action="store_true",
+                   help="small CI configuration (record goes to "
+                        "BENCH_serve_smoke.json)")
+    p.add_argument("--check", action="store_true",
+                   help="exit non-zero on any invariant/regression failure")
+    p.add_argument("--jobs", type=int, default=None,
+                   help="load-phase job count (default 100, smoke 16)")
+    p.add_argument("--out", type=str, default=OUT_PATH,
+                   help="record path (default BENCH_serve.json)")
+    p.add_argument("--workdir", type=str, default=None,
+                   help="chaos-phase scratch dir (default: a temp dir)")
+    args = p.parse_args(argv)
+
+    n_jobs = args.jobs or (16 if args.smoke else 100)
+    load = run_load(n_jobs=n_jobs, generations=3 if args.smoke else 4,
+                    sample=3 if args.smoke else 5)
+    workdir = args.workdir or tempfile.mkdtemp(prefix="serve_load_")
+    chaos = run_chaos(workdir)
+
+    record = {"benchmark": "serve_load", "smoke": bool(args.smoke),
+              "load": load, "chaos": chaos}
+    record["ok"] = (load["bit_identical_sampled"]
+                    and load["jobs_done"] == load["n_jobs"]
+                    and chaos["resume_bit_identical"]
+                    and chaos["crashed_isolated"])
+
+    committed = None
+    if os.path.exists(OUT_PATH):
+        with open(OUT_PATH) as f:
+            committed = json.load(f)
+    out_path = args.out
+    if args.smoke and os.path.abspath(out_path) == OUT_PATH:
+        # never clobber the committed full-run record with a smoke run
+        out_path = os.path.join(REPO_ROOT, "BENCH_serve_smoke.json")
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"record -> {out_path}")
+
+    if args.check:
+        ok = check(record, committed)
+        print("serve_load check: " + ("OK" if ok else "FAILED"))
+        return 0 if ok else 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -43,6 +43,7 @@ HOT_AXIS_MODULES = (
     "src/repro/core/throughput.py",
     "src/repro/opt/space.py",
     "src/repro/opt/algorithms.py",
+    "src/repro/serve/",
 )
 
 # Modules feeding jitted programs: host RNG here breaks reproducibility

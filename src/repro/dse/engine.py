@@ -21,6 +21,7 @@ from __future__ import annotations
 import functools
 import json
 import os
+import threading
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 
@@ -92,6 +93,7 @@ class DseEngine:
         self.prefetch = prefetch
         self._done: dict[int, tuple[float, float]] = {}
         self._genome_pipelines: dict[int, tuple] = {}
+        self._pipeline_lock = threading.Lock()
         if checkpoint_path and os.path.exists(checkpoint_path):
             with open(checkpoint_path) as f:
                 for line in f:
@@ -106,14 +108,16 @@ class DseEngine:
     def _genome_pipeline(self, space):
         """Per-space pipeline, built once and cached for the engine's
         lifetime (the key holds a strong reference to the space, so ids
-        stay unique)."""
+        stay unique). Lock-guarded: concurrent server jobs over one shared
+        space must get ONE pipeline, not race to build two."""
         from .genomes import make_pipeline
-        cached = self._genome_pipelines.get(id(space))
-        if cached is not None and cached[0] is space:
-            return cached[1]
-        pipeline = make_pipeline(space, self.mesh)
-        self._genome_pipelines[id(space)] = (space, pipeline)
-        return pipeline
+        with self._pipeline_lock:
+            cached = self._genome_pipelines.get(id(space))
+            if cached is not None and cached[0] is space:
+                return cached[1]
+            pipeline = make_pipeline(space, self.mesh)
+            self._genome_pipelines[id(space)] = (space, pipeline)
+            return pipeline
 
     def supports_genomes(self, space) -> bool:
         """True when ``evaluate_genomes`` has a device path for this space."""

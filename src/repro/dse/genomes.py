@@ -52,6 +52,7 @@ exact against ``core.reports``.
 from __future__ import annotations
 
 import functools
+import threading
 from collections import defaultdict
 from dataclasses import dataclass
 
@@ -85,6 +86,28 @@ def _note_compile(key: tuple) -> None:
 
 def reset_compile_counts() -> None:
     COMPILE_COUNTS.clear()
+
+
+# Serializes the module-level jit-factory caches below. ``lru_cache``
+# guards its own dict, but NOT the factory body: two server jobs encoding
+# designs at once could both miss and trace/compile the same program twice
+# (wasted minutes at large n, double-counted COMPILE_COUNTS). The lock
+# makes a concurrent miss build exactly one compiled program (asserted in
+# tests/test_serve.py's concurrent-access stress test).
+_FACTORY_LOCK = threading.RLock()
+
+
+def _locked_factory(fn):
+    """Wrap an ``lru_cache``'d jit factory so concurrent first calls
+    serialize on ``_FACTORY_LOCK`` (every later hit pays one uncontended
+    lock acquire — nanoseconds against a jit dispatch)."""
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        with _FACTORY_LOCK:
+            return fn(*args, **kwargs)
+    wrapper.cache_clear = fn.cache_clear   # keep the lru_cache test hooks
+    wrapper.cache_info = fn.cache_info
+    return wrapper
 
 
 def bucket_population(size: int, multiple: int = 1) -> int:
@@ -386,6 +409,7 @@ def _adjacency_eval(bits, pair_u, pair_v, pair_id, chain_slot, chain_eslot,
     return lat_m, thr_m, len_sum
 
 
+@_locked_factory
 @functools.lru_cache(maxsize=None)
 def _adjacency_eval_fn(mesh, n: int, k_phys: int, euclid: bool,
                        max_hops: int, donate: bool):
@@ -511,6 +535,7 @@ def _adjacency_eval_faults(bits, link_alive, node_alive, pair_u, pair_v,
             len_sum)
 
 
+@_locked_factory
 @functools.lru_cache(maxsize=None)
 def _adjacency_faults_fn(mesh, n: int, k_phys: int, euclid: bool,
                          max_hops: int, donate: bool):
@@ -798,6 +823,7 @@ def _parametric_eval(next_hop, step_cost, node_weight, adj_bw, traffic,
         next_hop, step_cost, node_weight, adj_bw, traffic, n_steps, max_hops)
 
 
+@_locked_factory
 @functools.lru_cache(maxsize=None)
 def _parametric_eval_fn(mesh, n_steps: int, max_hops: int):
     """Jitted, population-sharded parametric eval per (mesh, statics) —
@@ -831,6 +857,11 @@ class ParametricPipeline:
         # bucket-derived bound costs nothing
         self.max_hops = max(self.n - 1, 1)
         self._eval = _parametric_eval_fn(mesh, self.n_steps, self.max_hops)
+        # Guards the lazily-grown structure tables (_sid/_next_hop/.../
+        # _stacked/_reports): two server jobs sharing this pipeline may
+        # encode new structures concurrently, and _ensure both reads and
+        # invalidates _stacked.
+        self._lock = threading.RLock()
         self._sid: dict[tuple, int] = {}
         self._next_hop: list[np.ndarray] = []
         self._step_cost: list[np.ndarray] = []
@@ -914,17 +945,19 @@ class ParametricPipeline:
         with _span("genomes.dispatch", space="parametric", pop=Pn,
                    n=self.n) as sp:
             keys = [self._key_of(g) for g in genomes]
-            n_known = len(self._sid)
-            with _span("genomes.build_structures"):
-                self._ensure(keys)
-            sp.set(new_structures=len(self._sid) - n_known)
-            sids = np.asarray([self._sid[k] for k in keys], np.int64)
-            if self._stacked is None:
-                self._stacked = (np.stack(self._next_hop),
-                                 np.stack(self._step_cost),
-                                 np.stack(self._node_weight),
-                                 np.stack(self._adj_bw),
-                                 np.stack(self._traffic))
+            with self._lock:
+                n_known = len(self._sid)
+                with _span("genomes.build_structures"):
+                    self._ensure(keys)
+                sp.set(new_structures=len(self._sid) - n_known)
+                sids = np.asarray([self._sid[k] for k in keys], np.int64)
+                if self._stacked is None:
+                    self._stacked = (np.stack(self._next_hop),
+                                     np.stack(self._step_cost),
+                                     np.stack(self._node_weight),
+                                     np.stack(self._adj_bw),
+                                     np.stack(self._traffic))
+                stacked = self._stacked
             ndev = int(np.prod(list(self.mesh.shape.values())))
             bp = bucket_population(Pn, ndev)
             gsids = sids
@@ -932,13 +965,14 @@ class ParametricPipeline:
                 gsids = np.concatenate([sids, np.repeat(sids[-1:], bp - Pn)])
             sharding = NamedSharding(self.mesh, P("data"))
             args = [jax.device_put(t[gsids], sharding)
-                    for t in self._stacked]
+                    for t in stacked]
             lat, thr = self._eval(*args)
 
         def finish() -> GenomeEvalResult:
             with _span("genomes.finish", space="parametric", pop=Pn):
-                cols = np.asarray([self._reports[s] for s in sids],
-                                  np.float64)
+                with self._lock:
+                    cols = np.asarray([self._reports[s] for s in sids],
+                                      np.float64)
                 reports = ReportArrays(total_chiplet_area=cols[:, 0],
                                        interposer_area=cols[:, 1],
                                        power=cols[:, 2], cost=cols[:, 3])

@@ -19,7 +19,9 @@ written. This module concentrates the counter-measures:
   quarantine list for post-mortems.
 * **Watchdog** — ``call_with_retry`` wraps flaky blocking calls (FastSim
   saturation probes, subprocess benchmarks) with bounded retries,
-  exponential backoff, and an optional SIGALRM timeout.
+  exponential backoff, and an optional thread-safe monotonic deadline
+  (the call runs on a sacrificial daemon thread; it works identically on
+  the main thread and in server worker threads).
 * **Graceful shutdown** — ``graceful_shutdown()`` converts the first
   SIGTERM/SIGINT into a flag the optimizer loop polls (flush a final
   checkpoint, then exit); a second signal raises ``KeyboardInterrupt``.
@@ -177,31 +179,45 @@ def drain_quarantine() -> list[dict]:
 # --- watchdog ---------------------------------------------------------------
 
 class WatchdogTimeout(RuntimeError):
-    """A watched call exceeded its SIGALRM deadline."""
+    """A watched call exceeded its monotonic deadline."""
 
 
-def _alarm_available() -> bool:
-    return (hasattr(signal, "SIGALRM")
-            and threading.current_thread() is threading.main_thread())
+def _run_with_deadline(fn, args, kwargs, seconds: float | None,
+                       describe: str):
+    """Run ``fn(*args, **kwargs)``, raising ``WatchdogTimeout`` after
+    ``seconds`` of wall time (``time.monotonic``).
 
+    The historical implementation used SIGALRM, which only works on the
+    main thread — inside server worker threads the knob silently never
+    fired. This version runs the call on a sacrificial daemon thread and
+    waits on an event with a monotonic deadline, so it behaves the same
+    on every thread. On timeout the daemon thread is abandoned (a wedged
+    probe cannot be forcibly killed from Python); it holds no locks and
+    its result is discarded if it ever finishes.
+    """
+    if not seconds:
+        return fn(*args, **kwargs)
+    box: dict = {}
+    done = threading.Event()
 
-@contextmanager
-def _deadline(seconds: float | None, describe: str):
-    if not seconds or not _alarm_available():
-        yield
-        return
+    def _target():
+        try:
+            box["value"] = fn(*args, **kwargs)
+        except BaseException as err:  # noqa: BLE001 - re-raised on caller
+            box["error"] = err
+        finally:
+            done.set()
 
-    def _on_alarm(signum, frame):
+    worker = threading.Thread(
+        target=_target, daemon=True,
+        name=f"repro-watchdog:{describe or 'call'}")
+    worker.start()
+    if not done.wait(seconds):
         raise WatchdogTimeout(
             f"{describe or 'watched call'} exceeded {seconds:g}s")
-
-    prev = signal.signal(signal.SIGALRM, _on_alarm)
-    signal.setitimer(signal.ITIMER_REAL, seconds)
-    try:
-        yield
-    finally:
-        signal.setitimer(signal.ITIMER_REAL, 0.0)
-        signal.signal(signal.SIGALRM, prev)
+    if "error" in box:
+        raise box["error"]
+    return box["value"]
 
 
 def call_with_retry(fn, *args, retries: int = 2, backoff: float = 0.5,
@@ -209,18 +225,18 @@ def call_with_retry(fn, *args, retries: int = 2, backoff: float = 0.5,
                     exceptions: tuple = (Exception,), **kwargs):
     """Bounded-retry watchdog around a flaky blocking call.
 
-    Runs ``fn(*args, **kwargs)`` under an optional SIGALRM deadline
-    (main thread only; no-op elsewhere) and retries up to ``retries``
-    times on ``exceptions``, sleeping ``backoff * 2**attempt`` between
-    attempts. Counts ``faults.watchdog_retry`` per retry; the final
-    failure is re-raised.
+    Runs ``fn(*args, **kwargs)`` under an optional thread-safe monotonic
+    deadline (works on any thread; see ``_run_with_deadline``) and
+    retries up to ``retries`` times on ``exceptions``, sleeping
+    ``backoff * 2**attempt`` between attempts. Counts
+    ``faults.watchdog_retry`` per retry; the final failure is re-raised.
     """
     describe = describe or getattr(fn, "__name__", "call")
     last_err = None
     for attempt in range(retries + 1):
         try:
-            with _deadline(timeout_s, describe):
-                return fn(*args, **kwargs)
+            return _run_with_deadline(fn, args, kwargs, timeout_s,
+                                      describe)
         except exceptions as err:
             last_err = err
             if attempt >= retries:

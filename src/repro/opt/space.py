@@ -15,9 +15,15 @@ Genomes are int64 arrays [P, G]; ``repair`` is a pure function of the genome
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 
 import numpy as np
+
+# Guards the lazy jit-scan build on AdjacencySpace instances (dataclass
+# instances can't carry their own lock as a field without breaking eq/
+# repr; builds are rare, so one module lock costs nothing).
+_CAP_FN_LOCK = threading.Lock()
 
 from ..core.design import Packaging, Technology
 from ..dse.sweep import DesignPoint
@@ -275,6 +281,15 @@ class AdjacencySpace(SearchSpace):
         integer updates. The drop predicate makes sentinel/settled columns
         no-ops, so the packed scan is bit-identical to the full sequential
         reference."""
+        fn = getattr(self, "_cap_fn", None)
+        if fn is None:
+            with _CAP_FN_LOCK:
+                return self._degree_cap_fn_build()
+        return fn
+
+    def _degree_cap_fn_build(self):
+        # Under _CAP_FN_LOCK: concurrent server jobs repairing on one
+        # shared space build the scan once (re-check after acquisition).
         fn = getattr(self, "_cap_fn", None)
         if fn is None:
             import jax

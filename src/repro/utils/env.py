@@ -153,6 +153,32 @@ _register(
     "REPRO_SWEEP_PREP_POINTS", "int", 1000,
     "Design-point count of the sweep-preparation benchmark.")
 
+# --- search service (repro.serve) ------------------------------------------
+_register(
+    "REPRO_SERVE_MAX_JOBS", "int", 8,
+    "Search service: jobs running (co-batched) concurrently; further "
+    "admitted jobs queue.")
+_register(
+    "REPRO_SERVE_MAX_QUEUED", "int", 64,
+    "Search service: queued-job bound; submissions beyond it are shed "
+    "with reason 'queue_full'.")
+_register(
+    "REPRO_SERVE_RETRIES", "int", 1,
+    "Search service: bounded per-job solo-dispatch retries after a "
+    "mega-batch or solo evaluation failure, before the job is FAILED.")
+_register(
+    "REPRO_SERVE_DEADLINE_S", "int", 0,
+    "Search service: default per-job wall deadline in seconds (0 = "
+    "none); JobSpec.deadline_s overrides per job.")
+_register(
+    "REPRO_SERVE_CKPT_EVERY", "int", 1,
+    "Search service: checkpoint every running job each N generations "
+    "(0 disables periodic snapshots; drain still checkpoints).")
+_register(
+    "REPRO_SERVE_DRAIN_TIMEOUT_S", "int", 30,
+    "Search service: seconds drain() waits for the scheduler to finish "
+    "the in-flight round and checkpoint before giving up.")
+
 
 def _knob(name: str) -> Knob:
     try:

@@ -15,6 +15,7 @@ import os
 import signal
 import subprocess
 import sys
+import threading
 import time
 
 import numpy as np
@@ -276,6 +277,28 @@ def test_call_with_retry_watchdog_timeout():
     t0 = time.perf_counter()
     with pytest.raises(WatchdogTimeout):
         call_with_retry(hang, retries=0, timeout_s=0.2, describe="hang")
+    assert time.perf_counter() - t0 < 5.0
+
+
+def test_watchdog_fires_from_worker_thread():
+    # Regression: the watchdog used SIGALRM, which only works on the main
+    # thread — the serve scheduler and any threaded caller got no deadline
+    # at all. The monotonic-deadline watchdog must fire anywhere.
+    box = {}
+
+    def run():
+        try:
+            call_with_retry(time.sleep, 5.0, retries=0, timeout_s=0.2,
+                            describe="sleepy")
+        except BaseException as err:
+            box["error"] = err
+
+    t = threading.Thread(target=run)
+    t0 = time.perf_counter()
+    t.start()
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    assert isinstance(box.get("error"), WatchdogTimeout)
     assert time.perf_counter() - t0 < 5.0
 
 

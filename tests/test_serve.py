@@ -1,0 +1,316 @@
+"""Search-service scheduler edge cases (ISSUE 10).
+
+The load-bearing assertion, everywhere: a job driven by the co-batching
+scheduler — its evaluations concatenated with other jobs' into shared
+mega-batches — produces the **bit-identical** front the same spec
+produces run solo (``run_spec_solo``), across all three algorithms,
+ragged batch sizes, mid-run admission, drain/resume (in-process and
+SIGTERM + restart), and with a crashed batch-mate.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro.serve import (AdmissionError, JobSpec, SearchService,  # noqa: E402
+                         front_json_bytes, run_spec_solo)
+
+SPACE = {"kind": "adjacency", "n_chiplets": 10, "max_degree": 4}
+
+
+def _spec(job_id, algo="nsga2", generations=4, pop_size=8, seed=0, **kw):
+    return JobSpec(job_id=job_id, algo=algo, generations=generations,
+                   pop_size=pop_size, seed=seed,
+                   space=dict(kw.pop("space", SPACE)), **kw)
+
+
+def _assert_solo_identical(job, spec):
+    assert job.status == "done", (job.job_id, job.status, job.reason)
+    solo_opt, solo_rows = run_spec_solo(spec)
+    assert front_json_bytes(job.result_rows) == front_json_bytes(solo_rows)
+    assert job.n_evals == solo_opt.evaluator.n_evals
+    # the full serialized optimizer state — archive AND RNG stream —
+    # must match, not just the front
+    served = job.optimizer.state()
+    solo = solo_opt.state()
+    assert served["rng"] == solo["rng"]
+    assert served == solo
+
+
+# ---------------------------------------------------------------------------
+# co-batching bit-identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["nsga2", "sa", "random"])
+def test_cobatched_job_bit_identical_to_solo(algo):
+    """Three same-space jobs of every algorithm running concurrently —
+    each one's archive, RNG stream, and eval count must equal its solo
+    run exactly."""
+    specs = [_spec(f"{algo}-{seed}", algo=algo, generations=5, seed=seed,
+                   pop_size=8) for seed in (1, 2)]
+    with SearchService() as svc:
+        for spec in specs:
+            svc.submit(spec)
+        jobs = [svc.wait(spec.job_id, 300) for spec in specs]
+    for job, spec in zip(jobs, specs):
+        _assert_solo_identical(job, spec)
+
+
+def test_ragged_job_sizes_share_one_bucket():
+    """Jobs with populations 3/5/8 co-batch into one 16-row bucket —
+    the same bucket any of them would pad to solo — and every slice is
+    still exact."""
+    specs = [_spec(f"ragged-{size}", generations=4, pop_size=size,
+                   seed=size) for size in (3, 5, 8)]
+    with SearchService() as svc:
+        for spec in specs:
+            svc.submit(spec)
+        jobs = [svc.wait(spec.job_id, 300) for spec in specs]
+        occupancy = svc.stats()
+    assert occupancy["jobs"] == {"done": 3}
+    for job, spec in zip(jobs, specs):
+        _assert_solo_identical(job, spec)
+
+
+def test_job_admitted_mid_generation():
+    """A job submitted while another is mid-run joins the next round and
+    neither trajectory is perturbed."""
+    early = _spec("early", generations=8, seed=4)
+    late = _spec("late", algo="sa", generations=4, seed=5)
+    with SearchService() as svc:
+        svc.submit(early)
+        deadline = time.monotonic() + 300
+        while svc.job("early").generation < 2:
+            assert time.monotonic() < deadline
+            time.sleep(0.005)
+        svc.submit(late)
+        j_early = svc.wait("early", 300)
+        j_late = svc.wait("late", 300)
+    _assert_solo_identical(j_early, early)
+    _assert_solo_identical(j_late, late)
+
+
+# ---------------------------------------------------------------------------
+# budgets, deadlines, backpressure
+# ---------------------------------------------------------------------------
+
+def test_job_eval_budget_stops_early_and_stays_identical():
+    """max_evals cuts the run mid-way (3 of 10 generations) through the
+    same pre-dispatch check the solo reference applies, so even the
+    truncated front is bit-identical."""
+    spec = _spec("budgeted", generations=10, pop_size=8, seed=6,
+                 max_evals=24)
+    with SearchService() as svc:
+        svc.submit(spec)
+        job = svc.wait("budgeted", 300)
+    assert job.status == "done" and job.reason == "eval_budget"
+    assert job.n_evals == 24 and job.generation == 3
+    _assert_solo_identical(job, spec)
+
+
+def test_tenant_budget_enforced_mid_run_and_at_admission():
+    """Two jobs drain one tenant's eval budget mid-run: the job that
+    would overrun fails with reason 'tenant_budget', its sibling (and
+    the other tenant's job) finish bit-identically, and a late
+    submission for the spent tenant is shed at admission."""
+    a = _spec("tenant-a", generations=3, pop_size=8, seed=7, tenant="t")
+    b = _spec("tenant-b", generations=10, pop_size=8, seed=8, tenant="t")
+    other = _spec("other", generations=3, pop_size=8, seed=9, tenant="u")
+    with SearchService(tenant_budgets={"t": 40}) as svc:
+        for spec in (a, b, other):
+            svc.submit(spec)
+        ja, jb, jo = (svc.wait(s.job_id, 300) for s in (a, b, other))
+        with pytest.raises(AdmissionError) as shed:
+            svc.submit(_spec("tenant-c", tenant="t"))
+        assert shed.value.reason == "tenant_budget"
+        spent = svc.stats()["tenant_spent"]
+    assert jb.status == "failed" and jb.reason == "tenant_budget"
+    assert spent["t"] <= 40
+    _assert_solo_identical(ja, a)
+    _assert_solo_identical(jo, other)
+
+
+def test_deadline_expiry_fails_only_that_job():
+    quick = _spec("quick", generations=3, seed=10)
+    doomed = _spec("doomed", generations=100000, pop_size=8, seed=11,
+                   deadline_s=0.05)
+    with SearchService() as svc:
+        svc.submit(doomed)
+        svc.submit(quick)
+        j_doomed = svc.wait("doomed", 300)
+        j_quick = svc.wait("quick", 300)
+    assert j_doomed.status == "failed" and j_doomed.reason == "deadline"
+    _assert_solo_identical(j_quick, quick)
+
+
+def test_admission_control_sheds_with_reason():
+    svc = SearchService(max_queued=2)
+    svc.submit(_spec("q1"), auto_start=False)
+    svc.submit(_spec("q2"), auto_start=False)
+    with pytest.raises(AdmissionError) as full:
+        svc.submit(_spec("q3"), auto_start=False)
+    assert full.value.reason == "queue_full"
+    with pytest.raises(AdmissionError) as dup:
+        svc.submit(_spec("q1"), auto_start=False)
+    assert dup.value.reason == "duplicate"
+    with pytest.raises(AdmissionError) as bad:
+        svc.submit(JobSpec(job_id="qx", algo="gradient-descent"),
+                   auto_start=False)
+    assert bad.value.reason == "bad_spec"
+    # the parked queue still drains to completion once started
+    svc.start()
+    assert svc.wait("q1", 300).status == "done"
+    assert svc.wait("q2", 300).status == "done"
+    svc.drain()
+    with pytest.raises(AdmissionError) as stopped:
+        svc.submit(_spec("q4"))
+    assert stopped.value.reason == "stopped"
+
+
+# ---------------------------------------------------------------------------
+# fault isolation
+# ---------------------------------------------------------------------------
+
+def test_crashed_job_never_alters_siblings():
+    """A job whose dispatch is force-crashed (chaos hook) fails alone;
+    every batch-mate's front is bit-identical to solo."""
+    good1 = _spec("good1", generations=5, seed=12)
+    bad = _spec("bad", generations=5, seed=13, chaos_fail_generation=2)
+    good2 = _spec("good2", algo="sa", generations=5, seed=14)
+    with SearchService() as svc:
+        for spec in (good1, bad, good2):
+            svc.submit(spec)
+        j1, jb, j2 = (svc.wait(s.job_id, 300) for s in (good1, bad, good2))
+    assert jb.status == "failed" and jb.reason == "error"
+    assert jb.generation == 2          # crashed exactly where armed
+    _assert_solo_identical(j1, good1)
+    _assert_solo_identical(j2, good2)
+
+
+# ---------------------------------------------------------------------------
+# drain / resume
+# ---------------------------------------------------------------------------
+
+def test_drain_and_resume_bit_identical(tmp_path):
+    """drain() mid-run suspends the job with a checkpoint; a new service
+    on the same state dir finishes it bit-identically to solo."""
+    state = str(tmp_path / "state")
+    spec = _spec("resume", generations=8, pop_size=8, seed=15)
+    svc1 = SearchService(state_dir=state)
+    svc1.submit(spec)
+    deadline = time.monotonic() + 300
+    while svc1.job("resume").generation < 3:
+        assert time.monotonic() < deadline
+        time.sleep(0.005)
+    svc1.drain()
+    assert svc1.job("resume").status == "suspended"
+    assert os.path.exists(os.path.join(state, "job-resume.json"))
+
+    svc2 = SearchService(state_dir=state)
+    svc2.start()
+    job = svc2.wait("resume", 300)
+    svc2.drain()
+    assert job.generation == 8
+    _assert_solo_identical(job, spec)
+
+
+def test_sigterm_drain_restart_resumes_bit_identically(tmp_path):
+    """The CLI under SIGTERM: graceful drain checkpoints the in-flight
+    job, a restarted server completes it, and the persisted front equals
+    the solo run byte-for-byte."""
+    state = str(tmp_path / "state")
+    spec = _spec("cli", generations=6, pop_size=8, seed=16)
+    jobs_file = str(tmp_path / "jobs.json")
+    with open(jobs_file, "w") as f:
+        json.dump([spec.to_dict()], f)
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    cmd = [sys.executable, "-m", "repro.serve", "--state-dir", state,
+           "--jobs", jobs_file, "--exit-when-idle"]
+    proc = subprocess.Popen(cmd, env=env, stdout=subprocess.DEVNULL,
+                            stderr=subprocess.DEVNULL)
+    ckpt = os.path.join(state, "job-cli.json")
+    try:
+        deadline = time.monotonic() + 300
+        while not os.path.exists(ckpt) and proc.poll() is None:
+            assert time.monotonic() < deadline
+            time.sleep(0.02)
+        if proc.poll() is None:
+            proc.send_signal(signal.SIGTERM)
+            assert proc.wait(timeout=120) == 0
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+    # restart on the same state dir: the job must finish
+    subprocess.run(cmd, env=env, check=True, timeout=300,
+                   stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    with open(os.path.join(state, "job-cli.front.json"), "rb") as f:
+        served = f.read()
+    _, solo_rows = run_spec_solo(spec)
+    assert served == front_json_bytes(solo_rows)
+
+
+# ---------------------------------------------------------------------------
+# satellite: cache thread-safety under concurrent jobs
+# ---------------------------------------------------------------------------
+
+def test_concurrent_evaluations_share_one_compiled_program():
+    """Stress the shared mutable caches the service exposes to threads:
+    N threads evaluating the same spaces concurrently must agree
+    bit-for-bit, populate the jit-factory caches exactly once per shape,
+    and never corrupt the structure cache."""
+    from repro.dse.engine import DseEngine
+    from repro.dse.genomes import COMPILE_COUNTS, reset_compile_counts
+    from repro.opt.runner import make_space
+
+    adj = make_space("adjacency", n_chiplets=12, max_degree=4)
+    par = make_space("parametric", topologies=("mesh", "torus"),
+                     chiplet_counts=(9, 16))
+    engine = DseEngine()
+    rng = np.random.default_rng(17)
+    adj_genomes = adj.sample(rng, 8)
+    par_genomes = par.sample(rng, 8)
+    reset_compile_counts()
+
+    results, errors = {}, []
+
+    def worker(idx):
+        try:
+            out = []
+            for _round in ("one", "two", "three"):
+                ra = engine.evaluate_genomes(adj, adj_genomes)
+                rp = engine.evaluate_genomes(par, par_genomes)
+                out.append((ra.latency.copy(), rp.latency.copy()))
+            results[idx] = out
+        except Exception as err:  # noqa: BLE001 - reported by the assert
+            errors.append(err)
+
+    threads = [threading.Thread(target=worker, args=(idx,))
+               for idx in ("t0", "t1", "t2", "t3")]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    assert not errors, errors
+    assert len(results) == 4
+    ref = results["t0"]
+    for idx in ("t1", "t2", "t3"):
+        for (ra, rp), (ba, bp) in zip(ref, results[idx]):
+            assert np.array_equal(ra, ba)
+            assert np.array_equal(rp, bp)
+    # the factory lock means each shape key traced exactly once
+    for key, count in COMPILE_COUNTS.items():
+        assert count == 1, (key, count)
